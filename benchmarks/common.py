@@ -1,0 +1,45 @@
+"""Shared helpers for the per-table benchmarks."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core.gbdt import GBDTParams
+from repro.core.predictor import Predictor
+from repro.data.pipeline import DataSplits, load_model_splits
+
+ROUNDS = 150  # boosting rounds for benchmark-trained models (speed/fidelity)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+@functools.lru_cache(maxsize=None)
+def model_and_splits(model: str, rounds: int = ROUNDS,
+                     drop_features: tuple = ()) -> tuple:
+    sp = load_model_splits(model)
+    Xtr = sp.train.X.copy()
+    Xte = sp.test.X.copy()
+    for f in drop_features:          # drop-one ablation: zero the column(s)
+        Xtr[:, f] = 0.0
+        Xte[:, f] = 0.0
+    t0 = time.time()
+    pred = Predictor.train_on_features(Xtr, sp.train.y,
+                                       GBDTParams(num_rounds=rounds))
+    train_s = time.time() - t0
+    return pred, sp, Xte, train_s
+
+
+def timed(fn, *args, repeat: int = 3):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

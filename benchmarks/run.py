@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table8     # one table
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig3_rho_sweep, predictor_latency,
+                            table1_service_stats, table2_dataset_stats,
+                            table4_ablation, table5_ranking, table6_cross,
+                            table7_baselines, table8_burst, table9_tau)
+
+    suites = {
+        "table1": table1_service_stats.run,
+        "table2": table2_dataset_stats.run,
+        "table4": table4_ablation.run,
+        "table5": table5_ranking.run,
+        "table6": table6_cross.run,
+        "table7": table7_baselines.run,
+        "table8": table8_burst.run,
+        "table9": table9_tau.run,
+        "fig3": fig3_rho_sweep.run,
+        "predictor": predictor_latency.run,
+    }
+    wanted = sys.argv[1:] or list(suites)
+    t0 = time.time()
+    for name in wanted:
+        print(f"# --- {name} ---")
+        suites[name]()
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

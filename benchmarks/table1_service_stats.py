@@ -1,0 +1,45 @@
+"""Table 1: service-time statistics / C_s^2 under workload compositions.
+
+Paper (Apple M1, Ollama, Gemma3:4b, n=204): short-only C_s^2=0.26,
+long-only 0.15, mixed 50/50 1.03, mixed 80/20 2.59.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.simulation import cs2
+from repro.serving.service_time import PAPER_M1_LONG, PAPER_M1_SHORT
+
+PAPER = {"short_only": 0.26, "long_only": 0.15,
+         "mixed_50_50": 1.03, "mixed_80_20": 2.59}
+
+
+def run(n: int = 204, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    short = PAPER_M1_SHORT.sample(rng, n)
+    long = PAPER_M1_LONG.sample(rng, n)
+    mixes = {
+        "short_only": short,
+        "long_only": long,
+        "mixed_50_50": np.where(rng.random(n) < 0.5, short, long),
+        "mixed_80_20": np.where(rng.random(n) < 0.8, short, long),
+    }
+    out = {}
+    for name, s in mixes.items():
+        t0 = time.perf_counter()
+        c = cs2(s)
+        dt = (time.perf_counter() - t0) * 1e6
+        out[name] = dict(es=float(s.mean()), std=float(s.std()), cs2=c,
+                         paper_cs2=PAPER[name])
+        emit(f"table1_{name}", dt,
+             f"E[S]={s.mean():.1f}s std={s.std():.1f}s Cs2={c:.2f} "
+             f"(paper {PAPER[name]})")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Table 6: cross-distribution ranking accuracy matrix.
+
+Off-diagonal = true cross-distribution transfer (paper band 52-66%);
+diagonal includes training data and is optimistic.  CNN/DailyMail excluded
+(1 Long example renders the metric unreliable) — same exclusion as the paper.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, model_and_splits
+from repro.core.ranking import ranking_accuracy
+from repro.data.pipeline import heldout_eval_set
+
+EVAL_SETS = ("sharegpt", "lmsys", "oasst1", "dolly")
+TRAIN_OF = {"A": "sharegpt", "B": "lmsys", "C": "oasst1"}
+PAPER = {  # train -> test
+    ("A", "sharegpt"): 86.4, ("A", "lmsys"): 53.6, ("A", "oasst1"): 56.3,
+    ("A", "dolly"): 52.7,
+    ("B", "sharegpt"): 62.7, ("B", "lmsys"): 98.3, ("B", "oasst1"): 65.3,
+    ("B", "dolly"): 58.4,
+    ("C", "sharegpt"): 58.0, ("C", "lmsys"): 65.3, ("C", "oasst1"): 90.4,
+    ("C", "dolly"): 57.7,
+}
+
+
+def run() -> dict:
+    out = {}
+    evals = {ds: heldout_eval_set(ds) for ds in EVAL_SETS}
+    for m in "ABC":
+        pred, _, _, _ = model_and_splits(m)
+        for ds in EVAL_SETS:
+            ev = evals[ds]
+            t0 = time.perf_counter()
+            p = pred.model.predict_proba(ev.X)
+            dt = (time.perf_counter() - t0) / len(ev.X) * 1e6
+            ra = 100 * ranking_accuracy(ev.lengths, p[:, 2])
+            diag = "(diag)" if TRAIN_OF[m] == ds else ""
+            out[(m, ds)] = ra
+            emit(f"table6_{m}_to_{ds}", dt,
+                 f"ranking={ra:.1f}% (paper {PAPER[(m, ds)]}){diag}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

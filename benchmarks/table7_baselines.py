@@ -1,0 +1,50 @@
+"""Table 7: baseline comparison — FCFS(random) / prompt-length rule /
+keyword heuristic / Clairvoyant GBDT, pairwise ranking accuracy.
+
+Paper: rule 52-56%, keyword 4.6-36.3% (below random!), GBDT 67-95%.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, model_and_splits
+from repro.core.ranking import (fit_prompt_length_threshold,
+                                keyword_heuristic_scores,
+                                prompt_length_rule_scores, ranking_accuracy)
+
+PAPER = {"sharegpt": (52.4, 36.3, 74.9), "lmsys": (52.3, 4.6, 95.1),
+         "oasst1": (55.8, 18.5, 67.1)}
+DATASET_OF = {"A": "sharegpt", "B": "lmsys", "C": "oasst1"}
+
+
+def run() -> dict:
+    out = {}
+    for m in "ABC":
+        ds = DATASET_OF[m]
+        pred, sp, Xte, _ = model_and_splits(m)
+        lengths = sp.test.lengths
+
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(0)
+        fcfs = 100 * ranking_accuracy(lengths, rng.random(len(lengths)))
+        thr = fit_prompt_length_threshold(sp.train.X[:, 0], sp.train.lengths)
+        rule = 100 * ranking_accuracy(
+            lengths, prompt_length_rule_scores(Xte[:, 0], thr), ties="half")
+        kw = 100 * ranking_accuracy(
+            lengths, keyword_heuristic_scores(Xte), ties="half")
+        gbdt = 100 * ranking_accuracy(
+            lengths, pred.model.predict_p_long(Xte))
+        dt = (time.perf_counter() - t0) * 1e6
+        out[ds] = dict(fcfs=fcfs, rule=rule, keyword=kw, gbdt=gbdt)
+        p = PAPER[ds]
+        emit(f"table7_{ds}", dt,
+             f"fcfs={fcfs:.1f}% rule={rule:.1f}%(paper {p[0]}) "
+             f"keyword={kw:.1f}%(paper {p[1]}) gbdt={gbdt:.1f}%(paper {p[2]})")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,104 @@
+"""Table 8: end-to-end burst latency — 100 concurrent requests (50S/50L),
+FCFS vs Clairvoyant SJF, 5 runs (n=250 per cell).
+
+Paper (RTX 4090): short P50 -70% (gemma3:4b) / -76% (llama3.1:8b); long P50
++21-27%.  We report (a) the paper-calibrated 4090 service model — the
+faithful replication — and (b) this framework's own TPU-v5e engine model
+(gemma3-4b-edge @ 1 chip), with the REAL trained predictor scoring the real
+synthetic prompts (dolly-profile, as in the paper's benchmark).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, model_and_splits
+from repro.configs import get_config
+from repro.core.scheduler import Request
+from repro.core.simulation import ServiceDist, SimResult, simulate
+from repro.data.corpus import sample_dataset
+from repro.serving.service_time import (PAPER_4090_LONG, PAPER_4090_SHORT,
+                                        ServiceTimeModel)
+
+
+def _burst_requests(rng, predictor, service_fn, n_short=50, n_long=50,
+                    seed=0, dataset="dolly"):
+    """Real prompts, real predictor scores, oracle service times."""
+    # dolly's Long rate is ~0.6% (Table 2) — draw enough to find 50 Longs
+    ds = sample_dataset(dataset, n=20000, seed=seed)
+    short_idx = np.where(ds.lengths < 200)[0][:n_short]
+    long_idx = np.where(ds.lengths >= 800)[0][:n_long]
+    idx = np.concatenate([short_idx, long_idx])
+    assert len(idx) == n_short + n_long, "not enough long examples drawn"
+    prompts = [ds.prompts[i] for i in idx]
+    scores = predictor.p_long_batch(prompts)
+    reqs = []
+    for j, i in enumerate(idx):
+        reqs.append(Request(
+            req_id=j, prompt=prompts[j],
+            arrival=float(rng.uniform(0, 0.05)),
+            p_long=float(scores[j]),
+            true_service=service_fn(int(ds.lengths[i]), rng),
+            klass="short" if ds.lengths[i] < 200 else "long"))
+    return reqs
+
+
+def run(runs: int = 5) -> dict:
+    pred, _, _, _ = model_and_splits("A")  # ShareGPT model, as deployed
+    cfg = get_config("gemma3-4b-edge")
+    tpu_model = ServiceTimeModel.from_arch(cfg, chips=1)
+
+    def svc_4090(tokens, rng):
+        dist = PAPER_4090_SHORT if tokens < 200 else PAPER_4090_LONG
+        return float(dist.sample(rng))
+
+    def svc_tpu(tokens, rng):
+        return tpu_model.service(64, tokens) * float(rng.normal(1.0, 0.1))
+
+    out = {}
+    # dolly = the paper's cross-distribution deployment; sharegpt = the same
+    # predictor serving its own training distribution (in-dist bound)
+    cells = (("4090calib", svc_4090, "dolly"),
+             ("4090calib_indist", svc_4090, "sharegpt"),
+             ("tpu_v5e", svc_tpu, "dolly"))
+    for backend, svc, dataset in cells:
+        res = {}
+        for policy in ("fcfs", "sjf", "sjf_oracle"):
+            sojourns = {"short": [], "long": []}
+            t0 = time.perf_counter()
+            for r in range(runs):
+                rng = np.random.default_rng(r)
+                reqs = _burst_requests(rng, pred, svc, seed=r,
+                                       dataset=dataset)
+                # tau = 3 x mu_short: burst regime — negligible effect (§5.5)
+                sim = simulate(reqs, policy=policy, tau=None)
+                for req in sim.requests:
+                    sojourns[req.klass].append(req.sojourn)
+            dt = (time.perf_counter() - t0) * 1e6 / runs
+            res[policy] = {k: dict(p50=float(np.percentile(v, 50)),
+                                   p95=float(np.percentile(v, 95)),
+                                   p99=float(np.percentile(v, 99)),
+                                   n=len(v))
+                           for k, v in sojourns.items()}
+            for k in ("short", "long"):
+                emit(f"table8_{backend}_{policy}_{k}", dt,
+                     f"P50={res[policy][k]['p50']:.1f}s "
+                     f"P95={res[policy][k]['p95']:.1f}s "
+                     f"P99={res[policy][k]['p99']:.1f}s n={res[policy][k]['n']}")
+        red = 100 * (1 - res["sjf"]["short"]["p50"] / res["fcfs"]["short"]["p50"])
+        infl = 100 * (res["sjf"]["long"]["p50"] / res["fcfs"]["long"]["p50"] - 1)
+        red_o = 100 * (1 - res["sjf_oracle"]["short"]["p50"]
+                       / res["fcfs"]["short"]["p50"])
+        emit(f"table8_{backend}_summary", 0.0,
+             f"short_P50_reduction={red:.0f}% oracle_bound={red_o:.0f}% "
+             f"(paper 70-76%) long_P50_inflation={infl:+.0f}% "
+             f"(paper +21-27%)")
+        out[backend] = dict(res=res, reduction=red, inflation=infl,
+                            oracle=red_o)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Table 9: starvation-timeout sensitivity (Poisson arrivals, rho=0.74,
+n=2000 x 5 seeds, service N(3.5,0.8) short / N(8.9,2.0) long, 50/50).
+
+Paper: FCFS short P50 9.70s; tau=3x 8.03s (-17%); pure SJF 5.97s (-38%) at
+long-P95 79.3s (+53%).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.calibration import measure_mu_short
+from repro.core.simulation import (ServiceDist, poisson_workload, simulate)
+from repro.serving.service_time import PAPER_4090_LONG, PAPER_4090_SHORT
+
+PAPER = {"fcfs": (9.70, 43.71, 15.60, 51.79),
+         "tau1x": (8.38, 18.15, 15.18, 69.35),
+         "tau3x": (8.03, 23.46, 16.83, 60.45),
+         "tau5x": (7.02, 28.56, 16.07, 55.17),
+         "tauInf": (5.97, 14.72, 14.14, 79.32)}
+
+
+def run(n: int = 2000, seeds: int = 5, rho: float = 0.74) -> dict:
+    short, long = PAPER_4090_SHORT, PAPER_4090_LONG
+    es = 0.5 * (short.mean + long.mean)
+    lam = rho / es
+
+    # Fig 3 caption: the 4090 steady-state calibration uses mu_short = 3.5 s
+    # (tau = 3x = 10.5 s).  The burst-measured variant (measure_mu_short) is
+    # the M1 deployment path (§3.4) and is exercised in launch/serve.py.
+    mu_short = short.mean
+    conditions = [("fcfs", "fcfs", None),
+                  ("tau1x", "sjf", 1.0 * mu_short),
+                  ("tau3x", "sjf", 3.0 * mu_short),
+                  ("tau5x", "sjf", 5.0 * mu_short),
+                  ("tauInf", "sjf", None)]
+    out = {}
+    for name, policy, tau in conditions:
+        t0 = time.perf_counter()
+        vals = {("short", 50): [], ("short", 95): [],
+                ("long", 50): [], ("long", 95): []}
+        for s in range(seeds):
+            rng = np.random.default_rng(s)
+            reqs = poisson_workload(rng, n, lam, short, long, mix_long=0.5)
+            res = simulate(reqs, policy=policy, tau=tau)
+            for (k, q) in vals:
+                vals[(k, q)].append(res.percentile(q, klass=k))
+        dt = (time.perf_counter() - t0) * 1e6 / seeds
+        means = {k: float(np.mean(v)) for k, v in vals.items()}
+        p = PAPER[name]
+        out[name] = means
+        emit(f"table9_{name}", dt,
+             f"shortP50={means[('short',50)]:.2f}s(paper {p[0]}) "
+             f"shortP95={means[('short',95)]:.2f}s(paper {p[1]}) "
+             f"longP50={means[('long',50)]:.2f}s(paper {p[2]}) "
+             f"longP95={means[('long',95)]:.2f}s(paper {p[3]}) "
+             f"mu_short={mu_short:.1f}s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing harness: hypothesis -> change -> re-lower -> measure.
+
+Each experiment compiles ONE cell's production graph with a set of gated
+changes and reports the roofline terms measured identically to the baseline
+(same scan graph, same collective parse), so before/after deltas are
+like-for-like.  Results land in results/perf/<experiment>.json.
+
+    PYTHONPATH=src python scripts/perf_iter.py gemma_decode_bf16cache
+    PYTHONPATH=src python scripts/perf_iter.py --list
+"""
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch import roofline as rl
+from repro.launch.dryrun import _knobs, build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import use_mesh
+from repro.sharding.rules import SERVING_RULES
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "perf"
+
+
+def measure(arch, shape_name, *, rules=None, unroll_layers=False,
+            decode_cast_f32=True, bf16_grad_matmuls=False,
+            microbatches=None):
+    import repro.models.attention as attn
+    import repro.models.layers as layers
+    import repro.models.transformer as tfm
+
+    cfg = get_config(arch)
+    knobs = _knobs(arch)
+    if microbatches is not None:
+        knobs["microbatches"] = microbatches
+    attn.PERF["decode_cast_f32"] = decode_cast_f32
+    layers.PERF["bf16_grad_matmuls"] = bf16_grad_matmuls
+    old_unroll = tfm.SCAN_UNROLL["n"]
+    if unroll_layers:
+        tfm.SCAN_UNROLL["n"] = cfg.pattern_repeats
+    try:
+        mesh = make_production_mesh(multi_pod=False)
+        t0 = time.time()
+        with use_mesh(mesh, rules=rules):
+            fn, args = build_cell(arch, shape_name, mesh, unroll=False,
+                                  rules=rules, **knobs)
+            compiled = fn.lower(*args).compile()
+        compile_s = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        coll = rl.collective_bytes(compiled.as_text())
+        mult = cfg.pattern_repeats * (
+            knobs["microbatches"] if SHAPES[shape_name].kind == "train" else 1)
+        if unroll_layers:
+            mult = knobs["microbatches"] if SHAPES[shape_name].kind == "train" else 1
+        report = rl.RooflineReport(
+            arch=arch, shape=shape_name, mesh="pod16x16", chips=mesh.size,
+            model_flops=rl.model_flops(cfg, SHAPES[shape_name]),
+            hlo_flops=float(ca.get("flops", 0.0)) * mult,
+            hlo_bytes=float(ca.get("bytes accessed", 0.0)) * mult,
+            coll_bytes=coll,
+            bytes_per_device={"args": ma.argument_size_in_bytes,
+                              "temp": ma.temp_size_in_bytes,
+                              "out": ma.output_size_in_bytes},
+            flops_source="scan-corrected" if not unroll_layers else "unrolled",
+            analytic_bytes_dev=rl.analytic_bytes(cfg, SHAPES[shape_name],
+                                                 mesh.size,
+                                                 knobs["microbatches"]),
+        )
+        d = report.to_dict()
+        d["compile_s"] = compile_s
+        return d
+    finally:
+        attn.PERF["decode_cast_f32"] = True
+        layers.PERF["bf16_grad_matmuls"] = False
+        tfm.SCAN_UNROLL["n"] = old_unroll
+
+
+EXPERIMENTS = {
+    # --- gemma-2b decode_32k: the paper-representative serving cell --------
+    "gemma_decode_base": dict(arch="gemma-2b", shape="decode_32k"),
+    "gemma_decode_bf16cache": dict(arch="gemma-2b", shape="decode_32k",
+                                   decode_cast_f32=False),
+    "gemma_decode_servingrules": dict(arch="gemma-2b", shape="decode_32k",
+                                      rules=SERVING_RULES),
+    "gemma_decode_unrolled": dict(arch="gemma-2b", shape="decode_32k",
+                                  unroll_layers=True),
+    "gemma_decode_combined": dict(arch="gemma-2b", shape="decode_32k",
+                                  decode_cast_f32=False, rules=SERVING_RULES,
+                                  unroll_layers=True),
+    # --- xlstm decode_32k: the collective-bound cell ------------------------
+    "xlstm_decode_base": dict(arch="xlstm-350m", shape="decode_32k"),
+    "xlstm_decode_servingrules": dict(arch="xlstm-350m", shape="decode_32k",
+                                      rules=SERVING_RULES),
+    "xlstm_decode_combined": dict(arch="xlstm-350m", shape="decode_32k",
+                                  rules=SERVING_RULES, unroll_layers=True),
+    # --- llama4 train_4k: worst fraction / doesn't fit ----------------------
+    "llama4_train_base": dict(arch="llama4-maverick-400b-a17b",
+                              shape="train_4k"),
+    "llama4_train_bf16grads": dict(arch="llama4-maverick-400b-a17b",
+                                   shape="train_4k", bf16_grad_matmuls=True),
+    "llama4_train_mb16": dict(arch="llama4-maverick-400b-a17b",
+                              shape="train_4k", microbatches=16),
+    "llama4_train_bf16_mb16": dict(arch="llama4-maverick-400b-a17b",
+                                   shape="train_4k", bf16_grad_matmuls=True,
+                                   microbatches=16),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for k in EXPERIMENTS:
+            print(k)
+        return
+    OUT.mkdir(parents=True, exist_ok=True)
+    for name in args.names or EXPERIMENTS:
+        spec = dict(EXPERIMENTS[name])
+        arch, shape = spec.pop("arch"), spec.pop("shape")
+        d = measure(arch, shape, **spec)
+        (OUT / f"{name}.json").write_text(json.dumps(d, indent=2))
+        gib = sum(d["bytes_per_device"].values()) / 2 ** 30
+        print(f"{name}: mem={d['memory_s']*1e3:.2f}ms "
+              f"coll={d['collective_s']*1e3:.2f}ms "
+              f"compute={d['compute_s']*1e3:.2f}ms "
+              f"footprint={gib:.1f}GiB compile={d['compile_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

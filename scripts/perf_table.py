@@ -1,0 +1,55 @@
+"""Render the §Perf hillclimb table from results/perf/*.json."""
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+ORDER = [
+    ("gemma-2b decode_32k", [
+        ("gemma_decode_base", "baseline (scan, 2D rules)"),
+        ("gemma_decode_bf16cache", "H1: f32 KV-cache casts dominate -> native-dtype einsums"),
+        ("gemma_decode_servingrules", "H2: FSDP regather dominates coll -> replicate weights over data"),
+        ("gemma_decode_unrolled", "H3: scan ys copy the KV cache per layer -> unroll 18 layers (in-place aliasing)"),
+        ("gemma_decode_combined", "H1+H2+H3 combined"),
+    ]),
+    ("xlstm-350m decode_32k", [
+        ("xlstm_decode_base", "baseline"),
+        ("xlstm_decode_servingrules", "H2: replicate weights over data"),
+        ("xlstm_decode_combined", "H2 + unrolled layers"),
+    ]),
+    ("llama4-maverick-400b-a17b train_4k", [
+        ("llama4_train_base", "baseline (mb=8, bf16 moments)"),
+        ("llama4_train_bf16grads", "H4: f32 weight-grad gathers -> bf16 custom-VJP matmuls"),
+        ("llama4_train_bf16_mb16", "H4 + mb=16 (halve activation working set)"),
+    ]),
+]
+
+
+def main():
+    d = ROOT / "results" / "perf"
+    print("| cell | change | compute(ms) | memory(ms) | coll(ms) | "
+          "max-term Δ vs base | GiB/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for cell, rows in ORDER:
+        base_max = None
+        for name, desc in rows:
+            f = d / f"{name}.json"
+            if not f.exists():
+                print(f"| {cell} | {desc} | (not run) | | | | |")
+                continue
+            r = json.loads(f.read_text())
+            mx = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            if base_max is None:
+                base_max = mx
+                delta = "—"
+            else:
+                delta = f"{100*(mx/base_max-1):+.0f}%"
+            gib = sum(r["bytes_per_device"].values()) / 2 ** 30
+            print(f"| {cell} | {desc} | {r['compute_s']*1e3:.2f} | "
+                  f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+                  f"{delta} | {gib:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

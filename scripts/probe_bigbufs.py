@@ -1,0 +1,40 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.models.frontends import input_specs, batch_axes
+from repro.sharding import use_mesh
+from repro.sharding.partition import tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.training.train_loop import abstract_train_state, make_train_step
+from repro.training.optimizer import OptConfig
+
+arch = sys.argv[1]
+cfg = get_config(arch)
+shape = SHAPES["train_4k"]
+mesh = make_production_mesh()
+opt = OptConfig()
+s_shapes, s_axes = abstract_train_state(cfg, opt)
+s_sh = tree_shardings(s_shapes, s_axes, mesh)
+b_specs = input_specs(cfg, shape)
+b_sh = tree_shardings(b_specs, batch_axes(cfg, shape), mesh)
+step = make_train_step(cfg, opt, microbatches=8)
+with use_mesh(mesh):
+    c = jax.jit(step, in_shardings=(s_sh, b_sh), out_shardings=(s_sh, None), donate_argnums=(0,)).lower(s_shapes, b_specs).compile()
+print("temp GiB:", c.memory_analysis().temp_size_in_bytes/2**30)
+txt = c.as_text()
+DT = {"f32":4,"bf16":2,"s32":4,"u32":4,"f64":8,"s64":8,"pred":1,"u8":1,"s8":1,"f16":2,"u64":8,"s16":2,"u16":2}
+sizes = {}
+for m in re.finditer(r"(\w+)\[([\d,]+)\]", txt):
+    dt, dims = m.group(1), m.group(2)
+    if dt not in DT: continue
+    n = 1
+    for d in dims.split(","): n *= int(d)
+    b = n * DT[dt]
+    key = f"{dt}[{dims}]"
+    if b > 2**28:
+        sizes[key] = (b, sizes.get(key, (0,0))[1] + 1)
+for k,(b,cnt) in sorted(sizes.items(), key=lambda kv: -kv[1][0])[:15]:
+    print(f"{b/2**30:8.2f} GiB x{cnt:4d}  {k}")

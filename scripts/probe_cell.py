@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, time
+import jax, jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.models.model import LM
+from repro.models.frontends import input_specs, batch_axes
+from repro.sharding import use_mesh
+from repro.sharding.partition import tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.training.train_loop import abstract_train_state, make_train_step
+from repro.training.optimizer import OptConfig
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+multi_pod = len(sys.argv) > 3 and sys.argv[3] == "mp"
+cfg = get_config(arch)
+shape = SHAPES[shape_name]
+mesh = make_production_mesh(multi_pod=multi_pod)
+lm = LM(cfg)
+
+t0 = time.time()
+b_specs = input_specs(cfg, shape)
+b_sh = tree_shardings(b_specs, batch_axes(cfg, shape), mesh)
+
+if shape.kind == "train":
+    opt = OptConfig(moment_dtype="bfloat16" if cfg.param_count() > 1e11 else "float32")
+    s_shapes, s_axes = abstract_train_state(cfg, opt)
+    s_sh = tree_shardings(s_shapes, s_axes, mesh)
+    step = make_train_step(cfg, opt)
+    with use_mesh(mesh):
+        lowered = jax.jit(step, in_shardings=(s_sh, b_sh), out_shardings=(s_sh, None), donate_argnums=(0,)).lower(s_shapes, b_specs)
+elif shape.kind == "prefill":
+    p_shapes, p_axes = lm.abstract_params()
+    p_sh = tree_shardings(p_shapes, p_axes, mesh)
+    def fn(params, batch):
+        return lm.prefill(params, batch)[0]
+    with use_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(p_shapes, b_specs)
+else:
+    p_shapes, p_axes = lm.abstract_params()
+    p_sh = tree_shardings(p_shapes, p_axes, mesh)
+    c_shapes = jax.eval_shape(lambda: lm.init_cache(shape.global_batch, shape.seq_len, t0=shape.seq_len - 1))
+    c_sh = tree_shardings(c_shapes, lm.cache_axes(), mesh)
+    def fn(params, caches, batch):
+        return lm.decode_step(params, caches, batch)
+    with use_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh), out_shardings=(None, c_sh), donate_argnums=(1,)).lower(p_shapes, c_shapes, b_specs)
+t1 = time.time()
+compiled = lowered.compile()
+t2 = time.time()
+ma = compiled.memory_analysis()
+ca = compiled.cost_analysis()
+tot = (ma.output_size_in_bytes + ma.temp_size_in_bytes + ma.argument_size_in_bytes)/2**30
+print(f"{arch} {shape_name} mp={multi_pod}: lower {t1-t0:.1f}s compile {t2-t1:.1f}s | args {ma.argument_size_in_bytes/2**30:.2f} temp {ma.temp_size_in_bytes/2**30:.2f} out {ma.output_size_in_bytes/2**30:.2f} GiB/dev | flops {ca.get('flops',0)/1e12:.2f}T bytes {ca.get('bytes accessed',0)/2**30:.1f}GiB")

@@ -1,0 +1,29 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+import jax
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.models.frontends import input_specs, batch_axes
+from repro.sharding import use_mesh
+from repro.sharding.partition import tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.training.train_loop import abstract_train_state, make_train_step
+from repro.training.optimizer import OptConfig
+
+cfg = get_config(sys.argv[1])
+shape = SHAPES["train_4k"]
+mesh = make_production_mesh()
+opt = OptConfig()
+s_shapes, s_axes = abstract_train_state(cfg, opt)
+s_sh = tree_shardings(s_shapes, s_axes, mesh)
+b_specs = input_specs(cfg, shape)
+b_sh = tree_shardings(b_specs, batch_axes(cfg, shape), mesh)
+step = make_train_step(cfg, opt)
+with use_mesh(mesh):
+    c = jax.jit(step, in_shardings=(s_sh, b_sh), out_shardings=(s_sh, None), donate_argnums=(0,)).lower(s_shapes, b_specs).compile()
+txt = c.as_text()
+pat = sys.argv[2]
+for i, line in enumerate(txt.splitlines()):
+    if pat in line:
+        print(line.strip()[:240])

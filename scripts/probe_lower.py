@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.models.model import LM
+from repro.models.frontends import input_specs, batch_axes
+from repro.sharding import use_mesh
+from repro.sharding.partition import tree_shardings
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "granite-8b"
+shape_name = sys.argv[2] if len(sys.argv) > 2 else "prefill_32k"
+
+cfg = get_config(arch)
+shape = SHAPES[shape_name]
+mesh = make_production_mesh(multi_pod=False)
+lm = LM(cfg)
+
+t0 = time.time()
+p_shapes, p_axes = lm.abstract_params()
+p_sh = tree_shardings(p_shapes, p_axes, mesh)
+b_specs = input_specs(cfg, shape)
+b_sh = tree_shardings(b_specs, batch_axes(cfg, shape), mesh)
+print(f"abstract {time.time()-t0:.1f}s")
+
+def prefill_fn(params, batch):
+    logits, caches = lm.prefill(params, batch)
+    return logits
+
+t0 = time.time()
+with use_mesh(mesh):
+    lowered = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh)).lower(p_shapes, b_specs)
+print(f"lower {time.time()-t0:.1f}s")
+t0 = time.time()
+compiled = lowered.compile()
+print(f"compile {time.time()-t0:.1f}s")
+ma = compiled.memory_analysis()
+print("per-device output bytes:", ma.output_size_in_bytes/2**30, "GiB; temp:", ma.temp_size_in_bytes/2**30, "GiB; args:", ma.argument_size_in_bytes/2**30)
+ca = compiled.cost_analysis()
+print("flops:", ca.get("flops", 0)/1e12, "Tflop; bytes:", ca.get("bytes accessed", 0)/2**30)

@@ -1,0 +1,32 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, time
+import jax, jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.models.model import LM
+from repro.models.frontends import input_specs, batch_axes
+from repro.sharding import use_mesh
+from repro.sharding.partition import tree_shardings
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1]
+cfg = get_config(arch)
+shape = SHAPES["train_4k"]
+mesh = make_production_mesh()
+lm = LM(cfg)
+p_shapes, p_axes = lm.abstract_params()
+p_sh = tree_shardings(p_shapes, p_axes, mesh)
+b_specs = input_specs(cfg, shape)
+b_sh = tree_shardings(b_specs, batch_axes(cfg, shape), mesh)
+
+def probe(name, fn):
+    with use_mesh(mesh):
+        c = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(p_shapes, b_specs).compile()
+    ma = c.memory_analysis()
+    print(f"{name}: temp {ma.temp_size_in_bytes/2**30:.2f} GiB/dev")
+
+probe("loss_fwd", lambda p, b: lm.loss(p, b))
+probe("grad", lambda p, b: jax.value_and_grad(lm.loss)(p, b)[0])
+probe("grad_noremat", lambda p, b: jax.value_and_grad(lambda pp, bb: lm.loss(pp, bb, remat=False))(p, b)[0])

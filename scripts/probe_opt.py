@@ -1,0 +1,40 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.models.frontends import input_specs, batch_axes
+from repro.sharding import use_mesh
+from repro.sharding.partition import tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.training.train_loop import abstract_train_state, make_train_step, TrainState
+from repro.training.optimizer import OptConfig, apply_updates
+
+cfg = get_config("smollm-360m")
+shape = SHAPES["train_4k"]
+mesh = make_production_mesh()
+opt = OptConfig()
+s_shapes, s_axes = abstract_train_state(cfg, opt)
+s_sh = tree_shardings(s_shapes, s_axes, mesh)
+b_specs = input_specs(cfg, shape)
+b_sh = tree_shardings(b_specs, batch_axes(cfg, shape), mesh)
+
+# optimizer alone: grads shaped like params
+def opt_only(state, batch):
+    grads = jax.tree.map(lambda p: jnp.ones_like(p), state.params)
+    p, o, m = apply_updates(state.params, grads, state.opt, opt)
+    return TrainState(p, o), m
+
+with use_mesh(mesh):
+    c = jax.jit(opt_only, in_shardings=(s_sh, b_sh), out_shardings=(s_sh, None), donate_argnums=(0,)).lower(s_shapes, b_specs).compile()
+print("opt_only temp:", c.memory_analysis().temp_size_in_bytes/2**30)
+
+step = make_train_step(cfg, opt)
+with use_mesh(mesh):
+    c2 = jax.jit(step, in_shardings=(s_sh, b_sh), out_shardings=(s_sh, None), donate_argnums=(0,)).lower(s_shapes, b_specs).compile()
+print("full temp:", c2.memory_analysis().temp_size_in_bytes/2**30)
+# without donation/out_shardings
+with use_mesh(mesh):
+    c3 = jax.jit(step, in_shardings=(s_sh, b_sh)).lower(s_shapes, b_specs).compile()
+print("full nodonate temp:", c3.memory_analysis().temp_size_in_bytes/2**30)

@@ -1,0 +1,63 @@
+"""Rebuild the §Roofline table uniformly from the raw dry-run JSONs.
+
+Derived quantities (compute floor, analytic memory, fraction) are recomputed
+here from the raw stored fields, so cells measured before/after roofline.py
+refinements render consistently.
+
+    PYTHONPATH=src python scripts/roofline_table.py [--mesh pod16x16]
+"""
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch import roofline as rl
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def rebuild(d: dict) -> rl.RooflineReport:
+    cfg = get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    knobs = d.get("knobs", {})
+    return rl.RooflineReport(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], chips=d["chips"],
+        model_flops=rl.model_flops(cfg, shape),
+        hlo_flops=d["hlo_flops"], hlo_bytes=d["hlo_bytes"],
+        coll_bytes=d["coll_bytes"],
+        bytes_per_device=d["bytes_per_device"],
+        flops_source=d["flops_source"],
+        analytic_bytes_dev=rl.analytic_bytes(
+            cfg, shape, d["chips"], knobs.get("microbatches", 1)),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--dir", default=str(ROOT / "results" / "dryrun"))
+    args = ap.parse_args()
+    rows = []
+    for f in sorted(pathlib.Path(args.dir).glob("*.json")):
+        d = json.loads(f.read_text())
+        if args.mesh != "all" and d["mesh"] != args.mesh:
+            continue
+        rows.append((rebuild(d), d))
+    print("| arch | shape | compute(ms) | memory(ms) | analytic-mem(ms) | "
+          "coll(ms) | bottleneck | useful | roofline-frac | GiB/dev | src |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    shape_order = {s: i for i, s in enumerate(SHAPES)}
+    rows.sort(key=lambda rd: (rd[0].arch, shape_order[rd[0].shape]))
+    for r, d in rows:
+        gib = sum(d["bytes_per_device"].values()) / 2 ** 30
+        print(f"| {r.arch} | {r.shape} | {r.compute_s*1e3:.2f} | "
+              f"{r.memory_s*1e3:.2f} | {r.analytic_memory_s*1e3:.2f} | "
+              f"{r.collective_s*1e3:.2f} | {r.bottleneck} | "
+              f"{r.usefulness:.2f} | {r.roofline_fraction:.3f} | {gib:.1f} | "
+              f"{r.flops_source[:4]} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Clairvoyant core: the paper's contribution as a composable library.
+
+features   — the 19 lexical features (§3.2)
+gbdt       — from-scratch XGBoost-class boosted trees (§4.3)
+predictor  — features + ensemble -> P(Long)
+scheduler  — SJF min-heap + starvation timeout (§3.4)
+simulation — serial-backend DES, workload generators, P-K theory (§2.4, §5.5)
+ranking    — ranking accuracy (Algorithm 1) + Table 7 baselines
+calibration— tau = 3 x mu_short (§3.4)
+router     — beyond-paper: predictive multi-replica placement
+"""
+
+from repro.core.features import FEATURE_NAMES, N_FEATURES, extract, extract_batch
+from repro.core.gbdt import GBDTModel, GBDTParams, train_gbdt
+from repro.core.predictor import Predictor
+from repro.core.ranking import (classification_accuracy, class_labels,
+                                ranking_accuracy)
+from repro.core.scheduler import MinHeap, Request, SJFQueue
+from repro.core.simulation import (ServiceDist, SimResult, burst_workload,
+                                   poisson_workload, simulate)
+
+__all__ = [
+    "FEATURE_NAMES", "N_FEATURES", "extract", "extract_batch",
+    "GBDTModel", "GBDTParams", "train_gbdt", "Predictor",
+    "classification_accuracy", "class_labels", "ranking_accuracy",
+    "MinHeap", "Request", "SJFQueue",
+    "ServiceDist", "SimResult", "burst_workload", "poisson_workload",
+    "simulate",
+]

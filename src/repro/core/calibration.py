@@ -1,0 +1,34 @@
+"""Starvation-timeout calibration (paper §3.4: tau = 3 x mu_short).
+
+mu_short must be the mean Short-request *sojourn* time under representative
+mixed-workload queueing conditions — NOT the isolated sequential service time
+(the paper is emphatic about this distinction).  ``measure_mu_short``
+reproduces profiler/measure_mu_short.py: dispatch a concurrent mixed burst,
+average Short sojourns.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.simulation import ServiceDist, burst_workload, simulate
+
+TAU_MULTIPLIER = 3.0  # the paper's Pareto-elbow choice
+
+
+def measure_mu_short(short: ServiceDist, long: ServiceDist,
+                     n_short: int = 50, n_long: int = 50,
+                     policy: str = "sjf", seed: int = 0) -> float:
+    """Mean short-request sojourn under a mixed concurrent burst."""
+    rng = np.random.default_rng(seed)
+    reqs = burst_workload(rng, n_short, n_long, short, long)
+    res = simulate(reqs, policy=policy, tau=None)
+    return res.mean(klass="short", attr="sojourn")
+
+
+def calibrate_tau(short: ServiceDist, long: ServiceDist,
+                  multiplier: float = TAU_MULTIPLIER, **kw) -> float:
+    """tau = multiplier x mu_short (default 3x, the paper's heuristic)."""
+    return multiplier * measure_mu_short(short, long, **kw)

@@ -1,0 +1,131 @@
+"""The 19 lexical features of Clairvoyant (paper §3.2).
+
+Six numeric features + a 13-way one-hot of the leading instruction verb.
+Implemented as a pure string-scanning pass — no regex, no tokenizer loading,
+no embedding lookups — so extraction cost is sub-microsecond-ish per prompt
+and predictor latency is dominated by model inference, as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+# --- keyword tables (paper lists "etc."; these are the expanded sets) -------
+
+CODE_KEYWORDS = (
+    "function", "class", "implement", "algorithm", "code", "script",
+    "debug", "compile", "python", "javascript", "java", "c++", "sql",
+    "api", "library", "module", "refactor", "regex", "program",
+)
+
+LENGTH_CONSTRAINT_KEYWORDS = (
+    "brief", "briefly", "concise", "concisely", "short answer", "one sentence",
+    "in one sentence", "in a sentence", "one word", "tl;dr", "tldr",
+    "detailed", "in detail", "in-depth", "comprehensive", "thorough",
+    "step by step", "step-by-step", "at length", "elaborate", "essay",
+    "paragraphs", "words or less", "word limit",
+)
+
+FORMAT_KEYWORDS = (
+    "table", "list", "json", "csv", "markdown", "bullet", "bullets",
+    "numbered", "outline", "yaml", "xml", "html", "latex", "spreadsheet",
+)
+
+CLAUSE_MARKERS = (
+    "because", "although", "though", "while", "whereas", "since", "unless",
+    "that", "which", "who", "whom", "whose", "when", "where", "if", "after",
+    "before", "until", "so that", "such that",
+)
+
+INSTRUCTION_VERBS = (
+    "what", "write", "explain", "summarize", "how", "list", "implement",
+    "compare", "describe", "generate", "why", "define",
+)  # 13th category: "other"
+
+VERB_INDEX = {v: i for i, v in enumerate(INSTRUCTION_VERBS)}
+N_VERB_FEATURES = len(INSTRUCTION_VERBS) + 1  # + "other"
+
+NUMERIC_FEATURE_NAMES = (
+    "prompt_token_len",
+    "has_code_keyword",
+    "has_length_constraint",
+    "ends_with_question",
+    "has_format_keyword",
+    "clause_count",
+)
+
+FEATURE_NAMES: tuple = NUMERIC_FEATURE_NAMES + tuple(
+    f"verb_{v}" for v in INSTRUCTION_VERBS
+) + ("verb_other",)
+
+N_FEATURES = len(FEATURE_NAMES)
+assert N_FEATURES == 19
+
+# Feature-group map for the drop-one ablation study (paper Table 4).
+FEATURE_GROUPS = {
+    "prompt_token_len": (0,),
+    "has_code_keyword": (1,),
+    "has_length_constraint": (2,),
+    "ends_with_question": (3,),
+    "has_format_keyword": (4,),
+    "clause_count": (5,),
+    "instruction_verb": tuple(range(6, 19)),
+}
+
+_SYNONYMS = {
+    "summarise": "summarize", "whats": "what", "what's": "what",
+    "tell": "describe", "give": "generate", "create": "generate",
+    "make": "generate", "show": "list", "enumerate": "list",
+    "clarify": "explain", "outline": "summarize", "code": "implement",
+    "build": "implement", "develop": "implement", "contrast": "compare",
+}
+
+
+def leading_verb(prompt: str) -> int:
+    """Index of the leading instruction verb (12 == 'other')."""
+    for word in prompt.split():
+        w = word.strip(".,:;!?\"'()[]").lower()
+        if not w:
+            continue
+        w = _SYNONYMS.get(w, w)
+        return VERB_INDEX.get(w, len(INSTRUCTION_VERBS))
+    return len(INSTRUCTION_VERBS)
+
+
+def _contains_any(low: str, keywords: Sequence[str]) -> float:
+    return 1.0 if any(k in low for k in keywords) else 0.0
+
+
+def _count_clause_markers(low: str) -> float:
+    count = 0
+    for word in low.split():
+        w = word.strip(".,:;!?\"'()[]")
+        if w in CLAUSE_MARKERS:
+            count += 1
+    # multi-word markers
+    count += low.count("so that") + low.count("such that")
+    return float(count)
+
+
+def extract(prompt: str) -> np.ndarray:
+    """19-dim float32 feature vector for one prompt."""
+    low = prompt.lower()
+    vec = np.zeros(N_FEATURES, dtype=np.float32)
+    vec[0] = len(prompt) // 4  # BPE approximation, as in the paper
+    vec[1] = _contains_any(low, CODE_KEYWORDS)
+    vec[2] = _contains_any(low, LENGTH_CONSTRAINT_KEYWORDS)
+    vec[3] = 1.0 if prompt.rstrip().endswith("?") else 0.0
+    vec[4] = _contains_any(low, FORMAT_KEYWORDS)
+    vec[5] = _count_clause_markers(low)
+    vec[6 + leading_verb(prompt)] = 1.0
+    return vec
+
+
+def extract_batch(prompts: Sequence[str]) -> np.ndarray:
+    """(N, 19) feature matrix."""
+    out = np.zeros((len(prompts), N_FEATURES), dtype=np.float32)
+    for i, p in enumerate(prompts):
+        out[i] = extract(p)
+    return out

@@ -1,0 +1,243 @@
+"""From-scratch histogram gradient-boosted trees (the Clairvoyant predictor).
+
+The paper trains an XGBoost classifier (3-class softmax objective, 300
+estimators, max_depth 6, lr 0.1, seed 42) and exports it to ONNX.  Neither
+xgboost nor onnxruntime exist in this offline container — and the framework
+mandate is to build every substrate — so this module implements the same
+model class from scratch:
+
+* second-order boosting (gradient + hessian) with the multi-class softmax
+  objective (one tree per class per round, exactly XGBoost's ``multi:softprob``
+  layout);
+* histogram split finding (features pre-binned to <=256 bins) with the
+  standard gain  0.5 * (GL^2/(HL+l) + GR^2/(HR+l) - G^2/(H+l));
+* L2 leaf regularisation, min-child-weight pruning, learning-rate shrinkage.
+
+Trained models export to dense "ensemble tensors" — complete-binary-tree
+arrays — which are what the jnp reference (kernels/ref.py) and the Pallas
+batched-inference kernel (kernels/gbdt_infer.py) consume.  The numpy batch
+path below is the host-side admission path (the 0.029 ms analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from dataclasses import dataclass
+
+import numpy as np
+
+MAX_BINS = 256
+
+
+@dataclass
+class GBDTParams:
+    num_rounds: int = 300
+    max_depth: int = 6
+    learning_rate: float = 0.1
+    reg_lambda: float = 1.0
+    min_child_weight: float = 1.0
+    gamma: float = 0.0
+    n_classes: int = 3
+    seed: int = 42
+    subsample: float = 1.0
+
+
+@dataclass
+class GBDTModel:
+    """Dense complete-binary-tree ensemble.
+
+    All arrays have leading dim T = num_rounds * n_classes (tree t belongs to
+    class ``t % n_classes``) and node dim N = 2**(max_depth+1) - 1 in
+    breadth-first layout (children of i at 2i+1 / 2i+2).  ``feature[i] < 0``
+    marks a leaf; traversal goes left iff x[feature] < threshold.
+    """
+
+    feature: np.ndarray    # (T, N) int32, -1 for leaf / dead node
+    threshold: np.ndarray  # (T, N) float32
+    value: np.ndarray      # (T, N) float32 (leaf contribution)
+    n_classes: int
+    max_depth: int
+    base_score: float = 0.0
+
+    @property
+    def num_trees(self) -> int:
+        return self.feature.shape[0]
+
+    def predict_margin(self, X: np.ndarray) -> np.ndarray:
+        """(B, n_classes) raw margins; vectorised level-by-level traversal."""
+        X = np.asarray(X, np.float32)
+        B = X.shape[0]
+        T, N = self.feature.shape
+        margins = np.full((B, self.n_classes), self.base_score, np.float32)
+        # node index per (tree, sample)
+        idx = np.zeros((T, B), np.int32)
+        for _ in range(self.max_depth):
+            feat = self.feature[np.arange(T)[:, None], idx]      # (T, B)
+            thr = self.threshold[np.arange(T)[:, None], idx]
+            is_leaf = feat < 0
+            f = np.maximum(feat, 0)
+            go_left = X[np.arange(B)[None, :], f] < thr
+            nxt = np.where(go_left, 2 * idx + 1, 2 * idx + 2)
+            idx = np.where(is_leaf, idx, nxt)
+        vals = self.value[np.arange(T)[:, None], idx]            # (T, B)
+        for c in range(self.n_classes):
+            margins[:, c] += vals[c::self.n_classes].sum(axis=0)
+        return margins
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        m = self.predict_margin(X)
+        m = m - m.max(axis=1, keepdims=True)
+        e = np.exp(m)
+        return e / e.sum(axis=1, keepdims=True)
+
+    def predict_p_long(self, X: np.ndarray, long_class: int = 2) -> np.ndarray:
+        """The scheduler's priority key."""
+        return self.predict_proba(X)[:, long_class]
+
+    def save(self, path: str) -> None:
+        with open(path, "wb") as f:
+            pickle.dump(dataclasses.asdict(self), f)
+
+    @classmethod
+    def load(cls, path: str) -> "GBDTModel":
+        with open(path, "rb") as f:
+            d = pickle.load(f)
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def _bin_features(X: np.ndarray):
+    """Pre-bin features; returns (binned uint8 (B,F), thresholds list[F])."""
+    B, F = X.shape
+    binned = np.zeros((B, F), np.uint8)
+    thresholds = []
+    for f in range(F):
+        vals = np.unique(X[:, f])
+        if len(vals) > MAX_BINS:
+            qs = np.quantile(X[:, f], np.linspace(0, 1, MAX_BINS + 1)[1:-1])
+            edges = np.unique(qs)
+        else:
+            edges = (vals[:-1] + vals[1:]) / 2.0  # midpoints between uniques
+        thresholds.append(edges.astype(np.float32))
+        binned[:, f] = np.searchsorted(edges, X[:, f], side="right")
+    return binned, thresholds
+
+
+def _softmax(m):
+    m = m - m.max(axis=1, keepdims=True)
+    e = np.exp(m)
+    return e / e.sum(axis=1, keepdims=True)
+
+
+def train_gbdt(X: np.ndarray, y: np.ndarray,
+               params: GBDTParams | None = None) -> GBDTModel:
+    """Fit the boosted ensemble.  X: (B, F) float; y: (B,) int class labels."""
+    p = params or GBDTParams()
+    rng = np.random.default_rng(p.seed)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.int64)
+    B, F = X.shape
+    K = p.n_classes
+    N = 2 ** (p.max_depth + 1) - 1
+    T = p.num_rounds * K
+
+    binned, thresholds = _bin_features(X)
+    nbins = max(len(t) + 1 for t in thresholds) if thresholds else 1
+    y_onehot = np.eye(K, dtype=np.float32)[y]
+
+    feature = np.full((T, N), -1, np.int32)
+    threshold = np.zeros((T, N), np.float32)
+    value = np.zeros((T, N), np.float32)
+
+    margins = np.zeros((B, K), np.float32)
+
+    t = 0
+    for _round in range(p.num_rounds):
+        probs = _softmax(margins)
+        G_all = probs - y_onehot                     # (B, K)
+        H_all = np.maximum(probs * (1.0 - probs), 1e-6)
+        if p.subsample < 1.0:
+            mask = rng.random(B) < p.subsample
+        else:
+            mask = None
+        for k in range(K):
+            g, h = G_all[:, k].copy(), H_all[:, k].copy()
+            if mask is not None:
+                g, h = g * mask, h * mask
+            _build_tree(binned, thresholds, g, h, p,
+                        feature[t], threshold[t], value[t])
+            margins[:, k] += _eval_tree_binned(
+                binned, thresholds, feature[t], threshold[t], value[t], X)
+            t += 1
+
+    return GBDTModel(feature=feature, threshold=threshold, value=value,
+                     n_classes=K, max_depth=p.max_depth)
+
+
+def _eval_tree_binned(binned, thresholds, feature, threshold, value, X):
+    B = X.shape[0]
+    idx = np.zeros(B, np.int32)
+    depth = int(np.log2(feature.shape[0] + 1)) - 1
+    for _ in range(depth):
+        feat = feature[idx]
+        leaf = feat < 0
+        f = np.maximum(feat, 0)
+        go_left = X[np.arange(B), f] < threshold[idx]
+        nxt = np.where(go_left, 2 * idx + 1, 2 * idx + 2)
+        idx = np.where(leaf, idx, nxt)
+    return value[idx]
+
+
+def _build_tree(binned, thresholds, g, h, p: GBDTParams,
+                feature_out, threshold_out, value_out):
+    """Grow one depth-wise tree in place (breadth-first array layout)."""
+    B, F = binned.shape
+    lam = p.reg_lambda
+    # joint (feature, bin) keys so one bincount builds the whole histogram
+    keys_full = (binned.astype(np.int32)
+                 + np.arange(F, dtype=np.int32)[None, :] * MAX_BINS)
+    active = {0: np.arange(B)}
+
+    def leaf_weight(gs, hs):
+        return float(-p.learning_rate * gs / (hs + lam))
+
+    for depth in range(p.max_depth + 1):
+        next_active = {}
+        for node, idx in active.items():
+            gs, hs = float(g[idx].sum()), float(h[idx].sum())
+            value_out[node] = leaf_weight(gs, hs)
+            if depth == p.max_depth or len(idx) < 2 or hs < 2 * p.min_child_weight:
+                continue  # stays leaf (feature_out[node] == -1)
+            # histogram over (feature, bin) via one flat bincount each
+            keys = keys_full[idx].ravel()
+            Gh = np.bincount(keys, weights=np.repeat(g[idx], F),
+                             minlength=F * MAX_BINS).reshape(F, MAX_BINS)
+            Hh = np.bincount(keys, weights=np.repeat(h[idx], F),
+                             minlength=F * MAX_BINS).reshape(F, MAX_BINS)
+            GL = np.cumsum(Gh, axis=1)[:, :-1]            # left of each edge
+            HL = np.cumsum(Hh, axis=1)[:, :-1]
+            GR, HR = gs - GL, hs - HL
+            valid = (HL >= p.min_child_weight) & (HR >= p.min_child_weight)
+            gain = 0.5 * (GL ** 2 / (HL + lam) + GR ** 2 / (HR + lam)
+                          - gs ** 2 / (hs + lam)) - p.gamma
+            gain = np.where(valid, gain, -np.inf)
+            # mask bins beyond each feature's threshold count
+            for f in range(F):
+                gain[f, len(thresholds[f]):] = -np.inf
+            best = np.unravel_index(np.argmax(gain), gain.shape)
+            if not np.isfinite(gain[best]) or gain[best] <= 0:
+                continue
+            f_best, b_best = int(best[0]), int(best[1])
+            feature_out[node] = f_best
+            threshold_out[node] = thresholds[f_best][b_best]
+            go_left = binned[idx, f_best] <= b_best
+            li, ri = idx[go_left], idx[~go_left]
+            next_active[2 * node + 1] = li
+            next_active[2 * node + 2] = ri
+        active = next_active
+        if not active:
+            break

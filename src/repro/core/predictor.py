@@ -1,0 +1,52 @@
+"""The Clairvoyant predictor: features -> GBDT -> P(Long).
+
+Three inference paths, all over the same exported ensemble tensors:
+
+* ``predict_p_long``   — numpy host path (per-request admission decision);
+* ``kernels.ref.gbdt_predict_ref`` — pure-jnp oracle;
+* ``kernels.gbdt_infer`` — Pallas batched kernel (scores whole admission
+  batches on-device; the TPU-native analogue of the ONNX C path).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import features as F
+from repro.core.gbdt import GBDTModel, GBDTParams, train_gbdt
+
+LONG_CLASS = 2
+
+
+@dataclass
+class Predictor:
+    model: GBDTModel
+
+    def features(self, prompt: str) -> np.ndarray:
+        return F.extract(prompt)
+
+    def p_long(self, prompt: str) -> float:
+        x = F.extract(prompt)[None, :]
+        return float(self.model.predict_p_long(x, LONG_CLASS)[0])
+
+    def p_long_batch(self, prompts: Sequence[str]) -> np.ndarray:
+        return self.model.predict_p_long(F.extract_batch(prompts), LONG_CLASS)
+
+    def proba_batch(self, prompts: Sequence[str]) -> np.ndarray:
+        return self.model.predict_proba(F.extract_batch(prompts))
+
+    @classmethod
+    def train(cls, prompts: Sequence[str], response_lengths: Sequence[int],
+              params: Optional[GBDTParams] = None) -> "Predictor":
+        from repro.core.ranking import class_labels
+        X = F.extract_batch(prompts)
+        y = class_labels(np.asarray(response_lengths))
+        return cls(model=train_gbdt(X, y, params or GBDTParams()))
+
+    @classmethod
+    def train_on_features(cls, X: np.ndarray, y: np.ndarray,
+                          params: Optional[GBDTParams] = None) -> "Predictor":
+        return cls(model=train_gbdt(X, y, params or GBDTParams()))

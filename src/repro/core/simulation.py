@@ -1,0 +1,184 @@
+"""Discrete-event simulation of the serial backend (paper §5.4/§5.5).
+
+Single non-preemptive server fed by the SJFQueue: exactly the M/G/1 setting
+of the paper's steady-state analysis and the closed-queue setting of its
+burst benchmark.  Service times come either from parametric distributions
+(the paper's calibrated Gaussians) or from the framework's roofline-derived
+engine cost model (serving/service_time.py).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.scheduler import Request, SJFQueue
+
+
+@dataclass
+class SimResult:
+    requests: List[Request]
+    promotions: int
+    makespan: float
+
+    def _vals(self, klass: Optional[str], attr: str) -> np.ndarray:
+        return np.array([getattr(r, attr) for r in self.requests
+                         if (klass is None or r.klass == klass)
+                         and getattr(r, attr) is not None])
+
+    def percentile(self, q: float, klass: Optional[str] = None,
+                   attr: str = "sojourn") -> float:
+        v = self._vals(klass, attr)
+        return float(np.percentile(v, q)) if len(v) else float("nan")
+
+    def mean(self, klass: Optional[str] = None, attr: str = "sojourn") -> float:
+        v = self._vals(klass, attr)
+        return float(v.mean()) if len(v) else float("nan")
+
+
+def simulate(requests: Sequence[Request], policy: str = "sjf",
+             tau: Optional[float] = None) -> SimResult:
+    """Run the serial-server DES.  ``requests`` carry arrival/p_long/service."""
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    q = SJFQueue(policy=policy, tau=tau)
+    t = 0.0
+    i, n = 0, len(reqs)
+    done: List[Request] = []
+    while i < n or len(q):
+        if not len(q):
+            t = max(t, reqs[i].arrival)
+        while i < n and reqs[i].arrival <= t:
+            q.push(reqs[i])
+            i += 1
+        req = q.pop(now=t)
+        if req is None:
+            continue
+        req.start = t
+        t += req.true_service
+        req.finish = t
+        done.append(req)
+    return SimResult(requests=done, promotions=q.stats["promotions"],
+                     makespan=t)
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServiceDist:
+    """Truncated normal service-time distribution (paper §5.5 uses
+    N(3.5, 0.8) short / N(8.9, 2.0) long for the RTX 4090 calibration)."""
+    mean: float
+    std: float
+    floor: float = 0.05
+
+    def sample(self, rng, size=None):
+        return np.maximum(rng.normal(self.mean, self.std, size), self.floor)
+
+
+def poisson_workload(rng, n: int, lam: float,
+                     short: ServiceDist, long: ServiceDist,
+                     mix_long: float = 0.5,
+                     p_long_fn: Optional[Callable[[Request], float]] = None
+                     ) -> List[Request]:
+    """Open-loop Poisson arrivals with a short/long service mix."""
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, n))
+    out = []
+    for k in range(n):
+        is_long = rng.random() < mix_long
+        dist = long if is_long else short
+        r = Request(req_id=k, arrival=float(arrivals[k]),
+                    true_service=float(dist.sample(rng)),
+                    klass="long" if is_long else "short")
+        r.p_long = 1.0 if is_long else 0.0
+        out.append(r)
+    if p_long_fn is not None:
+        for r in out:
+            r.p_long = p_long_fn(r)
+    return out
+
+
+def burst_workload(rng, n_short: int, n_long: int,
+                   short: ServiceDist, long: ServiceDist,
+                   window: float = 0.05) -> List[Request]:
+    """The paper's adversarial stress test: all requests arrive within
+    ``window`` seconds (asyncio.gather analogue)."""
+    out = []
+    total = n_short + n_long
+    order = rng.permutation(total)
+    for pos, k in enumerate(order):
+        is_long = k >= n_short
+        dist = long if is_long else short
+        r = Request(req_id=pos, arrival=float(rng.uniform(0, window)),
+                    true_service=float(dist.sample(rng)),
+                    klass="long" if is_long else "short")
+        r.p_long = 1.0 if is_long else 0.0
+        out.append(r)
+    return out
+
+
+def imperfect_predictor(rng, ranking_accuracy: float
+                        ) -> Callable[[Request], float]:
+    """Synthesise P(Long) scores achieving a target (Short, Long) pairwise
+    ranking accuracy — used to propagate measured predictor fidelity into the
+    queueing simulation without re-running the real predictor."""
+    spread = _spread_for_accuracy(ranking_accuracy)
+
+    def fn(req: Request) -> float:
+        base = 0.75 if req.klass == "long" else 0.25
+        return float(np.clip(rng.normal(base, spread), 0.0, 1.0))
+
+    return fn
+
+
+def _spread_for_accuracy(acc: float) -> float:
+    """Noise sigma s.t. P(N(.75,s) > N(.25,s)) == acc (two-class gaussians)."""
+    acc = min(max(acc, 0.5 + 1e-6), 1.0 - 1e-9)
+    # P(X_l > X_s) = Phi(0.5 / (s*sqrt(2)))
+    z = _probit(acc)
+    return 0.5 / (z * math.sqrt(2.0)) if z > 0 else 1e6
+
+
+def _probit(p: float) -> float:
+    """Inverse standard-normal CDF (Acklam's rational approximation)."""
+    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    if p < plow:
+        q = math.sqrt(-2 * math.log(p))
+        return (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+               ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if p > phigh:
+        return -_probit(1 - p)
+    q = p - 0.5
+    r = q * q
+    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / \
+           (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+
+
+# ---------------------------------------------------------------------------
+# Queueing theory reference values (paper §2.4)
+# ---------------------------------------------------------------------------
+
+def pk_wait_fcfs(lam: float, es: float, es2: float) -> float:
+    """Pollaczek-Khinchine mean FCFS waiting time.  es2 = E[S^2]."""
+    rho = lam * es
+    if rho >= 1.0:
+        return float("inf")
+    return lam * es2 / (2.0 * (1.0 - rho))
+
+
+def cs2(service_times: np.ndarray) -> float:
+    """Squared coefficient of variation (Table 1)."""
+    s = np.asarray(service_times, float)
+    return float(s.var() / s.mean() ** 2)

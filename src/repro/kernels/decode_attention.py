@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+Decode is memory-bound: the whole KV cache streams HBM->VMEM once per token.
+The kernel tiles the cache sequence axis; each (batch, head) program streams
+KV blocks through VMEM carrying the online-softmax state, masking slots
+beyond the current fill level ``t``.  All G query heads of a KV group share
+the same K/V block fetch (q is laid out (B, KV, G, hd) so the group rides in
+one block) — on real hardware this is the G-fold HBM-bandwidth saving that
+makes GQA decode fast; the grid never re-reads a KV block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(t_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, block_kv: int, scale: float):
+    ikv = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    t = t_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ikv * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos <= t, s, NEG_INF)            # (G, bkv)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(ikv == nkv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, t, *, block_kv: int = 256,
+                            interpret: bool = True):
+    """q: (B, KV, G, hd) one query token, grouped; k, v: (B, KV, S, hd);
+    t: scalar int32 fill level (slots <= t attend).  Returns (B, KV, G, hd).
+    """
+    B, KV, G, hd = q.shape
+    S = k.shape[2]
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0, (S, block_kv)
+    nkv = S // block_kv
+    grid = (B, KV, nkv)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, block_kv=block_kv,
+                               scale=hd ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ikv: (0,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ikv: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, ikv: (b, h, ikv, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, ikv: (b, h, ikv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ikv: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t_arr, q, k, v)

@@ -1,0 +1,61 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` resolves automatically: compiled on real TPU backends,
+interpret-mode (Python execution of the kernel body) on CPU — which is how
+this container validates the kernels.  Layout adaptation to/from the model's
+(B, S, H, hd) convention lives here so kernels stay in their TPU-native
+(B, H, S, hd) layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.gbdt_infer import gbdt_margins_kernel
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128):
+    """Model-layout wrapper: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_kernel(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_kv=block_kv, interpret=_auto_interpret())
+    return o.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def decode_attention(q, cache_k, cache_v, t, *, block_kv: int = 256):
+    """q (B,1,H,hd), cache (B,S,KV,hd), fill level t -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    KV = cache_k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    kt = cache_k.transpose(0, 2, 1, 3)
+    vt = cache_v.transpose(0, 2, 1, 3)
+    o = decode_attention_kernel(qg, kt, vt, t, block_kv=block_kv,
+                                interpret=_auto_interpret())
+    return o.reshape(B, 1, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes",))
+def gbdt_margins(X, feature, threshold, value, *, n_classes: int = 3):
+    return gbdt_margins_kernel(X, feature, threshold, value,
+                               n_classes=n_classes,
+                               interpret=_auto_interpret())
+
+
+def gbdt_proba(X, feature, threshold, value, *, n_classes: int = 3):
+    m = gbdt_margins(X, feature, threshold, value, n_classes=n_classes)
+    return jax.nn.softmax(m, axis=-1)

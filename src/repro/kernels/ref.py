@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, t):
+    """q: (B, KV, G, hd); k, v: (B, KV, S, hd); slots <= t attend."""
+    B, KV, G, hd = q.shape
+    S = k.shape[2]
+    s = jnp.einsum("bkgh,bksh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(S)[None, None, None, :] <= t
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def gbdt_margins_ref(X, feature, threshold, value, *, n_classes: int = 3):
+    """Vectorised complete-tree traversal.  X: (B,F); tensors (T,N)."""
+    import math
+    X = X.astype(jnp.float32)
+    B = X.shape[0]
+    T, N = feature.shape
+    max_depth = int(math.log2(N + 1)) - 1
+    idx = jnp.zeros((T, B), jnp.int32)
+    tr = jnp.arange(T)[:, None]
+    for _ in range(max_depth):
+        f = feature[tr, idx]                     # (T, B)
+        is_leaf = f < 0
+        xi = X[jnp.arange(B)[None, :], jnp.maximum(f, 0)]
+        go_left = xi < threshold[tr, idx]
+        nxt = jnp.where(go_left, 2 * idx + 1, 2 * idx + 2)
+        idx = jnp.where(is_leaf, idx, nxt)
+    vals = value[tr, idx]                        # (T, B)
+    vals = vals.reshape(T // n_classes, n_classes, B)
+    return vals.sum(axis=0).T                    # (B, n_classes)

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) cell of the assignment
+matrix on the production meshes — (16,16) single-pod and (2,16,16) multi-pod
+— and derives the roofline terms (deliverable g) from the compiled artifacts.
+
+Per cell, TWO graphs are built:
+  * the PRODUCTION graph (layer-scan + remat + microbatching): this is what
+    must compile; memory_analysis() proves the per-device footprint, and its
+    HLO text provides collective bytes (while-trip multiplicity applied);
+  * a COST graph (layers unrolled, microbatches=1): XLA's cost analysis
+    counts while bodies once, so FLOPs/bytes are read from the unrolled
+    graph where they are exact.  Falls back to scan-corrected estimates for
+    stacks too deep to unroll.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  python -m repro.launch.dryrun --summarize
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPE_NAMES, get_config
+from repro.configs.base import SHAPES
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.frontends import batch_axes, input_specs
+from repro.models.model import LM
+from repro.sharding import use_mesh
+from repro.sharding.partition import tree_shardings
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import abstract_train_state, make_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Per-arch training knobs (memory iterations recorded in EXPERIMENTS.md §Perf)
+TRAIN_KNOBS = {
+    "llama4-maverick-400b-a17b": dict(microbatches=8, moment_dtype="bfloat16",
+                                      accum_dtype="bfloat16"),
+    "dbrx-132b": dict(microbatches=8, moment_dtype="bfloat16",
+                      accum_dtype="bfloat16"),
+    "llama-3.2-vision-90b": dict(microbatches=8, moment_dtype="bfloat16",
+                                 accum_dtype="bfloat16"),
+    "qwen3-32b": dict(microbatches=4),
+    "jamba-v0.1-52b": dict(microbatches=8, accum_dtype="bfloat16"),
+    "granite-8b": dict(microbatches=2),
+}
+MAX_UNROLL_LAYERS = 128
+
+
+def _knobs(arch: str) -> dict:
+    base = dict(microbatches=1, moment_dtype="float32",
+                accum_dtype="float32")
+    base.update(TRAIN_KNOBS.get(arch, {}))
+    return base
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, unroll: bool,
+               microbatches: int, moment_dtype: str, accum_dtype: str,
+               rules=None):
+    """Returns (jitted_fn, example_args) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    lm = LM(cfg)
+    b_specs = input_specs(cfg, shape)
+    b_sh = tree_shardings(b_specs, batch_axes(cfg, shape), mesh, rules)
+
+    if shape.kind == "train":
+        opt = OptConfig(moment_dtype=moment_dtype)
+        s_shapes, s_axes = abstract_train_state(cfg, opt)
+        s_sh = tree_shardings(s_shapes, s_axes, mesh, rules)
+        step = make_train_step(cfg, opt, microbatches=microbatches,
+                               accum_dtype=accum_dtype)
+        if unroll:
+            import repro.models.transformer as tfm
+            step = _with_unroll(step, cfg)
+        fn = jax.jit(step, in_shardings=(s_sh, b_sh),
+                     out_shardings=(s_sh, None), donate_argnums=(0,))
+        return fn, (s_shapes, b_specs)
+
+    p_shapes, p_axes = lm.abstract_params()
+    p_sh = tree_shardings(p_shapes, p_axes, mesh, rules)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return lm.prefill(params, batch)[0]
+        fn = prefill_fn if not unroll else _with_unroll(prefill_fn, cfg)
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        return jfn, (p_shapes, b_specs)
+
+    # decode: one new token against a seq_len KV cache (serve_step)
+    shape_cfg = SHAPES[shape_name]
+    c_shapes = jax.eval_shape(
+        lambda: lm.init_cache(shape_cfg.global_batch, shape_cfg.seq_len,
+                              t0=shape_cfg.seq_len - 1))
+    c_sh = tree_shardings(c_shapes, lm.cache_axes(), mesh, rules)
+
+    def serve_step(params, caches, batch):
+        return lm.decode_step(params, caches, batch)
+    fn = serve_step if not unroll else _with_unroll(serve_step, cfg)
+    jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                  out_shardings=(None, c_sh), donate_argnums=(1,))
+    return jfn, (p_shapes, c_shapes, b_specs)
+
+
+def _with_unroll(fn, cfg):
+    """Wrap fn so the layer scan is fully unrolled (cost graph)."""
+    import repro.models.transformer as tfm
+
+    def wrapped(*args):
+        old = tfm.SCAN_UNROLL["n"]
+        tfm.SCAN_UNROLL["n"] = cfg.pattern_repeats
+        try:
+            return fn(*args)
+        finally:
+            tfm.SCAN_UNROLL["n"] = old
+    return wrapped
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path, skip_cost: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    knobs = _knobs(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    # --- production graph ------------------------------------------------
+    with use_mesh(mesh):
+        fn, args = build_cell(arch, shape_name, mesh, unroll=False, **knobs)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    print(f"[{arch} {shape_name} {mesh_name}] memory_analysis: "
+          f"args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+          f"out={ma.output_size_in_bytes/2**30:.2f}GiB per device")
+    ca_raw = compiled.cost_analysis()
+    print(f"[{arch} {shape_name} {mesh_name}] cost_analysis(raw scan): "
+          f"flops={ca_raw.get('flops', 0.0):.3e} "
+          f"bytes={ca_raw.get('bytes accessed', 0.0):.3e}")
+    coll = rl.collective_bytes(compiled.as_text())
+    prod_compile_s = time.time() - t0
+
+    # --- cost graph (unrolled, mb=1) --------------------------------------
+    flops_source = "unrolled"
+    hlo_flops = hlo_bytes = None
+    if not skip_cost and cfg.num_layers <= MAX_UNROLL_LAYERS:
+        try:
+            with use_mesh(mesh):
+                cfn, cargs = build_cell(arch, shape_name, mesh, unroll=True,
+                                        **{**knobs, "microbatches": 1})
+                ccomp = cfn.lower(*cargs).compile()
+            cca = ccomp.cost_analysis()
+            hlo_flops = float(cca.get("flops", 0.0))
+            hlo_bytes = float(cca.get("bytes accessed", 0.0))
+        except Exception as e:  # fall back to scan correction
+            print(f"  cost graph failed ({type(e).__name__}); "
+                  "using scan-corrected estimate")
+    if hlo_flops is None:
+        flops_source = "scan-corrected"
+        mult = cfg.pattern_repeats * knobs["microbatches"]
+        hlo_flops = float(ca_raw.get("flops", 0.0)) * mult
+        hlo_bytes = float(ca_raw.get("bytes accessed", 0.0)) * mult
+
+    report = rl.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=mesh.size,
+        model_flops=rl.model_flops(cfg, shape),
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, coll_bytes=coll,
+        bytes_per_device={
+            "args": ma.argument_size_in_bytes,
+            "temp": ma.temp_size_in_bytes,
+            "out": ma.output_size_in_bytes,
+        },
+        flops_source=flops_source,
+        analytic_bytes_dev=rl.analytic_bytes(cfg, shape, mesh.size,
+                                             knobs["microbatches"]),
+    )
+    d = report.to_dict()
+    d["compile_s"] = prod_compile_s
+    d["knobs"] = knobs
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
+        json.dumps(d, indent=2))
+    print(f"[{arch} {shape_name} {mesh_name}] roofline: "
+          f"compute={report.compute_s*1e3:.2f}ms memory={report.memory_s*1e3:.2f}ms "
+          f"collective={report.collective_s*1e3:.2f}ms "
+          f"bottleneck={report.bottleneck} "
+          f"fraction={report.roofline_fraction:.3f} ({flops_source})")
+    return d
+
+
+def summarize(out_dir: pathlib.Path) -> str:
+    rows = []
+    for f in sorted(out_dir.glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    lines = ["| arch | shape | mesh | compute(ms) | memory(ms) | coll(ms) | "
+             "bottleneck | useful | roofline-frac | GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        gib = (r["bytes_per_device"]["args"] + r["bytes_per_device"]["temp"]
+               + r["bytes_per_device"]["out"]) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | {r['bottleneck']} | "
+            f"{r['usefulness']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{gib:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--summarize", action="store_true")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    if args.summarize:
+        print(summarize(out_dir))
+        return
+
+    archs = ARCH_NAMES if args.arch == "all" else (args.arch,)
+    shapes = SHAPE_NAMES if args.shape == "all" else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not cfg.supports_shape(shape_name):
+                print(f"[{arch} {shape_name}] SKIP (long_500k needs "
+                      "sub-quadratic attention; see DESIGN.md)")
+                continue
+            for multi_pod in meshes:
+                # roofline table is single-pod; multi-pod proves the pod axis
+                try:
+                    run_cell(arch, shape_name, multi_pod, out_dir,
+                             skip_cost=args.skip_cost or multi_pod)
+                except Exception:
+                    failures.append((arch, shape_name, multi_pod))
+                    traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete: all cells lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

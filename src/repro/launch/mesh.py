@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+
+Single pod:  (16, 16)    axes ("data", "model")   — 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+The "pod" axis composes with "data" for batch sharding (DP across pods;
+see sharding/rules.py "batch").  Pipeline parallelism over the pod axis is an
+opt-in training config (training/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist, as a (data, model) mesh — smoke tests, CPU."""
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_elastic_mesh(device_count: int, model_parallel: int = 16):
+    """Rebuild a mesh after losing nodes (elastic scaling path).
+
+    Keeps the model axis intact (TP sharding of weights must survive) and
+    shrinks the data axis to whatever is left: 512 -> 256 -> 128 ...
+    """
+    if device_count % model_parallel:
+        raise ValueError(
+            f"{device_count} devices not divisible by model={model_parallel}")
+    return jax.make_mesh((device_count // model_parallel, model_parallel),
+                         ("data", "model"),
+                         devices=jax.devices()[:device_count])

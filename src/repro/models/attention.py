@@ -1,0 +1,252 @@
+"""Attention: GQA/MQA self-attention (train/prefill/decode) and cross-attention.
+
+Training/prefill attention is a chunked streaming-softmax ("flash") pure-JAX
+implementation: memory is O(q_chunk * kv_chunk) per step instead of O(S^2),
+which is what lets the 32k-prefill and 4k-train cells fit — XLA does not do
+this fusion for you.  The Pallas kernels in repro/kernels mirror this
+computation for real-TPU deployment and are validated against it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dtype_of, init_dense, rmsnorm, rope
+from repro.sharding import constrain
+
+NEG_INF = -1e30
+
+# §Perf flags (launch/perf experiments flip these; defaults = baseline).
+# DECODE_CAST_F32: cast the whole KV cache to f32 before the decode einsums
+# (baseline) vs native-dtype einsums with f32 accumulation only.
+PERF = {"decode_cast_f32": True}
+
+
+def init_attention(cfg, key, cross: bool = False):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    params = {
+        "norm": jnp.ones((d,), dtype=dt),
+        "wq": init_dense(ks[0], d, cfg.attn_dim, dt),
+        "wk": init_dense(ks[1], d, cfg.kv_dim, dt),
+        "wv": init_dense(ks[2], d, cfg.kv_dim, dt),
+        "wo": init_dense(ks[3], cfg.attn_dim, d, dt, scale=cfg.attn_dim ** -0.5),
+    }
+    axes = {
+        "norm": ("embed",),
+        "wq": ("embed_w", "qkv"),
+        "wk": ("embed_w", "qkv"),
+        "wv": ("embed_w", "qkv"),
+        "wo": ("qkv", "embed_w"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((cfg.head_dim,), dtype=dt)
+        params["k_norm"] = jnp.ones((cfg.head_dim,), dtype=dt)
+        axes["q_norm"] = ("head_dim",)
+        axes["k_norm"] = ("head_dim",)
+    return params, axes
+
+
+def _project_qkv(cfg, p, x, positions, use_rope: bool = True):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    B, S, _ = x.shape
+    q = dense(x, p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = dense(x, p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(x, p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group(q, num_kv):
+    """(B,S,H,hd) -> (B,S,KV,G,hd) grouping query heads over KV heads."""
+    B, S, H, hd = q.shape
+    assert H % num_kv == 0, (H, num_kv)
+    return q.reshape(B, S, num_kv, H // num_kv, hd)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                    kv_offset: int = 0, q_chunk: int = 512, kv_chunk: int = 1024,
+                    kv_len=None):
+    """Chunked streaming-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); GQA via head grouping.
+    ``kv_len``: optional scalar — keys at absolute positions >= kv_len are
+    masked out (decode with a partially filled cache).
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nkv = -(-Skv // kv_chunk)
+    # pad to chunk multiples
+    q_pad, kv_pad = nq * q_chunk - Sq, nkv * kv_chunk - Skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+
+    # scan axes lead: (nq, B, q_chunk, KV, G, hd) / (nkv, B, kv_chunk, KV, hd)
+    # The chunk-index dim must stay UNSHARDED: left to propagation, GSPMD
+    # shards it across devices and then "involuntarily fully rematerializes"
+    # (replicates) every dynamic-slice in the scan.
+    qg = _group(q, KV).reshape(B, nq, q_chunk, KV, G, hd) \
+        .transpose(1, 0, 2, 3, 4, 5).astype(jnp.float32)
+    qg = constrain(qg, None, "batch", None, None, None, None)
+    kg = k.reshape(B, nkv, kv_chunk, KV, hd) \
+        .transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    kg = constrain(kg, None, "batch", None, None, None)
+    vg = v.reshape(B, nkv, kv_chunk, KV, hd) \
+        .transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vg = constrain(vg, None, "batch", None, None, None)
+
+    limit = Skv if kv_len is None else kv_len
+
+    # Nested remat: without it, the backward pass keeps every (q, kv) chunk's
+    # probability block alive simultaneously (~16 GB/device at train_4k).
+    # Checkpointing both scan bodies stores only the O(block) carries and
+    # recomputes the probabilities in the backward sweep — the flash-attention
+    # backward recurrence, expressed through jax.checkpoint.
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_step(_, qi):
+        qc, q_idx = qi  # qc: (B, qck, KV, G, hd)
+        q_pos = q_offset + q_idx * q_chunk + jnp.arange(q_chunk)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, k_idx = ki
+            k_pos = kv_offset + k_idx * kv_chunk + jnp.arange(kv_chunk)
+            # logits: (B, KV, G, qck, kck)
+            logits = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc) * scale
+            mask = k_pos[None, :] < limit
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kg, vg, jnp.arange(nkv)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,qck,hd)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qg, jnp.arange(nq)))
+    # outs: (nq, B, KV, G, qck, hd) -> (B, nq*qck, KV*G, hd)
+    outs = constrain(outs, None, "batch", None, None, None, None)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, t):
+    """Single-position attention over a KV cache.
+
+    q: (B, 1, H, hd); cache_k/v: (B, S, KV, hd); t: scalar — positions <= t
+    are attended (the current token's KV has been written at slot t).
+
+    With PERF["decode_cast_f32"]=False, the cache is consumed in its native
+    dtype with f32 accumulation inside the einsum — the f32 cache copies
+    (2x cache bytes per layer per token) disappear from the HBM stream.
+    """
+    B, _, H, hd = q.shape
+    S, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    if PERF["decode_cast_f32"]:
+        qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+        k_in, v_in = cache_k.astype(jnp.float32), cache_v.astype(jnp.float32)
+    else:
+        qg = q.reshape(B, KV, G, hd)
+        k_in, v_in = cache_k, cache_v
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k_in,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.arange(S)[None, None, None, :] <= t
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(v_in.dtype), v_in,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention block (pre-norm, residual)
+# ---------------------------------------------------------------------------
+
+def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
+    """Returns (x_out, new_cache).
+
+    mode "train": full causal attention, no cache returned.
+    mode "prefill": causal attention; returns {"k","v","t"} cache.
+    mode "decode": x is (B,1,D); reads/writes cache at slot cache["t"].
+    """
+    B = x.shape[0]
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    if mode in ("train", "prefill"):
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        q, k, v = _project_qkv(cfg, p, h, positions)
+        q = constrain(q, "batch", "seq", "heads", "head_dim")
+        out = flash_attention(q, k, v, causal=True)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v, "t": jnp.asarray(S, jnp.int32)}
+    else:  # decode
+        t = cache["t"]  # scalar int32: index of the slot to write
+        positions = jnp.full((1,), t, jnp.int32)
+        q, k, v = _project_qkv(cfg, p, h, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), t, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), t, axis=1)
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        out = decode_attention(q, ck, cv, t)
+        new_cache = {"k": ck, "v": cv, "t": t + 1}
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = out.reshape(B, -1, cfg.attn_dim)
+    return x + dense(out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention block (VLM): queries from text, KV from image embeddings
+# ---------------------------------------------------------------------------
+
+def xattn_block(cfg, p, x, *, mode: str, image_embeds=None, cache=None):
+    """image_embeds: (B, T_img, D).  Cache holds projected image KV."""
+    B = x.shape[0]
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = dense(h, p["wq"]).reshape(B, -1, cfg.num_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if cache is not None and "k" in cache and mode == "decode":
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        assert image_embeds is not None, "xattn needs image embeddings"
+        k = dense(image_embeds, p["wk"]).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+        v = dense(image_embeds, p["wv"]).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        new_cache = {"k": k, "v": v} if mode in ("prefill", "decode") else None
+    out = flash_attention(q, k, v, causal=False)
+    out = out.reshape(B, -1, cfg.attn_dim)
+    return x + dense(out, p["wo"]), new_cache

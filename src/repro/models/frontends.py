@@ -1,0 +1,81 @@
+"""Modality frontends (stubs) and input spec construction.
+
+Per the assignment, [vlm]/[audio] entries specify the transformer BACKBONE
+only; the modality frontend is a STUB — ``input_specs()`` provides
+precomputed patch/frame embeddings as ``ShapeDtypeStruct`` stand-ins (dry-run)
+or random arrays (smoke tests / examples).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeConfig):
+    """Logical sharding axes per batch entry (same keys as input_specs)."""
+    axes = {}
+    if shape.kind == "train":
+        if cfg.audio_frontend:
+            axes["frames"] = ("batch", "seq", "embed")
+        else:
+            axes["tokens"] = ("batch", "seq")
+        axes["labels"] = ("batch", "seq")
+    elif shape.kind == "prefill":
+        if cfg.audio_frontend:
+            axes["frames"] = ("batch", "seq", "embed")
+        else:
+            axes["tokens"] = ("batch", "seq")
+    else:  # decode: one new token
+        if cfg.audio_frontend:
+            axes["frames"] = ("batch", "seq", "embed")
+        else:
+            axes["tokens"] = ("batch", "seq")
+    if cfg.num_image_tokens:
+        axes["image_embeds"] = ("batch", "image_seq", "embed")
+    return axes
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    decode-kind shapes describe ONE new token (the KV cache of seq_len is a
+    separate argument produced by ``LM.init_cache`` / ``cache_specs``).
+    """
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    dt = jnp.dtype(cfg.dtype)
+    f = jax.ShapeDtypeStruct
+    specs = {}
+    if cfg.audio_frontend:
+        specs["frames"] = f((B, S, cfg.d_model), dt)
+    else:
+        specs["tokens"] = f((B, S), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = f((B, S), jnp.int32)
+    if cfg.num_image_tokens:
+        specs["image_embeds"] = f((B, cfg.num_image_tokens, cfg.d_model), dt)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key=None, batch_size=None,
+               seq_len=None):
+    """Concrete random batch matching input_specs (smoke tests, examples)."""
+    key = key if key is not None else jax.random.key(0)
+    B = batch_size or shape.global_batch
+    S = seq_len or (shape.seq_len if shape.kind != "decode" else 1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    batch = {}
+    if cfg.audio_frontend:
+        batch["frames"] = jax.random.normal(k1, (B, S, cfg.d_model)).astype(dt)
+    else:
+        batch["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    if shape.kind == "train":
+        batch["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            k3, (B, cfg.num_image_tokens, cfg.d_model)).astype(dt)
+    return batch

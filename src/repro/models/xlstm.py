@@ -1,0 +1,259 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation (arXiv:2405.04517 targets fused CUDA kernels):
+
+* mLSTM — exponential-gated linear attention with a matrix state C (hd x hd
+  per head).  Training/prefill uses the *chunkwise-parallel* form: recurrence
+  across chunks (``lax.scan`` carry = (C, n, m) state), quadratic
+  intra-chunk attention with log-space gate-decay weights.  This keeps MXU
+  utilisation high (chunk-sized matmuls) with O(S/chunk) sequential depth.
+  Decode is the exact sequential recurrence — O(1) state per token, which is
+  why xlstm runs the long_500k cell.
+* sLSTM — per-channel scalar memory with block-diagonal (per-head) recurrent
+  gate matrices.  Inherently sequential (the normalizer recurrence forbids a
+  parallel form); we precompute all input-side gate projections in parallel
+  and scan only the tiny recurrent update.
+
+Both use the max-stabilizer trick from the paper: gates live in log space,
+states carry a running max ``m``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dtype_of, init_dense, rmsnorm
+from repro.sharding import constrain
+
+MLSTM_CHUNK = 256
+
+
+def _logsig(x):
+    return jax.nn.log_sigmoid(x)
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def init_mlstm(cfg, key):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    d, ad, H = cfg.d_model, cfg.attn_dim, cfg.num_heads
+    params = {
+        "norm": jnp.ones((d,), dtype=dt),
+        "wq": init_dense(ks[0], d, ad, dt),
+        "wk": init_dense(ks[1], d, ad, dt),
+        "wv": init_dense(ks[2], d, ad, dt),
+        "wi": init_dense(ks[3], d, H, jnp.float32),
+        "wf": init_dense(ks[4], d, H, jnp.float32),
+        "wo_out": init_dense(ks[5], ad, d, dt, scale=ad ** -0.5),
+        "norm2": jnp.ones((d,), dtype=dt),
+        "up": init_dense(ks[6], d, d, dt),
+        "down": init_dense(ks[7], d, d, dt),
+    }
+    axes = {
+        "norm": ("embed",), "norm2": ("embed",),
+        "wq": ("embed_w", "qkv"), "wk": ("embed_w", "qkv"),
+        "wv": ("embed_w", "qkv"),
+        "wi": ("embed_w", "heads"), "wf": ("embed_w", "heads"),
+        "wo_out": ("qkv", "embed_w"),
+        "up": ("embed_w", "mlp"), "down": ("mlp", "embed_w"),
+    }
+    return params, axes
+
+
+def _mlstm_qkvif(cfg, p, h):
+    B, S, _ = h.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = dense(h, p["wq"]).reshape(B, S, H, hd).astype(jnp.float32) * hd ** -0.5
+    k = dense(h, p["wk"]).reshape(B, S, H, hd).astype(jnp.float32) * hd ** -0.5
+    v = dense(h, p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    i_pre = jnp.matmul(h.astype(jnp.float32), p["wi"])  # (B,S,H)
+    f_pre = jnp.matmul(h.astype(jnp.float32), p["wf"])
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, state=None, chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,hd) f32; i_pre,f_pre: (B,S,H).
+    state: optional (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    Returns (out (B,S,H,hd), state).
+    """
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        zf = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zf) for a in (q, k, v))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+    L = chunk
+    nc = (S + pad) // L
+
+    def csplit(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    qc, kc, vc = csplit(q), csplit(k), csplit(v)  # (nc,B,L,H,hd)
+    ic, fc = csplit(i_pre), csplit(f_pre)         # (nc,B,L,H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, xs):
+        C, n, m = carry
+        qq, kk, vv, ii, ff = xs  # (B,L,H,hd) / (B,L,H)
+        logf = _logsig(ff)                         # (B,L,H)
+        F = jnp.cumsum(logf, axis=1)               # inclusive
+        # intra-chunk log weights w[t,s] = F_t - F_s + i_s  for s <= t
+        w = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :]  # (B,t,s,H)
+        tmask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        w = jnp.where(tmask, w, -1e30)
+        m_intra = w.max(axis=2)                    # (B,L,H)
+        m_inter = F + m[:, None, :]                # (B,L,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+        # intra attention
+        logits = jnp.einsum("blhd,bshd->blsh", qq, kk)
+        wexp = jnp.exp(w - m_t[:, :, None, :])
+        num = jnp.einsum("blsh,bshd->blhd", logits * wexp, vv)
+        den = jnp.einsum("blsh->blh", logits * wexp)
+        # inter (carry) contribution
+        scale_in = jnp.exp(m_inter - m_t)          # (B,L,H)
+        num = num + scale_in[..., None] * jnp.einsum("blhd,bhde->blhe", qq, C)
+        den = den + scale_in * jnp.einsum("blhd,bhd->blh", qq, n)
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        FL = F[:, -1:, :]                          # (B,1,H)
+        m_state = jnp.maximum(FL[:, 0] + m, (FL - F + ii).max(axis=1))
+        sw = jnp.exp(FL - F + ii - m_state[:, None, :])   # (B,L,H)
+        C_new = jnp.exp(FL[:, 0] + m - m_state)[..., None, None] * C + \
+            jnp.einsum("blh,blhd,blhe->bhde", sw, kk, vv)
+        n_new = jnp.exp(FL[:, 0] + m - m_state)[..., None] * n + \
+            jnp.einsum("blh,blhd->bhd", sw, kk)
+        return (C_new, n_new, m_state), out
+
+    state_f, outs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H, hd)[:, :S]
+    return out, state_f
+
+
+def mlstm_step(q, k, v, i_pre, f_pre, state):
+    """Exact sequential mLSTM for one token.  q,k,v: (B,1,H,hd)."""
+    C, n, m = state
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]        # (B,H,hd)
+    logf = _logsig(f_pre[:, 0])                   # (B,H)
+    i1 = i_pre[:, 0]
+    m_new = jnp.maximum(logf + m, i1)
+    fprime = jnp.exp(logf + m - m_new)
+    iprime = jnp.exp(i1 - m_new)
+    C_new = fprime[..., None, None] * C + iprime[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k1, v1)
+    n_new = fprime[..., None] * n + iprime[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q1, n_new)
+    out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return out[:, None], (C_new, n_new, m_new)
+
+
+def mlstm_block(cfg, p, x, *, mode: str, cache=None):
+    B = x.shape[0]
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, h)
+    if mode == "train":
+        out, _ = mlstm_chunked(q, k, v, i_pre, f_pre)
+        new_cache = None
+    elif mode == "prefill":
+        out, st = mlstm_chunked(q, k, v, i_pre, f_pre)
+        new_cache = {"C": st[0], "n": st[1], "m": st[2]}
+    else:
+        st = (cache["C"], cache["n"], cache["m"])
+        out, st = mlstm_step(q, k, v, i_pre, f_pre, st)
+        new_cache = {"C": st[0], "n": st[1], "m": st[2]}
+    out = out.reshape(B, -1, cfg.attn_dim).astype(x.dtype)
+    x = x + dense(out, p["wo_out"])
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    return x + dense(jax.nn.gelu(dense(h2, p["up"])), p["down"]), new_cache
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def init_slstm(cfg, key):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    d, ad, H, hd = cfg.d_model, cfg.attn_dim, cfg.num_heads, cfg.head_dim
+    params = {
+        "norm": jnp.ones((d,), dtype=dt),
+        "w_gates": init_dense(ks[0], d, 4 * ad, jnp.float32),  # z,i,f,o
+        "r_gates": (jax.random.normal(ks[1], (4, H, hd, hd)) * hd ** -0.5
+                    ).astype(jnp.float32),
+        "b_gates": jnp.zeros((4, ad), jnp.float32),
+        "wo_out": init_dense(ks[2], ad, d, dt, scale=ad ** -0.5),
+        "norm2": jnp.ones((d,), dtype=dt),
+        "up": init_dense(ks[3], d, d, dt),
+        "down": init_dense(ks[4], d, d, dt),
+    }
+    axes = {
+        "norm": ("embed",), "norm2": ("embed",),
+        "w_gates": ("embed_w", "qkv"),
+        "r_gates": (None, "heads", "head_dim", "head_dim"),
+        "b_gates": (None, "qkv"),
+        "wo_out": ("qkv", "embed_w"),
+        "up": ("embed_w", "mlp"), "down": ("mlp", "embed_w"),
+    }
+    return params, axes
+
+
+def _slstm_cell(p, wx_t, state):
+    """One sLSTM step.  wx_t: (B,4,H,hd) precomputed input projections."""
+    c, n, h, m = state                            # each (B,H,hd)
+    rec = jnp.einsum("bhd,ghde->bghe", h, p["r_gates"])  # (B,4,H,hd)
+    H, hd = h.shape[1], h.shape[2]
+    pre = wx_t + rec + p["b_gates"].reshape(1, 4, H, hd)
+    z = jnp.tanh(pre[:, 0])
+    i_pre, f_pre, o_pre = pre[:, 1], pre[:, 2], pre[:, 3]
+    logf = _logsig(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    iprime = jnp.exp(i_pre - m_new)
+    fprime = jnp.exp(logf + m - m_new)
+    c_new = fprime * c + iprime * z
+    n_new = fprime * n + iprime
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(cfg, p, x, *, mode: str, cache=None):
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    hin = rmsnorm(x, p["norm"], cfg.norm_eps)
+    wx = jnp.matmul(hin.astype(jnp.float32), p["w_gates"])  # (B,S,4*ad)
+    wx = wx.reshape(B, S, 4, H, hd)
+
+    if mode == "decode" and cache is not None:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((B, H, hd), -1e30, jnp.float32))
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(st, wx_t):
+        return _slstm_cell(p, wx_t, st)
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3, 4))
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, cfg.attn_dim).astype(x.dtype)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+    x = x + dense(out, p["wo_out"])
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    return x + dense(jax.nn.gelu(dense(h2, p["up"])), p["down"]), new_cache

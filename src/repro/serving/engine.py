@@ -1,0 +1,91 @@
+"""Replica engine: the serial backend behind the admission layer.
+
+Two execution modes share one interface:
+
+* ``RealEngine`` — jitted prefill + greedy decode of an actual LM (used by
+  the examples and integration tests with reduced configs on CPU; on TPU the
+  same class serves full configs with the Pallas decode kernels swapped in
+  via kernels/ops.py);
+* ``SimEngine`` — virtual-clock engine using a ServiceTimeModel (used by the
+  queueing benchmarks, where thousands of requests are served).
+
+Both are strictly serial: one request in flight per replica — the regime the
+paper targets (§2.3).  Disconnect semantics per §3.4: cancellation while
+queued removes the heap entry (lazy); cancellation mid-generation drains the
+response to free the dispatch slot.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serving.service_time import ServiceTimeModel
+
+
+class SimEngine:
+    """Virtual-time serial backend."""
+
+    def __init__(self, model: ServiceTimeModel, replica_id: int = 0):
+        self.model = model
+        self.replica_id = replica_id
+        self.busy_until = 0.0
+        self.served = 0
+
+    def execute(self, start: float, prompt_tokens: int,
+                output_tokens: int) -> tuple[float, float]:
+        """Returns (ttft_s, service_s); advances the virtual clock."""
+        service = self.model.service(prompt_tokens, output_tokens)
+        ttft = self.model.overhead_s + prompt_tokens / self.model.prefill_tok_per_s
+        self.busy_until = start + service
+        self.served += 1
+        return ttft, service
+
+
+class RealEngine:
+    """Actual LM decode on device (reduced configs on this CPU container)."""
+
+    def __init__(self, cfg, params=None, replica_id: int = 0, seed: int = 0,
+                 max_len: int = 256):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.model import LM
+
+        self.cfg = cfg
+        self.lm = LM(cfg)
+        self.replica_id = replica_id
+        self.max_len = max_len
+        self.params = params if params is not None \
+            else self.lm.init(jax.random.key(seed))
+        self.busy_until = 0.0
+        self.served = 0
+
+        self._prefill = jax.jit(lambda p, b: self.lm.prefill(p, b,
+                                                             pad_to=max_len))
+        self._decode = jax.jit(self.lm.decode_step)
+
+    def generate(self, prompt_ids: np.ndarray, max_new_tokens: int = 32,
+                 eos_id: Optional[int] = None) -> dict:
+        """Greedy decode.  prompt_ids: (S,) ints.  Returns timing + tokens."""
+        import jax.numpy as jnp
+        t0 = time.monotonic()
+        batch = {"tokens": jnp.asarray(prompt_ids, jnp.int32)[None]}
+        logits, caches = self._prefill(self.params, batch)
+        tok = int(np.argmax(np.asarray(logits)[0]))
+        ttft = time.monotonic() - t0
+        out = [tok]
+        for _ in range(max_new_tokens - 1):
+            if eos_id is not None and tok == eos_id:
+                break
+            if len(prompt_ids) + len(out) >= self.max_len:
+                break
+            logits, caches = self._decode(
+                self.params, caches, {"tokens": jnp.full((1, 1), tok, jnp.int32)})
+            tok = int(np.argmax(np.asarray(logits)[0]))
+            out.append(tok)
+        self.served += 1
+        return {"tokens": out, "ttft_s": ttft,
+                "service_s": time.monotonic() - t0}

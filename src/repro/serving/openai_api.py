@@ -1,0 +1,43 @@
+"""OpenAI-compatible request/response dataclasses (the sidecar's wire shapes).
+
+The paper's proxy intercepts /v1/chat/completions-style requests; here the
+transport is in-process (the framework serves from the same binary), but the
+schema is preserved so an HTTP front-end is a thin adapter.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+_ids = itertools.count(1)
+
+
+@dataclass
+class CompletionRequest:
+    prompt: str
+    max_tokens: int = 1024
+    model: str = "default"
+    tenant: str = "default"
+    stream: bool = False
+    request_id: int = field(default_factory=lambda: next(_ids))
+    created: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class CompletionResponse:
+    request_id: int
+    text: str
+    tokens_generated: int
+    queue_wait_s: float
+    service_s: float
+    ttft_s: Optional[float] = None      # time to first token
+    promoted: bool = False              # starvation-guard promotion
+    replica: int = 0
+    p_long: float = 0.0
+
+    @property
+    def sojourn_s(self) -> float:
+        return self.queue_wait_s + self.service_s

@@ -1,0 +1,120 @@
+"""The Clairvoyant sidecar: features -> predictor -> SJF queue -> engine.
+
+This is the paper's Figure 2 as framework code.  ``ClairvoyantServer``
+fronts N replica engines; each replica is a serial backend with its own
+SJFQueue (+ starvation guard).  The multi-replica case routes by predicted
+work (core/router.py, beyond paper).  Policies: "fcfs" | "sjf" |
+"sjf_oracle" — the benchmark ablation is one constructor argument.
+
+The virtual-clock drain loop is event-driven: at every dispatch decision the
+queue applies the starvation check, exactly like the Go dispatcher goroutine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.predictor import Predictor
+from repro.core.router import PredictiveRouter
+from repro.core.scheduler import Request, SJFQueue
+from repro.serving.engine import SimEngine
+from repro.serving.openai_api import CompletionRequest, CompletionResponse
+from repro.serving.service_time import ServiceTimeModel, sample_output_tokens
+from repro.data.tokenizer import approx_token_len
+
+
+class ClairvoyantServer:
+    def __init__(self, *, policy: str = "sjf", tau: Optional[float] = None,
+                 n_replicas: int = 1,
+                 predictor: Optional[Predictor] = None,
+                 service_model: Optional[ServiceTimeModel] = None,
+                 seed: int = 0):
+        self.policy = policy
+        self.predictor = predictor
+        self.rng = np.random.default_rng(seed)
+        self.service_model = service_model or ServiceTimeModel(
+            prefill_tok_per_s=8000.0, decode_tok_per_s=60.0)
+        self.engines = [SimEngine(self.service_model, i)
+                        for i in range(n_replicas)]
+        self.router = PredictiveRouter(n_replicas, policy=policy, tau=tau)
+        self._inflight: Dict[int, CompletionRequest] = {}
+        self._oracle_tokens: Dict[int, int] = {}
+        self.responses: List[CompletionResponse] = []
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: CompletionRequest, *, arrival: float = 0.0,
+               true_output_tokens: Optional[int] = None,
+               klass: str = "") -> int:
+        """Admit one request.  ``true_output_tokens`` is the oracle ground
+        truth (known to the simulator, NOT the scheduler unless policy is
+        sjf_oracle)."""
+        if true_output_tokens is None:
+            true_output_tokens = sample_output_tokens(
+                self.rng, klass or "short")
+        prompt_toks = approx_token_len(req.prompt)
+        p_long = 0.0
+        proba = None
+        if self.predictor is not None and self.policy == "sjf":
+            proba = self.predictor.proba_batch([req.prompt])[0]
+            p_long = float(proba[2])
+        r = Request(req_id=req.request_id, prompt=req.prompt, arrival=arrival,
+                    p_long=p_long, klass=klass,
+                    true_service=self.service_model.service(
+                        prompt_toks, true_output_tokens),
+                    tenant=req.tenant,
+                    meta={"prompt_tokens": prompt_toks,
+                          "output_tokens": true_output_tokens})
+        self._inflight[req.request_id] = req
+        self._oracle_tokens[req.request_id] = true_output_tokens
+        return self.router.route(r, proba=proba, now=arrival)
+
+    def cancel(self, request_id: int) -> bool:
+        """Client disconnect: lazy-delete from whichever queue holds it."""
+        for rep in self.router.replicas:
+            if rep.queue.cancel(request_id):
+                self._inflight.pop(request_id, None)
+                return True
+        return False
+
+    def drain(self) -> List[CompletionResponse]:
+        """Run every replica's serial loop to completion (virtual time)."""
+        for rep, eng in zip(self.router.replicas, self.engines):
+            t = eng.busy_until
+            while True:
+                req = rep.queue.pop(now=t)
+                if req is None:
+                    break
+                t = max(t, req.arrival)
+                ttft, service = eng.execute(
+                    t, req.meta["prompt_tokens"], req.meta["output_tokens"])
+                req.start, req.finish = t, t + service
+                t += service
+                self.router.on_dispatch(rep.replica_id, req, t,
+                                        service_estimate=service)
+                self.responses.append(CompletionResponse(
+                    request_id=req.req_id, text="",
+                    tokens_generated=req.meta["output_tokens"],
+                    queue_wait_s=req.start - req.arrival,
+                    service_s=service, ttft_s=req.start - req.arrival + ttft,
+                    promoted=req.promoted, replica=rep.replica_id,
+                    p_long=req.p_long))
+        return self.responses
+
+    # ---------------------------------------------------------------- stats
+    def percentile(self, q: float, klass: Optional[str] = None,
+                   attr: str = "sojourn_s") -> float:
+        vals = [getattr(r, attr) for r in self.responses
+                if klass is None or self._klass_of(r) == klass]
+        return float(np.percentile(vals, q)) if vals else float("nan")
+
+    def _klass_of(self, resp: CompletionResponse) -> str:
+        toks = resp.tokens_generated
+        return "short" if toks < 200 else ("medium" if toks < 800 else "long")
+
+    @property
+    def promotions(self) -> int:
+        return sum(rep.queue.stats["promotions"]
+                   for rep in self.router.replicas)

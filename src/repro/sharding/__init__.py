@@ -1,0 +1,62 @@
+"""Sharding context + activation-constraint hook used throughout the models.
+
+The launcher activates a mesh with :func:`use_mesh`; model code calls
+:func:`constrain` on activations with logical axis names.  Outside a mesh
+context (CPU smoke tests, single device) ``constrain`` is the identity, so the
+same model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Tuple
+
+import jax
+
+from repro.sharding.rules import DEFAULT_RULES, sharding_for, spec_for
+
+_state = threading.local()
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def current_rules():
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, rules: Optional[Mapping[str, Tuple[str, ...]]] = None):
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", DEFAULT_RULES)
+    _state.mesh = mesh
+    _state.rules = rules if rules is not None else DEFAULT_RULES
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules
+
+
+def constrain(x, *axes: Optional[str]):
+    """Constrain activation ``x`` to the logical axes under the active mesh."""
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"constrain: {len(axes)} axes for rank-{x.ndim} tensor")
+    sh = sharding_for(x.shape, axes, mesh, current_rules())
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+__all__ = [
+    "use_mesh",
+    "constrain",
+    "current_mesh",
+    "current_rules",
+    "spec_for",
+    "sharding_for",
+    "DEFAULT_RULES",
+]

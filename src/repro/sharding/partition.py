@@ -1,0 +1,28 @@
+"""Resolve logical-axis annotations to concrete shardings for whole pytrees."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.sharding.rules import spec_for
+
+
+def tree_specs(shapes: Any, axes: Any, mesh: Mesh, rules=None):
+    """PartitionSpec tree: ``shapes`` leaves are arrays/ShapeDtypeStructs,
+    ``axes`` carries matching tuples of logical axis names."""
+    return jax.tree.map(
+        lambda s, a: spec_for(s.shape, a, mesh, rules), shapes, axes,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def tree_shardings(shapes: Any, axes: Any, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, spec_for(s.shape, a, mesh, rules)),
+        shapes, axes, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PartitionSpec())

@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Tensors in the model code are annotated with *logical* axis names
+("batch", "heads", "mlp", ...).  A rules table maps each logical axis to a
+mesh-axis tuple.  ``spec_for`` resolves annotations to a concrete
+``PartitionSpec`` given actual dimension sizes, degrading gracefully:
+
+* a logical axis whose dimension is not divisible by the mapped mesh axes is
+  left unsharded (the fallback that lets e.g. 15-head smollm and batch=1
+  long-context decode compile on a fixed 16x16 mesh);
+* composite mappings like ("pod", "data") drop trailing mesh axes until the
+  product divides the dimension;
+* a mesh axis may be consumed at most once per tensor (PartitionSpec rule) —
+  first annotation wins, later ones fall back to None.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis -> preferred mesh axes (in priority order; composite tuples
+# shard one dimension over several mesh axes)
+DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # replicated by default (activations)
+    # Sequence parallelism for the inter-block residual stream: the scanned
+    # carry is saved once per layer for the backward pass, so leaving it
+    # replicated across the model axis costs layers x (B,S,D) per device
+    # (55 GiB/device on granite@train_4k).  Sharding the sequence dim over
+    # "model" between blocks (Megatron SP) cuts that 16x; GSPMD inserts the
+    # all-gather before QKV and the reduce-scatter after the block.
+    "seq_sp": ("model",),
+    "kv_seq": ("model",),      # decode-time KV cache sequence dim (SP)
+    "embed": (),               # activation d_model stays replicated across TP
+    # weight d_model dim: FSDP-sharded over the data axis — combined with the
+    # "model"-axis TP split this is 2D (FSDP x TP) weight sharding, without
+    # which 400B-class params cannot fit 16 GB/chip (50 GB/chip at TP-16).
+    "embed_w": ("data",),
+    "heads": ("model",),
+    "kv_heads": (),            # usually too few to shard 16-way; see kv_seq
+    "head_dim": (),
+    "qkv": ("model",),         # flattened heads*head_dim projection dim
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    # MoE dispatch groups: fully local per device (sort/pack never cross a
+    # device); the group->expert reshard is the canonical MoE all-to-all.
+    "moe_groups": ("pod", "data", "model"),
+    "expert_mlp": (),          # per-expert ff dim: experts already claim model
+    "cap": (),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "conv": (),
+    "image_seq": (),
+}
+
+
+# Serving rule-set (§Perf): small models replicate weights across the data
+# axis (no per-token FSDP regather on the decode path); the model axis keeps
+# TP.  Used by the decode-cell perf experiments and launch/serve.
+SERVING_RULES = dict(DEFAULT_RULES)
+SERVING_RULES["embed_w"] = ()
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Mapping[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def is_axes_leaf(x) -> bool:
+    """True for a tuple of logical-axis names (str/None) — an annotation leaf.
+    Distinguishes ('embed_w', 'qkv') from structural tuples of subtrees."""
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def resolve_axis(
+    logical: Optional[str],
+    dim: int,
+    mesh: Mesh,
+    rules: Mapping[str, Tuple[str, ...]],
+    used: set,
+) -> Optional[Tuple[str, ...]]:
+    """Resolve one logical axis to mesh axes (or None), respecting divisibility."""
+    if logical is None:
+        return None
+    mapped = rules.get(logical, ())
+    sizes = _mesh_axis_sizes(mesh)
+    # keep only axes present in this mesh and not already used in this spec
+    avail = [a for a in mapped if a in sizes and a not in used]
+    # drop trailing axes until the product divides the dimension
+    while avail:
+        prod = 1
+        for a in avail:
+            prod *= sizes[a]
+        if prod > 0 and dim % prod == 0 and prod > 1:
+            for a in avail:
+                used.add(a)
+            return tuple(avail)
+        avail.pop()
+    return None
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, Tuple[str, ...]]] = None,
+) -> PartitionSpec:
+    rules = DEFAULT_RULES if rules is None else rules
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        resolved = resolve_axis(logical, dim, mesh, rules, used)
+        if resolved is None:
+            parts.append(None)
+        elif len(resolved) == 1:
+            parts.append(resolved[0])
+        else:
+            parts.append(resolved)
+    # trim trailing Nones (canonical form)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def sharding_for(shape, axes, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))

@@ -1,0 +1,175 @@
+"""Sharded checkpointing with atomic commits and elastic restore.
+
+Layout (one directory per step):
+
+    ckpt_root/
+      step_000420.tmp.<nonce>/   # written here first
+      step_000420/               # atomic rename after fsync
+        manifest.msgpack         # treedef, shapes, dtypes, crc32 digests
+        leaf_00000.npy ...       # one file per pytree leaf
+
+Design points for 1000+ nodes:
+* atomic tmp+rename commit — a crash mid-save never corrupts the latest
+  checkpoint; ``latest_step`` only believes committed directories;
+* integrity digests (crc32 per leaf) verified on restore;
+* restore is *resharding*: arrays are loaded host-side and ``device_put``
+  against whatever mesh/sharding the caller provides — the elastic path
+  (512 -> 256 chips) is just a restore with a different mesh;
+* async save: ``AsyncCheckpointer`` snapshots to host memory synchronously
+  (cheap) and writes in a background thread, overlapping I/O with the next
+  training steps — the paper-trail for "checkpoint/restart" fault tolerance;
+* bounded retention (keep_last) so disks on long runs don't fill.
+
+In a real multi-host deployment each host writes only its addressable
+shards; on this single-process container the full array is written.  The
+manifest format carries per-leaf shape/dtype so that change is local.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import shutil
+import threading
+import time
+import uuid
+import zlib
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+MANIFEST = "manifest.msgpack"
+
+
+def _leaf_name(i: int) -> str:
+    return f"leaf_{i:05d}.npy"
+
+
+def save(state: Any, root: str | os.PathLike, step: int,
+         keep_last: Optional[int] = None) -> pathlib.Path:
+    root = pathlib.Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:06d}"
+    tmp = root / f"step_{step:06d}.tmp.{uuid.uuid4().hex[:8]}"
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = jax.tree.flatten(state)
+    digests = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        path = tmp / _leaf_name(i)
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        digests.append(zlib.crc32(arr.tobytes()))
+
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "digests": digests,
+        "time": time.time(),
+    }
+    mpath = tmp / MANIFEST
+    with open(mpath, "wb") as f:
+        f.write(msgpack.packb(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+
+    if keep_last:
+        steps = sorted(all_steps(root))
+        for s in steps[:-keep_last]:
+            shutil.rmtree(root / f"step_{s:06d}", ignore_errors=True)
+    return final
+
+
+def all_steps(root: str | os.PathLike) -> list[int]:
+    root = pathlib.Path(root)
+    out = []
+    for d in root.glob("step_*"):
+        if d.is_dir() and ".tmp." not in d.name and (d / MANIFEST).exists():
+            out.append(int(d.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(root: str | os.PathLike) -> Optional[int]:
+    steps = all_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore(template: Any, root: str | os.PathLike, step: Optional[int] = None,
+            shardings: Any = None, verify: bool = True) -> Any:
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional pytree of NamedShardings (same structure) — each
+    leaf is device_put with its sharding, which is also the elastic-remesh
+    path.  Without it, arrays go to the default device.
+    """
+    root = pathlib.Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = root / f"step_{step:06d}"
+    manifest = msgpack.unpackb((d / MANIFEST).read_bytes())
+
+    _, treedef = jax.tree.flatten(template)
+    if manifest["num_leaves"] != treedef.num_leaves:
+        raise ValueError(
+            f"checkpoint has {manifest['num_leaves']} leaves; "
+            f"template has {treedef.num_leaves}")
+
+    sh_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "device_set"))
+        if shardings is not None else [None] * manifest["num_leaves"])
+
+    leaves = []
+    for i in range(manifest["num_leaves"]):
+        arr = np.load(d / _leaf_name(i))
+        if verify and zlib.crc32(arr.tobytes()) != manifest["digests"][i]:
+            raise IOError(f"checkpoint leaf {i} failed integrity check")
+        if sh_leaves[i] is not None:
+            leaves.append(jax.device_put(arr, sh_leaves[i]))
+        else:
+            leaves.append(jax.device_put(arr))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write asynchronously (overlaps with compute)."""
+
+    def __init__(self, root: str | os.PathLike, keep_last: int = 3):
+        self.root = pathlib.Path(root)
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, state: Any, step: int) -> None:
+        self.wait()  # one outstanding save at a time
+        host_state = jax.tree.map(lambda l: np.asarray(l), state)
+
+        def _run():
+            try:
+                save(host_state, self.root, step, keep_last=self.keep_last)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

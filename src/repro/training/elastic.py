@@ -1,0 +1,50 @@
+"""Elastic scaling: survive node loss by re-meshing and resuming.
+
+Flow on failure (orchestrated by launch/train.py):
+  1. detect reduced device count (heartbeat timeout / restart with fewer hosts)
+  2. ``make_elastic_mesh(n_remaining)`` — keep the model axis intact (TP
+     shards of the weights must stay complete), shrink the data axis
+  3. ``restore`` the latest checkpoint against shardings resolved on the new
+     mesh (checkpoint.py restore IS the reshard)
+  4. rescale per-host batch or raise microbatch count so the GLOBAL batch is
+     preserved, and continue from the recorded data step (the synthetic
+     stream is a pure function of (seed, step, host) — no replay log needed)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+
+from repro.launch.mesh import make_elastic_mesh
+from repro.sharding.partition import tree_shardings
+from repro.training import checkpoint as ckpt
+
+
+@dataclass
+class ElasticPlan:
+    mesh: Any
+    data_parallel: int
+    microbatch_scale: int   # multiply microbatches by this to keep global batch
+
+
+def plan_remesh(device_count: int, model_parallel: int,
+                old_data_parallel: int) -> ElasticPlan:
+    mesh = make_elastic_mesh(device_count, model_parallel)
+    new_dp = device_count // model_parallel
+    if old_data_parallel % new_dp:
+        raise ValueError(
+            f"cannot keep global batch: old dp {old_data_parallel} not a "
+            f"multiple of new dp {new_dp}")
+    return ElasticPlan(mesh=mesh, data_parallel=new_dp,
+                       microbatch_scale=old_data_parallel // new_dp)
+
+
+def resume_on_mesh(state_template: Any, state_axes: Any, mesh,
+                   ckpt_root, step: Optional[int] = None) -> Any:
+    """Restore the latest checkpoint resharded onto ``mesh``."""
+    shardings = tree_shardings(state_template, state_axes, mesh)
+    return ckpt.restore(state_template, ckpt_root, step=step,
+                        shardings=shardings)

@@ -1,0 +1,52 @@
+"""Feature extraction: exact 19-dim contract + properties."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import features as F
+
+
+def test_feature_vector_is_19_dim():
+    v = F.extract("Write a python function for binary search?")
+    assert v.shape == (F.N_FEATURES,) == (19,)
+    assert len(F.FEATURE_NAMES) == 19
+
+
+def test_known_prompt_features():
+    v = F.extract("Explain photosynthesis briefly?")
+    assert v[0] == len("Explain photosynthesis briefly?") // 4
+    assert v[2] == 1.0          # "briefly" length constraint
+    assert v[3] == 1.0          # ends with ?
+    assert v[6 + F.VERB_INDEX["explain"]] == 1.0
+
+
+def test_code_and_format_keywords():
+    v = F.extract("Implement an algorithm and return json")
+    assert v[1] == 1.0 and v[4] == 1.0
+    assert v[6 + F.VERB_INDEX["implement"]] == 1.0
+
+
+def test_other_verb_bucket():
+    v = F.extract("Ponder the sea")
+    assert v[6 + len(F.INSTRUCTION_VERBS)] == 1.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.text(max_size=400))
+def test_extract_total_properties(s):
+    v = F.extract(s)
+    assert v.shape == (19,)
+    assert np.isfinite(v).all()
+    assert v[6:].sum() == 1.0            # verb one-hot sums to exactly 1
+    assert set(np.unique(v[1:5])) <= {0.0, 1.0}
+    assert v[0] == len(s) // 4
+    assert v[5] >= 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.text(max_size=100), min_size=1, max_size=20))
+def test_batch_matches_single(prompts):
+    X = F.extract_batch(prompts)
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(X[i], F.extract(p))

@@ -1,0 +1,84 @@
+"""Ranking-accuracy metric (Algorithm 1) properties + baselines."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ranking import (class_labels, classification_accuracy,
+                                fit_prompt_length_threshold,
+                                prompt_length_rule_scores, ranking_accuracy)
+
+
+def test_perfect_ranker_scores_one():
+    lengths = np.array([50, 60, 1000, 2000])
+    scores = np.array([0.1, 0.2, 0.8, 0.9])
+    assert ranking_accuracy(lengths, scores) == 1.0
+
+
+def test_inverted_ranker_scores_zero():
+    lengths = np.array([50, 60, 1000, 2000])
+    scores = np.array([0.9, 0.8, 0.2, 0.1])
+    assert ranking_accuracy(lengths, scores) == 0.0
+
+
+def test_medium_excluded():
+    lengths = np.array([50, 400, 500, 1000])
+    # medium scores are irrelevant
+    a = ranking_accuracy(lengths, np.array([0.1, 0.0, 1.0, 0.9]))
+    b = ranking_accuracy(lengths, np.array([0.1, 0.9, 0.1, 0.9]))
+    assert a == b == 1.0
+
+
+def test_ties_conventions():
+    lengths = np.array([50, 1000])
+    tied = np.array([0.5, 0.5])
+    assert ranking_accuracy(lengths, tied, ties="loss") == 0.0
+    assert ranking_accuracy(lengths, tied, ties="half") == 0.5
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3000),
+                          st.floats(0, 1, allow_nan=False)),
+                min_size=2, max_size=120))
+def test_matches_naive_pair_count(pairs):
+    lengths = np.array([p[0] for p in pairs])
+    scores = np.array([p[1] for p in pairs])
+    s = scores[lengths < 200]
+    l = scores[lengths >= 800]
+    if len(s) == 0 or len(l) == 0:
+        assert np.isnan(ranking_accuracy(lengths, scores))
+        return
+    naive = sum(float(lj > si) for si in s for lj in l) / (len(s) * len(l))
+    assert abs(ranking_accuracy(lengths, scores) - naive) < 1e-12
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3000), st.floats(0, 1)),
+                min_size=2, max_size=60))
+def test_scale_invariance(pairs):
+    """Monotone transforms of scores leave the metric unchanged.
+
+    The transform must be EXACT in floats: an affine shift (x*7+3) absorbs
+    subnormal differences and creates ties, legitimately flipping strict
+    comparisons (hypothesis found this).  A power-of-two scale is exact.
+    """
+    lengths = np.array([p[0] for p in pairs])
+    scores = np.array([p[1] for p in pairs])
+    a = ranking_accuracy(lengths, scores)
+    b = ranking_accuracy(lengths, scores * 8.0)
+    assert (np.isnan(a) and np.isnan(b)) or a == b
+
+
+def test_class_labels_boundaries():
+    np.testing.assert_array_equal(class_labels(np.array([0, 199, 200, 799, 800])),
+                                  [0, 0, 1, 1, 2])
+
+
+def test_length_rule_threshold_fits_train():
+    rng = np.random.default_rng(0)
+    lengths = rng.choice([50, 1500], 400)
+    plens = np.where(lengths > 800, 30, 10) + rng.integers(0, 5, 400)
+    thr = fit_prompt_length_threshold(plens, lengths)
+    acc = ranking_accuracy(lengths, prompt_length_rule_scores(plens, thr),
+                           ties="half")
+    assert acc > 0.9

@@ -1,0 +1,129 @@
+"""Scheduler unit + property tests: heap invariants, SJF ordering,
+starvation bound, cancellation, conservation."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import MinHeap, Request, SJFQueue
+
+
+# --------------------------------------------------------------- MinHeap
+@given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                          width=32), max_size=200))
+def test_heap_pops_sorted(keys):
+    h = MinHeap()
+    for i, k in enumerate(keys):
+        h.push(k, i, None)
+        assert h.invariant_ok()
+    out = [h.pop()[0] for _ in range(len(keys))]
+    assert out == sorted(out)
+
+
+@given(st.lists(st.integers(0, 5), min_size=2, max_size=100))
+def test_heap_fifo_tiebreak(keys):
+    h = MinHeap()
+    for i, k in enumerate(keys):
+        h.push(k, i, i)
+    prev = {}
+    while len(h):
+        k, seq, _ = h.pop()
+        if k in prev:
+            assert seq > prev[k], "equal keys must pop in FIFO order"
+        prev[k] = seq
+
+
+# --------------------------------------------------------------- SJFQueue
+def _mk(i, arrival=0.0, p_long=0.5, service=1.0):
+    return Request(req_id=i, arrival=arrival, p_long=p_long,
+                   true_service=service)
+
+
+def test_sjf_orders_by_p_long():
+    q = SJFQueue(policy="sjf")
+    for i, p in enumerate([0.9, 0.1, 0.5, 0.3]):
+        q.push(_mk(i, p_long=p))
+    order = [q.pop(now=0.0).p_long for _ in range(4)]
+    assert order == sorted(order)
+
+
+def test_fcfs_orders_by_arrival():
+    q = SJFQueue(policy="fcfs")
+    for i, a in enumerate([3.0, 1.0, 2.0]):
+        q.push(_mk(i, arrival=a, p_long=1 - a))
+    order = [q.pop(now=10.0).arrival for _ in range(3)]
+    assert order == sorted(order)
+
+
+def test_starvation_promotion():
+    q = SJFQueue(policy="sjf", tau=5.0)
+    q.push(_mk(0, arrival=0.0, p_long=0.99))   # long job, would starve
+    q.push(_mk(1, arrival=4.0, p_long=0.01))
+    # at t=6 the long job has waited 6 > tau -> promoted despite p_long
+    got = q.pop(now=6.0)
+    assert got.req_id == 0 and got.promoted
+    assert q.stats["promotions"] == 1
+
+
+def test_no_promotion_below_tau():
+    q = SJFQueue(policy="sjf", tau=10.0)
+    q.push(_mk(0, arrival=0.0, p_long=0.99))
+    q.push(_mk(1, arrival=4.0, p_long=0.01))
+    assert q.pop(now=6.0).req_id == 1  # SJF order holds
+
+
+def test_cancellation_is_lazy_and_complete():
+    q = SJFQueue(policy="sjf")
+    for i in range(5):
+        q.push(_mk(i, p_long=i / 10))
+    assert q.cancel(0) and q.cancel(3)
+    assert not q.cancel(99)
+    got = [q.pop(now=0.0).req_id for _ in range(len(q))]
+    assert got == [1, 2, 4]
+    assert q.pop(now=0.0) is None
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0, 100)),
+                min_size=1, max_size=80),
+       st.sampled_from(["fcfs", "sjf", "sjf_oracle"]),
+       st.one_of(st.none(), st.floats(0.5, 50)))
+def test_conservation_every_request_dispatched_once(entries, policy, tau):
+    """No request is lost or duplicated, under any policy/tau."""
+    q = SJFQueue(policy=policy, tau=tau)
+    for i, (p, a) in enumerate(entries):
+        q.push(Request(req_id=i, arrival=a, p_long=p, true_service=p))
+    seen = set()
+    t = 0.0
+    while True:
+        r = q.pop(now=t)
+        if r is None:
+            break
+        assert r.req_id not in seen
+        seen.add(r.req_id)
+        t += 1.0
+    assert seen == set(range(len(entries)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 60), st.floats(1.0, 10.0))
+def test_starvation_wait_bound(n, tau):
+    """With the guard on, at every dispatch decision the oldest waiter is
+    dispatched if it exceeded tau — so queue wait beyond tau never grows by
+    more than one service slot per dispatch."""
+    rng = np.random.default_rng(0)
+    q = SJFQueue(policy="sjf", tau=tau)
+    for i in range(n):
+        q.push(Request(req_id=i, arrival=0.0, p_long=float(rng.random()),
+                       true_service=1.0))
+    t = 0.0
+    while True:
+        oldest = q.oldest_wait(now=t)
+        r = q.pop(now=t)
+        if r is None:
+            break
+        if oldest > tau:
+            # guard must fire for the longest-waiting request
+            assert r.promoted or (t - r.arrival) >= tau
+        t += 1.0

@@ -1,0 +1,123 @@
+"""Serving integration: the paper's n=8 dispatch-order test, disconnects,
+routing, failover, real-engine decode."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.gbdt import GBDTParams
+from repro.core.predictor import Predictor
+from repro.core.router import PredictiveRouter
+from repro.core.scheduler import Request
+from repro.data.corpus import sample_dataset
+from repro.serving.engine import RealEngine
+from repro.serving.openai_api import CompletionRequest
+from repro.serving.server import ClairvoyantServer
+from repro.serving.service_time import ServiceTimeModel
+
+
+@pytest.fixture(scope="module")
+def predictor():
+    ds = sample_dataset("sharegpt", n=2400, seed=42, balanced=True)
+    return Predictor.train(ds.prompts, ds.lengths, GBDTParams(num_rounds=60))
+
+
+def _mixed_requests(n_short=4, n_long=4, seed=0):
+    """4 Short + 4 Long real prompts (the paper's M1 end-to-end test)."""
+    ds = sample_dataset("sharegpt", n=4000, seed=seed)
+    shorts = [i for i in range(len(ds)) if ds.lengths[i] < 120][:n_short]
+    longs = [i for i in range(len(ds)) if ds.lengths[i] >= 1000][:n_long]
+    return ([(ds.prompts[i], int(ds.lengths[i]), "short") for i in shorts]
+            + [(ds.prompts[i], int(ds.lengths[i]), "long") for i in longs])
+
+
+def test_sjf_dispatch_order_end_to_end(predictor):
+    """Paper §3.4: n=8 burst — all Short complete before any Long.
+
+    Like the paper's test (dispatch-LOGIC validation), the 8 requests are
+    drawn so the predictor separates them; cross-class fidelity on arbitrary
+    prompts is measured by the ranking benchmarks, not here.
+    """
+    cands = _mixed_requests(n_short=12, n_long=12)
+    scores = predictor.p_long_batch([c[0] for c in cands])
+    shorts = sorted((c for c, s in zip(cands, scores) if c[2] == "short"),
+                    key=lambda c: scores[cands.index(c)])[:4]
+    longs = sorted((c for c, s in zip(cands, scores) if c[2] == "long"),
+                   key=lambda c: -scores[cands.index(c)])[:4]
+    server = ClairvoyantServer(policy="sjf", tau=None, predictor=predictor)
+    for prompt, toks, klass in shorts + longs:
+        server.submit(CompletionRequest(prompt=prompt), arrival=0.0,
+                      true_output_tokens=toks, klass=klass)
+    resp = server.drain()
+    finish = {server._klass_of(r): [] for r in resp}
+    for r in resp:
+        finish[server._klass_of(r)].append(r.queue_wait_s + r.service_s)
+    assert max(finish["short"]) < min(finish["long"]), \
+        "a long request finished before a short one under SJF"
+
+
+def test_fcfs_interleaves(predictor):
+    server = ClairvoyantServer(policy="fcfs", predictor=None)
+    reqs = _mixed_requests()
+    # long first in arrival order -> HOLB under FCFS
+    order = [reqs[4], reqs[0], reqs[5], reqs[1]]
+    for i, (prompt, toks, klass) in enumerate(order):
+        server.submit(CompletionRequest(prompt=prompt), arrival=float(i) * 1e-3,
+                      true_output_tokens=toks, klass=klass)
+    resp = server.drain()
+    shorts = [r for r in resp if server._klass_of(r) == "short"]
+    assert min(s.queue_wait_s for s in shorts) > 0, \
+        "FCFS should block shorts behind the long head-of-line job"
+
+
+def test_disconnect_cancellation(predictor):
+    server = ClairvoyantServer(policy="sjf", predictor=predictor)
+    ids = []
+    for prompt, toks, klass in _mixed_requests():
+        req = CompletionRequest(prompt=prompt)
+        ids.append(req.request_id)
+        server.submit(req, true_output_tokens=toks, klass=klass)
+    assert server.cancel(ids[0]) and server.cancel(ids[-1])
+    assert not server.cancel(ids[0])        # double-cancel is a no-op
+    resp = server.drain()
+    served = {r.request_id for r in resp}
+    assert ids[0] not in served and ids[-1] not in served
+    assert len(served) == 6
+
+
+def test_router_jspw_balances_predicted_work():
+    router = PredictiveRouter(n_replicas=3)
+    rng = np.random.default_rng(0)
+    for i in range(60):
+        proba = rng.dirichlet((1, 1, 1))
+        router.route(Request(req_id=i), proba=proba)
+    sizes = list(router.queue_lengths().values())
+    assert max(sizes) - min(sizes) <= 2, f"imbalanced: {sizes}"
+
+
+def test_router_failover_requeues_all():
+    router = PredictiveRouter(n_replicas=2)
+    for i in range(10):
+        router.route(Request(req_id=i))
+    victim = max(router.queue_lengths(), key=router.queue_lengths().get)
+    n_victim = router.queue_lengths()[victim]
+    drained = router.fail_replica(victim)
+    assert len(drained) == n_victim
+    assert sum(router.queue_lengths().values()) == 10
+    assert router.queue_lengths()[victim] == 0
+
+
+def test_real_engine_generates():
+    cfg = get_config("smollm-360m").reduced()
+    eng = RealEngine(cfg, max_len=64)
+    out = eng.generate(np.arange(8) % cfg.vocab_size, max_new_tokens=6)
+    assert len(out["tokens"]) == 6
+    assert all(0 <= t < cfg.vocab_size for t in out["tokens"])
+    assert out["ttft_s"] > 0 and out["service_s"] >= out["ttft_s"]
+
+
+def test_service_time_model_monotone():
+    cfg = get_config("gemma3-4b-edge")
+    m = ServiceTimeModel.from_arch(cfg, chips=1)
+    assert m.service(64, 800) > m.service(64, 100) > m.service(64, 10)
+    assert m.service(1024, 100) > m.service(64, 100)

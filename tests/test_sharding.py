@@ -1,0 +1,95 @@
+"""Sharding rules: divisibility fallback, spec resolution, constraint no-op."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import constrain, use_mesh
+from repro.sharding.rules import DEFAULT_RULES, is_axes_leaf, spec_for
+
+
+def _mesh22():
+    # 4 fake CPU devices would be needed; tests run on 1, so synthesize specs
+    # against an abstract mesh via jax.make_mesh on the single device when
+    # possible, else build spec logic directly.
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_divisible():
+    mesh = _mesh22()
+    spec = spec_for((32, 64), ("batch", "mlp"), mesh)
+    # axes of size 1 shard trivially; canonical trailing-None trimming
+    assert isinstance(spec, P)
+
+
+def test_divisibility_fallback_drops_axis():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+    spec = spec_for((15, 64), ("heads", "head_dim"), FakeMesh)
+    assert spec == P()  # 15 heads not divisible by 16 -> unsharded
+
+
+def test_composite_batch_axes():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        devices = np.empty((2, 16, 16))
+    spec = spec_for((256, 4096), ("batch", "seq"), FakeMesh)
+    assert spec == P(("pod", "data"))
+    # batch=1 (long_500k decode): everything falls back
+    spec1 = spec_for((1, 4096), ("batch", "seq"), FakeMesh)
+    assert spec1 == P()
+
+
+def test_axis_used_once_per_tensor():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+    # both logical axes map to "model": first wins, second falls back
+    spec = spec_for((64, 64), ("heads", "mlp"), FakeMesh)
+    assert spec == P("model")
+
+
+def test_kv_cache_spec_seq_sharded():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+    spec = spec_for((4, 128, 32768, 8, 128),
+                    (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+                    FakeMesh)
+    assert spec == P(None, "data", "model")
+
+
+def test_constrain_is_identity_off_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "embed") is x
+
+
+def test_constrain_inside_jit_single_device_mesh():
+    mesh = _mesh22()
+    with use_mesh(mesh):
+        y = jax.jit(lambda x: constrain(x, "batch", "embed"))(jnp.ones((4, 4)))
+    np.testing.assert_array_equal(np.asarray(y), np.ones((4, 4)))
+
+
+def test_is_axes_leaf():
+    assert is_axes_leaf(("embed_w", "qkv"))
+    assert is_axes_leaf((None, "batch"))
+    assert is_axes_leaf(())
+    assert not is_axes_leaf(({"a": 1},))
+    assert not is_axes_leaf([1, 2])
+
+
+def test_param_axes_cover_param_tree():
+    """Every param leaf has an axes annotation of matching rank."""
+    from repro.configs import ARCH_NAMES, get_config
+    from repro.models.model import LM
+    for name in ARCH_NAMES:
+        lm = LM(get_config(name).reduced())
+        shapes, axes = lm.abstract_params()
+        jax.tree.map(
+            lambda s, a: (_ for _ in ()).throw(
+                AssertionError(f"{name}: rank mismatch {s.shape} vs {a}"))
+            if len(s.shape) != len(a) else None,
+            shapes, axes, is_leaf=lambda x: hasattr(x, "shape"))

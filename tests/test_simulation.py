@@ -1,0 +1,89 @@
+"""DES correctness: work conservation, SJF optimality, P-K agreement."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import Request
+from repro.core.simulation import (ServiceDist, burst_workload, cs2,
+                                   pk_wait_fcfs, poisson_workload, simulate)
+
+
+def _reqs(entries):
+    return [Request(req_id=i, arrival=a, true_service=s, p_long=p,
+                    klass="short" if p < 0.5 else "long")
+            for i, (a, s, p) in enumerate(entries)]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 50), st.floats(0.1, 10),
+                          st.floats(0, 1)), min_size=1, max_size=60),
+       st.sampled_from(["fcfs", "sjf", "sjf_oracle"]))
+def test_work_conservation_and_no_overlap(entries, policy):
+    res = simulate(_reqs(entries), policy=policy)
+    assert len(res.requests) == len(entries)
+    # serial server: intervals must not overlap, and server never idles
+    # while work is queued
+    iv = sorted((r.start, r.finish) for r in res.requests)
+    for (s1, f1), (s2, f2) in zip(iv, iv[1:]):
+        assert s2 >= f1 - 1e-9
+    total = sum(s for _, s, _ in entries)
+    assert res.makespan >= total - 1e-6
+
+
+def test_sjf_oracle_minimises_mean_wait_in_burst():
+    rng = np.random.default_rng(0)
+    short, long = ServiceDist(2.0, 0.3), ServiceDist(20.0, 2.0)
+    r1 = burst_workload(rng, 20, 20, short, long)
+    rng = np.random.default_rng(0)
+    r2 = burst_workload(rng, 20, 20, short, long)
+    fcfs = simulate(r1, policy="fcfs")
+    sjf = simulate(r2, policy="sjf_oracle")
+    assert sjf.mean(attr="wait") < fcfs.mean(attr="wait")
+
+
+def test_fcfs_matches_pollaczek_khinchine():
+    """M/G/1 FCFS mean wait within ~12% of the P-K formula (paper §2.4)."""
+    rng = np.random.default_rng(7)
+    short, long = ServiceDist(2.0, 0.5), ServiceDist(10.0, 1.5)
+    n, rho = 40000, 0.6
+    es = 0.5 * (short.mean + long.mean)
+    lam = rho / es
+    reqs = poisson_workload(rng, n, lam, short, long, mix_long=0.5)
+    services = np.array([r.true_service for r in reqs])
+    res = simulate(reqs, policy="fcfs")
+    measured = res.mean(attr="wait")
+    predicted = pk_wait_fcfs(lam, services.mean(),
+                             np.mean(services ** 2))
+    assert abs(measured - predicted) / predicted < 0.12
+
+
+def test_cs2_mixed_exceeds_homogeneous():
+    """Table 1 structure: mixing short+long inflates Cs2."""
+    rng = np.random.default_rng(1)
+    short = ServiceDist(2.1, 1.1).sample(rng, 5000)
+    long = ServiceDist(29.7, 11.7).sample(rng, 5000)
+    mixed = np.where(rng.random(5000) < 0.8, short, long)
+    assert cs2(mixed) > 1.0 > max(cs2(short), cs2(long))
+
+
+def test_starvation_timeout_bounds_long_wait():
+    rng = np.random.default_rng(3)
+    short, long = ServiceDist(1.0, 0.1), ServiceDist(10.0, 1.0)
+    reqs = burst_workload(rng, 80, 5, short, long)
+    tau = 20.0
+    res = simulate(reqs, policy="sjf", tau=tau)
+    assert res.promotions > 0
+    # guarantee: once past tau, a request is dispatched after at most the
+    # requests that arrived BEFORE it (promotion is FIFO among starvers)
+    max_service = max(r.true_service for r in res.requests)
+    by_arrival = sorted(res.requests, key=lambda r: r.arrival)
+    for rank, r in enumerate(by_arrival):
+        if r.klass == "long":
+            bound = tau + (rank + 1) * max_service + 1e-6
+            assert r.start - r.arrival <= bound
+    # and strictly better than the worst no-guard outcome for the earliest long
+    first_long = next(r for r in by_arrival if r.klass == "long")
+    total_work = sum(r.true_service for r in res.requests)
+    assert first_long.start - first_long.arrival < total_work
