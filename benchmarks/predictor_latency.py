@@ -1,12 +1,22 @@
 """Predictor latency (paper §3.3: 0.029 ms/request via ONNX Runtime C API).
 
-This container's admission path is numpy (no ONNX RT offline); we report:
-  * feature extraction (pure string scan)
-  * single-request numpy traversal (the per-request admission decision)
-  * amortised batch numpy (what the sidecar actually runs under load)
-  * the Pallas batch kernel in interpret mode (compiled-TPU stand-in)
-All must sit far below generation time (~seconds) — the paper's argument is
-about orders of magnitude, not the absolute figure.
+This container's admission path is host-side (no ONNX RT offline); this
+suite benchmarks the seed implementations against the fast path side by
+side:
+
+  * feature extraction — seed per-keyword scans (``extract_reference``)
+    vs the vectorized single-pass batch matcher (``extract_batch``);
+  * GBDT scoring — seed dense complete-tree traversal
+    (``predict_margin_dense``) vs the pruned/binned packed path (native
+    scorer with numpy traversal fallback), single-request and batched;
+  * the tree-parallel Pallas kernels (interpret mode on CPU; compiled
+    path on real TPU), dense and packed layouts;
+  * training — seed per-node trainer (``train_gbdt_reference``) vs the
+    depth-frontier/histogram-subtraction trainer (``train_gbdt``).
+
+``run`` returns the numbers consumed by ``benchmarks.run`` to write
+``BENCH_predictor.json``, including allclose checks of every fast path
+against the seed dense margins.
 """
 
 from __future__ import annotations
@@ -17,60 +27,151 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, model_and_splits
-from repro.core.features import extract, extract_batch
+from repro.core.features import extract_batch, extract_reference
+from repro.core.gbdt import (GBDTParams, _softmax, train_gbdt,
+                             train_gbdt_reference)
 from repro.data.corpus import sample_dataset
+
+_TRAIN_ROUNDS = 150
+
+
+def _best(fn, reps: int = 10) -> float:
+    import gc
+    fn()
+    best = float("inf")
+    gc.disable()
+    try:
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    return best
+
+
+def _best_pair(fn_a, fn_b, reps: int = 10):
+    """Best-of-N for two rivals, interleaved so host noise (this container
+    is a 2-core VM with very jittery timings) hits both sides equally."""
+    import gc
+    fn_a(), fn_b()
+    best_a = best_b = float("inf")
+    gc.disable()
+    try:
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn_a()
+            best_a = min(best_a, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            fn_b()
+            best_b = min(best_b, time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    return best_a, best_b
 
 
 def run() -> dict:
-    pred, _, _, _ = model_and_splits("A")
+    pred, sp, _, _ = model_and_splits("A")
+    model = pred.model
+    packed = model.packed()
     ds = sample_dataset("sharegpt", n=512, seed=3)
     prompts = ds.prompts
+    n = len(prompts)
     out = {}
 
-    # feature extraction
-    t0 = time.perf_counter()
-    for p in prompts:
-        extract(p)
-    feat_us = (time.perf_counter() - t0) / len(prompts) * 1e6
-    emit("predictor_feature_extraction", feat_us, "per prompt (string scan)")
+    # --- feature extraction: seed scan vs batch fast path ------------------
+    ref_s, fast_s = _best_pair(
+        lambda: [extract_reference(p) for p in prompts],
+        lambda: extract_batch(prompts), 25)
+    out["feature_us_ref"] = ref_s / n * 1e6
+    out["feature_us_fast"] = fast_s / n * 1e6
+    out["feature_speedup"] = ref_s / fast_s
+    emit("predictor_feature_extraction_ref", out["feature_us_ref"],
+         "per prompt (seed per-keyword scan)")
+    emit("predictor_feature_extraction_fast", out["feature_us_fast"],
+         f"per prompt (batch matcher; {out['feature_speedup']:.1f}x)")
 
     X = extract_batch(prompts)
+    dense_margins = model.predict_margin_dense(X)
+    p_long_dense = _softmax(dense_margins)[:, 2]
 
-    # single-request numpy path
+    # --- single-request scoring -------------------------------------------
     x1 = X[:1]
-    pred.model.predict_p_long(x1)  # warm
-    t0 = time.perf_counter()
-    for _ in range(200):
-        pred.model.predict_p_long(x1)
-    single_us = (time.perf_counter() - t0) / 200 * 1e6
-    emit("predictor_single_numpy", single_us,
-         f"{single_us/1e3:.3f} ms/request (paper ONNX-C 0.029 ms); "
+    d1 = _best(lambda: _softmax(model.predict_margin_dense(x1))[:, 2], 30)
+    f1 = _best(lambda: model.predict_p_long(x1), 30)
+    out["single_us_dense"] = d1 * 1e6
+    out["single_us_fast"] = f1 * 1e6
+    out["single_speedup"] = d1 / f1
+    emit("predictor_single_dense", d1 * 1e6,
+         f"{d1*1e3:.3f} ms/request (paper ONNX-C 0.029 ms); seed traversal")
+    emit("predictor_single_fast", f1 * 1e6,
+         f"{f1*1e3:.3f} ms/request packed ({out['single_speedup']:.1f}x); "
          "4+ orders below ~2s generation")
 
-    # batched numpy
-    t0 = time.perf_counter()
-    for _ in range(20):
-        pred.model.predict_p_long(X)
-    batch_us = (time.perf_counter() - t0) / 20 / len(X) * 1e6
-    emit("predictor_batch512_numpy", batch_us, "per request, amortised")
+    # --- batched scoring ---------------------------------------------------
+    db, fb = _best_pair(
+        lambda: _softmax(model.predict_margin_dense(X))[:, 2],
+        lambda: model.predict_p_long(X), 6)
+    out["batch_us_dense"] = db / n * 1e6
+    out["batch_us_fast"] = fb / n * 1e6
+    out["batch_speedup"] = db / fb
+    emit("predictor_batch512_dense", out["batch_us_dense"],
+         "per request amortised (seed dense traversal)")
+    emit("predictor_batch512_fast", out["batch_us_fast"],
+         f"per request amortised (packed host path; "
+         f"{out['batch_speedup']:.1f}x)")
+    out["batch_allclose"] = bool(np.allclose(
+        model.predict_p_long(X), p_long_dense, rtol=1e-5, atol=1e-5))
 
-    # Pallas kernel (interpret on CPU; compiled on TPU)
+    # --- Pallas kernels (interpret on CPU; compiled on TPU) ----------------
     from repro.kernels import ops
-    ft = jnp.asarray(pred.model.feature)
-    th = jnp.asarray(pred.model.threshold)
-    vl = jnp.asarray(pred.model.value)
     Xj = jnp.asarray(X)
-    ops.gbdt_margins(Xj, ft, th, vl).block_until_ready()  # compile
+    ft = jnp.asarray(model.feature)
+    th = jnp.asarray(model.threshold)
+    vl = jnp.asarray(model.value)
+    ops.gbdt_margins(Xj, ft, th, vl).block_until_ready()      # compile
+    kd = _best(lambda: ops.gbdt_margins(Xj, ft, th, vl).block_until_ready(),
+               3)
+    out["pallas_dense_us"] = kd / n * 1e6
+    emit("predictor_batch512_pallas_dense", out["pallas_dense_us"],
+         "per request (tree-parallel dense kernel, interpret mode)")
+    # device-resident packed tensors, converted once like the dense setup
+    pf, pt, pc, pv = (jnp.asarray(packed.pfeat), jnp.asarray(packed.pthr),
+                      jnp.asarray(packed.pchild), jnp.asarray(packed.pvalue))
+
+    def packed_kernel():
+        return ops.gbdt_margins_packed(
+            Xj, pf, pt, pc, pv, depth=int(packed.depth),
+            n_classes=int(packed.n_classes)).block_until_ready()
+
+    packed_kernel()                                           # compile
+    kp = _best(packed_kernel, 3)
+    out["pallas_packed_us"] = kp / n * 1e6
+    emit("predictor_batch512_pallas_packed", out["pallas_packed_us"],
+         "per request (tree-parallel packed kernel, interpret mode)")
+    out["pallas_allclose"] = bool(np.allclose(
+        np.asarray(packed_kernel()), dense_margins, rtol=1e-5, atol=1e-5))
+
+    # --- training ----------------------------------------------------------
+    Xtr, ytr = sp.train.X, sp.train.y
+    params = GBDTParams(num_rounds=_TRAIN_ROUNDS)
     t0 = time.perf_counter()
-    for _ in range(5):
-        ops.gbdt_margins(Xj, ft, th, vl).block_until_ready()
-    k_us = (time.perf_counter() - t0) / 5 / len(X) * 1e6
-    emit("predictor_batch512_pallas_interpret", k_us,
-         "per request (interpret mode; compiled path on real TPU)")
-    out.update(feature_us=feat_us, single_us=single_us, batch_us=batch_us,
-               pallas_us=k_us)
+    train_gbdt(Xtr, ytr, params)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    train_gbdt_reference(Xtr, ytr, params)
+    t_ref = time.perf_counter() - t0
+    out["train_s_ref"] = t_ref
+    out["train_s_fast"] = t_fast
+    out["train_speedup"] = t_ref / t_fast
+    emit("predictor_train_ref", t_ref * 1e6,
+         f"{t_ref:.2f}s for {_TRAIN_ROUNDS} rounds (seed trainer)")
+    emit("predictor_train_fast", t_fast * 1e6,
+         f"{t_fast:.2f}s for {_TRAIN_ROUNDS} rounds "
+         f"({out['train_speedup']:.1f}x)")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import json
+    print(json.dumps(run(), indent=2))

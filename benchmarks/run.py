@@ -1,15 +1,24 @@
 """Benchmark harness: one module per paper table/figure (deliverable d).
 
-Prints ``name,us_per_call,derived`` CSV per the harness contract.
+Prints ``name,us_per_call,derived`` CSV per the harness contract.  The
+predictor suite additionally writes ``BENCH_predictor.json`` at the repo
+root — the machine-readable perf record (feature-extraction us, single /
+batch host-scorer us, Pallas us, train seconds, old-vs-new speedups)
+tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
-    PYTHONPATH=src python -m benchmarks.run table8     # one table
+    PYTHONPATH=src python -m benchmarks.run predictor  # one suite
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_predictor.json")
 
 
 def main() -> None:
@@ -33,8 +42,17 @@ def main() -> None:
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()
     for name in wanted:
+        fn = suites.get(name)
+        if fn is None:
+            sys.exit(f"unknown suite {name!r}; available: {', '.join(suites)}")
         print(f"# --- {name} ---")
-        suites[name]()
+        result = fn()
+        if name == "predictor" and isinstance(result, dict):
+            with open(BENCH_JSON, "w") as f:
+                json.dump({k: round(v, 4) if isinstance(v, float) else v
+                           for k, v in result.items()}, f, indent=2)
+                f.write("\n")
+            print(f"# wrote {BENCH_JSON}")
     print(f"# total {time.time()-t0:.1f}s")
 
 

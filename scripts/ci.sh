@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + the predictor microbenchmark.
+#
+#   scripts/ci.sh            # full tier-1 + predictor bench (writes
+#                            # BENCH_predictor.json at the repo root)
+#   SKIP_BENCH=1 scripts/ci.sh   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [ -z "${SKIP_BENCH:-}" ]; then
+    echo "== predictor microbenchmark =="
+    python -m benchmarks.run predictor
+    echo "== BENCH_predictor.json =="
+    cat BENCH_predictor.json
+fi

@@ -1,0 +1,281 @@
+"""Pruned SoA export of a trained GBDT ensemble + the binned fast paths.
+
+``GBDTModel`` stores complete binary trees: ``2**(max_depth+1) - 1`` dense
+slots per tree, most of them dead ``-1`` padding for real models.  This
+module repacks a trained ensemble into layouts the admission path can
+score fast:
+
+**Flat SoA (host).**  Live nodes of all trees concatenated in per-tree
+BFS order with sibling pairs adjacent, so one int32 ``child`` array
+encodes both children (left at ``child``, right at ``child + 1``).
+Leaves are *self-loops* (``child == self``) with an unsatisfiable
+threshold, which removes the per-depth leaf select entirely.  Thresholds
+are quantized to per-feature **bin ids**: the pack derives each feature's
+edge table from the thresholds the ensemble actually uses, inputs are
+binned once per batch (one ``searchsorted`` per feature), and traversal
+is pure integer compares — ``go_right = xbin >= thr_bin`` is exactly
+``x >= threshold`` for every float input (including NaN, which sorts
+past the last edge and goes right, same as the dense traversal).
+
+Two host scorers share this layout:
+
+* a **native scorer** (``core._native``): a C loop nest compiled once at
+  first use — trees outer, samples inner, so each tree's node block and
+  the whole binned batch stay cache-resident — sharded across OS threads
+  (the call releases the GIL).  Margins accumulate in tree order, so they
+  are allclose (1 ulp-level) to the dense path, not bitwise;
+* a **numpy traversal**: the depth-synchronous (T, B) frontier with
+  preallocated index buffers, iterating exactly the pruned max depth.
+  Bitwise identical to ``GBDTModel.predict_margin_dense``: same leaf
+  values, same per-class pairwise summation order, same base-score add.
+  Used when no C compiler is available (``REPRO_NO_NATIVE=1`` forces it).
+
+**Padded per-tree SoA (device).**  The same pruned trees padded to the
+max live node count M as ``(T, M)`` tensors with float thresholds
+(leaves: ``+inf``) and in-tree child indices, consumed by the
+tree-parallel Pallas kernel (``kernels.gbdt_infer``) and its jnp oracle
+(``kernels.ref.gbdt_margins_packed_ref``).  The float compare
+``go_right = ~(x < thr)`` matches the dense traversal for all finite
+inputs; NaN features escape leaf self-loops, so the device path assumes
+finite features (the 19 Clairvoyant features always are).
+
+Host buffers are reused across calls and are not thread-safe; concurrent
+scoring should use one PackedEnsemble per thread (the table arrays are
+immutable and can be shared).
+"""
+
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+from repro.core import _native
+
+_LEAF_BIN = np.uint16(0xFFFF)   # > any input bin (edge tables cap at 0xFFFE)
+
+_pool = None
+
+
+def _thread_pool():
+    global _pool
+    if _pool is None:
+        _pool = ThreadPoolExecutor(max(1, min(4, os.cpu_count() or 1)))
+    return _pool
+
+
+@dataclass
+class PackedEnsemble:
+    # flat SoA over all live nodes (host scorers)
+    feat: np.ndarray        # (total,) int32  feature index (0 at leaves)
+    thr_bin: np.ndarray     # (total,) uint16 go right iff xbin >= thr_bin
+    child: np.ndarray       # (total,) int32  absolute left child; leaf: self
+    value: np.ndarray       # (total,) float32
+    roots: np.ndarray       # (T,) int32
+    # padded per-tree SoA (Pallas kernel / jnp oracle)
+    pfeat: np.ndarray       # (T, M) int32
+    pthr: np.ndarray        # (T, M) float32, +inf at leaves
+    pchild: np.ndarray      # (T, M) int32, in-tree left child; leaf: self
+    pvalue: np.ndarray      # (T, M) float32
+    bin_edges: List[np.ndarray]   # per feature, sorted float32 thresholds
+    n_classes: int
+    n_features: int
+    depth: int              # max live depth over all trees
+    base_score: float = 0.0
+    _buffers: dict = field(default_factory=dict, repr=False, compare=False)
+
+    @property
+    def num_trees(self) -> int:
+        return self.roots.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.feat.shape[0]
+
+    def bin_input(self, X: np.ndarray) -> np.ndarray:
+        """(B, n_features) uint16 bin ids; one searchsorted per feature."""
+        X = np.asarray(X, np.float32)
+        B = X.shape[0]
+        out = np.empty((B, self.n_features), np.uint16)
+        for f in range(self.n_features):
+            edges = self.bin_edges[f]
+            if edges.size:
+                out[:, f] = np.searchsorted(edges, X[:, f], side="right")
+            else:
+                out[:, f] = 0
+        return out
+
+    # -- native scorer ------------------------------------------------------
+
+    def _predict_margin_native(self, Xb: np.ndarray, fn) -> np.ndarray:
+        import ctypes
+        B = Xb.shape[0]
+        K = self.n_classes
+        out = np.zeros((B, K), np.float32)
+        i32, u16, f32 = ctypes.c_int32, ctypes.c_uint16, ctypes.c_float
+        args = (_native.as_ptr(self.feat, i32),
+                _native.as_ptr(self.thr_bin, u16),
+                _native.as_ptr(self.child, i32),
+                _native.as_ptr(self.value, f32),
+                _native.as_ptr(self.roots, i32),
+                self.roots.shape[0], K)
+
+        def run(lo, hi):
+            fn(*args, _native.as_ptr(Xb[lo:hi], u16), hi - lo,
+               self.n_features, self.depth,
+               _native.as_ptr(out[lo:hi], f32))
+
+        # sharding only pays with spare cores; on <=2-core hosts the pool
+        # dispatch overhead beats the overlap
+        cores = os.cpu_count() or 1
+        n_threads = min(4, cores) if cores >= 3 else 1
+        if B >= 2 * n_threads and n_threads > 1:
+            step = -(-B // n_threads)
+            spans = [(lo, min(lo + step, B)) for lo in range(0, B, step)]
+            futs = [_thread_pool().submit(run, lo, hi) for lo, hi in spans]
+            for f in futs:
+                f.result()
+        else:
+            run(0, B)
+        out += self.base_score
+        return out
+
+    # -- numpy traversal ----------------------------------------------------
+
+    def _predict_margin_numpy(self, Xb: np.ndarray) -> np.ndarray:
+        T = self.roots.shape[0]
+        B = Xb.shape[0]
+        xb = Xb.ravel()                               # row-major (B, F)
+        key = (T, B)
+        bufs = self._buffers.get(key)
+        if bufs is None:
+            bufs = (np.empty((T, B), np.int32), np.empty((T, B), np.int32),
+                    np.empty((T, B), np.uint16), np.empty((T, B), np.uint16),
+                    np.empty((T, B), bool), np.empty((T, B), np.int32))
+            self._buffers = {key: bufs}               # keep one shape only
+        idx, fb, tb, xib, go, ch = bufs
+        idx[:] = self.roots[:, None]
+        colf = np.arange(B, dtype=np.int32) * self.n_features
+        for _ in range(self.depth):
+            np.take(self.feat, idx, out=fb)
+            np.take(self.thr_bin, idx, out=tb)
+            np.add(fb, colf[None, :], out=fb)         # flat index into xb
+            np.take(xb, fb, out=xib)
+            np.greater_equal(xib, tb, out=go)
+            np.take(self.child, idx, out=ch)
+            np.add(ch, go, out=idx)
+        vals = self.value.take(idx)                   # (T, B) float32
+        K = self.n_classes
+        margins = vals.reshape(T // K, K, B).sum(axis=0).T.copy()
+        margins += self.base_score
+        return margins
+
+    def predict_margin(self, X: np.ndarray) -> np.ndarray:
+        """(B, n_classes) raw margins (allclose to the dense path; bitwise
+        equal when the numpy traversal is used)."""
+        X = np.asarray(X, np.float32)
+        if X.shape[0] == 0:
+            return np.zeros((0, self.n_classes), np.float32)
+        Xb = self.bin_input(X)
+        fn = _native.native_scorer()
+        if fn is not None:
+            return self._predict_margin_native(Xb, fn)
+        return self._predict_margin_numpy(Xb)
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        from repro.core.gbdt import _softmax
+        return _softmax(self.predict_margin(X))
+
+    def predict_p_long(self, X: np.ndarray, long_class: int = 2) -> np.ndarray:
+        return self.predict_proba(X)[:, long_class]
+
+
+def pack_ensemble(model) -> PackedEnsemble:
+    """Prune a dense ``GBDTModel`` into a :class:`PackedEnsemble`."""
+    feats = np.asarray(model.feature)
+    thrs = np.asarray(model.threshold, np.float32)
+    vals = np.asarray(model.value, np.float32)
+    T, N = feats.shape
+
+    n_features = int(max(feats.max(), 0)) + 1
+    # per-feature edge tables from the thresholds the ensemble actually uses
+    bin_edges = []
+    for f in range(n_features):
+        used = thrs[feats == f]
+        edges = np.unique(used.astype(np.float32))
+        assert edges.size <= 0xFFFE, "too many distinct thresholds"
+        bin_edges.append(edges)
+
+    tree_feat, tree_bin, tree_thr, tree_child, tree_val = [], [], [], [], []
+    max_nodes, max_depth = 1, 0
+    for t in range(T):
+        order = [0]
+        left = []
+        depth_of = [0]
+        i = 0
+        while i < len(order):
+            d = order[i]
+            if feats[t, d] >= 0 and 2 * d + 2 < N:
+                left.append(len(order))
+                order.append(2 * d + 1)
+                order.append(2 * d + 2)
+                depth_of.append(depth_of[i] + 1)
+                depth_of.append(depth_of[i] + 1)
+            else:
+                left.append(i)                      # leaf: self-loop
+            i += 1
+        m = len(order)
+        oa = np.asarray(order)
+        lf = np.asarray(left, np.int32)
+        fe = feats[t, oa]
+        is_leaf = lf == np.arange(m, dtype=np.int32)
+        f_packed = np.where(is_leaf, 0, np.maximum(fe, 0)).astype(np.int32)
+        th = thrs[t, oa]
+        tb = np.empty(m, np.uint16)
+        for j in range(m):
+            if is_leaf[j]:
+                tb[j] = _LEAF_BIN
+            else:
+                e = bin_edges[fe[j]]
+                tb[j] = np.searchsorted(e, th[j], side="left") + 1
+        tree_feat.append(f_packed)
+        tree_bin.append(tb)
+        tree_thr.append(np.where(is_leaf, np.float32(np.inf), th))
+        tree_child.append(lf)
+        tree_val.append(vals[t, oa])
+        max_nodes = max(max_nodes, m)
+        max_depth = max(max_depth, max(depth_of))
+
+    total = sum(a.shape[0] for a in tree_feat)
+    flat_feat = np.empty(total, np.int32)
+    flat_bin = np.empty(total, np.uint16)
+    flat_child = np.empty(total, np.int32)
+    flat_val = np.empty(total, np.float32)
+    roots = np.empty(T, np.int32)
+    pfeat = np.zeros((T, max_nodes), np.int32)
+    pthr = np.full((T, max_nodes), np.inf, np.float32)
+    pchild = np.tile(np.arange(max_nodes, dtype=np.int32), (T, 1))
+    pvalue = np.zeros((T, max_nodes), np.float32)
+    off = 0
+    for t in range(T):
+        m = tree_feat[t].shape[0]
+        roots[t] = off
+        flat_feat[off:off + m] = tree_feat[t]
+        flat_bin[off:off + m] = tree_bin[t]
+        flat_child[off:off + m] = tree_child[t] + off
+        flat_val[off:off + m] = tree_val[t]
+        pfeat[t, :m] = tree_feat[t]
+        pthr[t, :m] = tree_thr[t]
+        pchild[t, :m] = tree_child[t]
+        pvalue[t, :m] = tree_val[t]
+        off += m
+
+    return PackedEnsemble(
+        feat=flat_feat, thr_bin=flat_bin, child=flat_child, value=flat_val,
+        roots=roots, pfeat=pfeat, pthr=pthr, pchild=pchild, pvalue=pvalue,
+        bin_edges=bin_edges, n_classes=model.n_classes,
+        n_features=n_features, depth=max_depth,
+        base_score=float(model.base_score))

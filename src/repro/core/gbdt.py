@@ -13,10 +13,28 @@ model class from scratch:
   standard gain  0.5 * (GL^2/(HL+l) + GR^2/(HR+l) - G^2/(H+l));
 * L2 leaf regularisation, min-child-weight pruning, learning-rate shrinkage.
 
+The trainer works depth-by-depth over *all* frontier nodes at once:
+
+* one flat ``bincount`` per depth builds the histograms of every node at
+  that depth (node-compact x feature x bin keys), instead of one bincount
+  pair per node;
+* the **histogram-subtraction trick**: only the smaller child of each
+  split is binned — the sibling histogram is ``parent - small`` — halving
+  the bincount rows below the root;
+* gradient/hessian weight duplication (``np.repeat``) happens once per
+  depth on the binned half, not once per node on every row;
+* split gains for the whole depth frontier are scored with one vectorized
+  ``(nodes, F, bins)`` pass;
+* each round's margin update reuses the sample->leaf routing computed
+  during growth — no post-hoc tree traversal.
+
 Trained models export to dense "ensemble tensors" — complete-binary-tree
 arrays — which are what the jnp reference (kernels/ref.py) and the Pallas
-batched-inference kernel (kernels/gbdt_infer.py) consume.  The numpy batch
-path below is the host-side admission path (the 0.029 ms analogue).
+batched-inference kernel (kernels/gbdt_infer.py) consume.  Admission-path
+inference goes through the pruned SoA fast path in
+``repro.core.ensemble_pack`` (``predict_margin``); the seed's dense
+level-by-level traversal is kept as ``predict_margin_dense`` — the
+equivalence oracle and the "old" side of the predictor benchmark.
 """
 
 from __future__ import annotations
@@ -64,8 +82,25 @@ class GBDTModel:
     def num_trees(self) -> int:
         return self.feature.shape[0]
 
+    def packed(self, rebuild: bool = False):
+        """Pruned/binned SoA export (cached; see ensemble_pack).
+
+        The cache is keyed on identity only — call ``packed(rebuild=True)``
+        after mutating the ensemble tensors in place.
+        """
+        cached = self.__dict__.get("_packed")
+        if cached is None or rebuild:
+            from repro.core.ensemble_pack import pack_ensemble
+            cached = pack_ensemble(self)
+            self.__dict__["_packed"] = cached
+        return cached
+
     def predict_margin(self, X: np.ndarray) -> np.ndarray:
-        """(B, n_classes) raw margins; vectorised level-by-level traversal."""
+        """(B, n_classes) raw margins via the packed fast path."""
+        return self.packed().predict_margin(X)
+
+    def predict_margin_dense(self, X: np.ndarray) -> np.ndarray:
+        """Seed implementation: vectorised level-by-level dense traversal."""
         X = np.asarray(X, np.float32)
         B = X.shape[0]
         T, N = self.feature.shape
@@ -97,7 +132,8 @@ class GBDTModel:
 
     def save(self, path: str) -> None:
         with open(path, "wb") as f:
-            pickle.dump(dataclasses.asdict(self), f)
+            pickle.dump({fl.name: getattr(self, fl.name)
+                         for fl in dataclasses.fields(self)}, f)
 
     @classmethod
     def load(cls, path: str) -> "GBDTModel":
@@ -146,7 +182,6 @@ def train_gbdt(X: np.ndarray, y: np.ndarray,
     T = p.num_rounds * K
 
     binned, thresholds = _bin_features(X)
-    nbins = max(len(t) + 1 for t in thresholds) if thresholds else 1
     y_onehot = np.eye(K, dtype=np.float32)[y]
 
     feature = np.full((T, N), -1, np.int32)
@@ -154,6 +189,24 @@ def train_gbdt(X: np.ndarray, y: np.ndarray,
     value = np.zeros((T, N), np.float32)
 
     margins = np.zeros((B, K), np.float32)
+
+    # Invariants hoisted out of the per-tree loop.  The histogram axis is
+    # *compact*: feature f owns len(thresholds[f])+1 adjacent columns (its
+    # real bin count), not a fixed MAX_BINS stripe — for the 19 mostly
+    # boolean/low-cardinality Clairvoyant features this shrinks every
+    # histogram, cumsum, and gain pass by an order of magnitude.
+    nb = np.asarray([len(th) + 1 for th in thresholds], np.int32)
+    off = np.zeros(F, np.int32)
+    np.cumsum(nb[:-1], out=off[1:])
+    layout = _BinLayout(
+        off=off,
+        total=int(nb.sum()),
+        col2f=np.repeat(np.arange(F, dtype=np.int32), nb),
+        col2b=np.concatenate([np.arange(n, dtype=np.int32) for n in nb]),
+        basecol=np.repeat(off, nb).astype(np.intp),
+        valid=np.concatenate([(np.arange(n) < n - 1) for n in nb]),
+    )
+    keys = binned.astype(np.int32) + off[None, :]            # (B, F)
 
     t = 0
     for _round in range(p.num_rounds):
@@ -165,13 +218,13 @@ def train_gbdt(X: np.ndarray, y: np.ndarray,
         else:
             mask = None
         for k in range(K):
-            g, h = G_all[:, k].copy(), H_all[:, k].copy()
+            g, h = G_all[:, k], H_all[:, k]
             if mask is not None:
                 g, h = g * mask, h * mask
-            _build_tree(binned, thresholds, g, h, p,
-                        feature[t], threshold[t], value[t])
-            margins[:, k] += _eval_tree_binned(
-                binned, thresholds, feature[t], threshold[t], value[t], X)
+            leaf = _build_tree(binned, thresholds, keys, layout, g, h, p,
+                               feature[t], threshold[t], value[t])
+            # routing computed during growth — no re-traversal
+            margins[:, k] += value[t][leaf]
             t += 1
 
     return GBDTModel(feature=feature, threshold=threshold, value=value,
@@ -179,6 +232,7 @@ def train_gbdt(X: np.ndarray, y: np.ndarray,
 
 
 def _eval_tree_binned(binned, thresholds, feature, threshold, value, X):
+    """Dense single-tree traversal (kept as an oracle for the trainer)."""
     B = X.shape[0]
     idx = np.zeros(B, np.int32)
     depth = int(np.log2(feature.shape[0] + 1)) - 1
@@ -192,12 +246,59 @@ def _eval_tree_binned(binned, thresholds, feature, threshold, value, X):
     return value[idx]
 
 
-def _build_tree(binned, thresholds, g, h, p: GBDTParams,
-                feature_out, threshold_out, value_out):
-    """Grow one depth-wise tree in place (breadth-first array layout)."""
+# ---------------------------------------------------------------------------
+# Reference (seed) trainer — per-node histograms, full re-traversal per
+# round.  Kept as the "old" side of benchmarks/predictor_latency.py.
+# ---------------------------------------------------------------------------
+
+def train_gbdt_reference(X: np.ndarray, y: np.ndarray,
+                         params: GBDTParams | None = None) -> GBDTModel:
+    """Seed implementation of :func:`train_gbdt` (slow; benchmark baseline)."""
+    p = params or GBDTParams()
+    rng = np.random.default_rng(p.seed)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.int64)
+    B, F = X.shape
+    K = p.n_classes
+    N = 2 ** (p.max_depth + 1) - 1
+    T = p.num_rounds * K
+
+    binned, thresholds = _bin_features(X)
+    y_onehot = np.eye(K, dtype=np.float32)[y]
+
+    feature = np.full((T, N), -1, np.int32)
+    threshold = np.zeros((T, N), np.float32)
+    value = np.zeros((T, N), np.float32)
+    margins = np.zeros((B, K), np.float32)
+
+    t = 0
+    for _round in range(p.num_rounds):
+        probs = _softmax(margins)
+        G_all = probs - y_onehot
+        H_all = np.maximum(probs * (1.0 - probs), 1e-6)
+        if p.subsample < 1.0:
+            mask = rng.random(B) < p.subsample
+        else:
+            mask = None
+        for k in range(K):
+            g, h = G_all[:, k].copy(), H_all[:, k].copy()
+            if mask is not None:
+                g, h = g * mask, h * mask
+            _build_tree_reference(binned, thresholds, g, h, p,
+                                  feature[t], threshold[t], value[t])
+            margins[:, k] += _eval_tree_binned(
+                binned, thresholds, feature[t], threshold[t], value[t], X)
+            t += 1
+
+    return GBDTModel(feature=feature, threshold=threshold, value=value,
+                     n_classes=K, max_depth=p.max_depth)
+
+
+def _build_tree_reference(binned, thresholds, g, h, p: GBDTParams,
+                          feature_out, threshold_out, value_out):
+    """Seed tree grower: one histogram pair per node, per-node np.repeat."""
     B, F = binned.shape
     lam = p.reg_lambda
-    # joint (feature, bin) keys so one bincount builds the whole histogram
     keys_full = (binned.astype(np.int32)
                  + np.arange(F, dtype=np.int32)[None, :] * MAX_BINS)
     active = {0: np.arange(B)}
@@ -210,22 +311,22 @@ def _build_tree(binned, thresholds, g, h, p: GBDTParams,
         for node, idx in active.items():
             gs, hs = float(g[idx].sum()), float(h[idx].sum())
             value_out[node] = leaf_weight(gs, hs)
-            if depth == p.max_depth or len(idx) < 2 or hs < 2 * p.min_child_weight:
+            if depth == p.max_depth or len(idx) < 2 \
+                    or hs < 2 * p.min_child_weight:
                 continue  # stays leaf (feature_out[node] == -1)
-            # histogram over (feature, bin) via one flat bincount each
             keys = keys_full[idx].ravel()
             Gh = np.bincount(keys, weights=np.repeat(g[idx], F),
                              minlength=F * MAX_BINS).reshape(F, MAX_BINS)
             Hh = np.bincount(keys, weights=np.repeat(h[idx], F),
                              minlength=F * MAX_BINS).reshape(F, MAX_BINS)
-            GL = np.cumsum(Gh, axis=1)[:, :-1]            # left of each edge
+            GL = np.cumsum(Gh, axis=1)[:, :-1]
             HL = np.cumsum(Hh, axis=1)[:, :-1]
             GR, HR = gs - GL, hs - HL
             valid = (HL >= p.min_child_weight) & (HR >= p.min_child_weight)
-            gain = 0.5 * (GL ** 2 / (HL + lam) + GR ** 2 / (HR + lam)
-                          - gs ** 2 / (hs + lam)) - p.gamma
+            with np.errstate(divide="ignore", invalid="ignore"):
+                gain = 0.5 * (GL ** 2 / (HL + lam) + GR ** 2 / (HR + lam)
+                              - gs ** 2 / (hs + lam)) - p.gamma
             gain = np.where(valid, gain, -np.inf)
-            # mask bins beyond each feature's threshold count
             for f in range(F):
                 gain[f, len(thresholds[f]):] = -np.inf
             best = np.unravel_index(np.argmax(gain), gain.shape)
@@ -235,9 +336,132 @@ def _build_tree(binned, thresholds, g, h, p: GBDTParams,
             feature_out[node] = f_best
             threshold_out[node] = thresholds[f_best][b_best]
             go_left = binned[idx, f_best] <= b_best
-            li, ri = idx[go_left], idx[~go_left]
-            next_active[2 * node + 1] = li
-            next_active[2 * node + 2] = ri
+            next_active[2 * node + 1] = idx[go_left]
+            next_active[2 * node + 2] = idx[~go_left]
         active = next_active
         if not active:
             break
+
+
+@dataclass
+class _BinLayout:
+    """Compact histogram axis: feature f owns columns off[f]..off[f]+nb-1."""
+    off: np.ndarray       # (F,) first column of each feature
+    total: int            # total histogram columns
+    col2f: np.ndarray     # (total,) owning feature of each column
+    col2b: np.ndarray     # (total,) local bin of each column
+    basecol: np.ndarray   # (total,) off[col2f], for segmented cumsum
+    valid: np.ndarray     # (total,) bool, splittable columns
+
+
+def _depth_hist(keys, layout, comp_of_row, rows, g, h, n_nodes):
+    """Histograms for ``n_nodes`` compact node ids over ``rows`` in one
+    bincount pair.  Returns (G, H) of shape (n_nodes, total_cols)."""
+    F = keys.shape[1]
+    stride = layout.total
+    ck = (keys[rows] + (comp_of_row * stride)[:, None]).ravel()
+    wg = np.repeat(g[rows], F)
+    wh = np.repeat(h[rows], F)
+    Gh = np.bincount(ck, weights=wg, minlength=n_nodes * stride)
+    Hh = np.bincount(ck, weights=wh, minlength=n_nodes * stride)
+    return Gh.reshape(n_nodes, stride), Hh.reshape(n_nodes, stride)
+
+
+def _seg_cumsum(H, layout):
+    """Within-feature prefix sums over the compact column axis."""
+    csp = np.zeros((H.shape[0], layout.total + 1), H.dtype)
+    np.cumsum(H, axis=1, out=csp[:, 1:])
+    return csp[:, 1:] - csp[:, layout.basecol]
+
+
+def _build_tree(binned, thresholds, keys, layout, g, h, p: GBDTParams,
+                feature_out, threshold_out, value_out):
+    """Grow one depth-wise tree in place; returns each sample's leaf slot.
+
+    Per depth: score every frontier node's splits in one vectorized
+    ``(nodes, total_bins)`` pass, route samples of splitting nodes, then
+    bin only the smaller child of each split (sibling = parent - small).
+
+    Sibling subtraction accumulates ~1e-6 relative float drift in the
+    derived histograms, so near-tied split gains can resolve differently
+    than in ``_build_tree_reference`` — the two trainers produce
+    equal-quality but not structurally identical ensembles (most visibly
+    with ``subsample < 1``).  Determinism for a fixed seed is unaffected.
+    """
+    B, F = binned.shape
+    lam, lr, mcw = p.reg_lambda, p.learning_rate, p.min_child_weight
+    N = feature_out.shape[0]
+    nb0 = int(layout.off[1]) if F > 1 else layout.total
+
+    node = np.zeros(B, np.int32)          # current slot per sample
+    active = np.ones(B, bool)             # rows not yet settled at a leaf
+    all_rows = np.arange(B)
+
+    slots = np.zeros(1, np.int64)         # frontier node slots at this depth
+    Gh, Hh = _depth_hist(keys, layout, np.zeros(B, np.int64), all_rows,
+                         g, h, 1)
+    counts = np.asarray([B])
+
+    for depth in range(p.max_depth + 1):
+        n = slots.shape[0]
+        gs = Gh[:, :nb0].sum(axis=1)                       # (n,) node totals
+        hs = Hh[:, :nb0].sum(axis=1)
+        value_out[slots] = -lr * gs / (hs + lam)
+        can_split = (depth < p.max_depth) & (counts >= 2) & (hs >= 2 * mcw)
+        if not can_split.any():
+            break
+        GL = _seg_cumsum(Gh, layout)                       # (n, total)
+        HL = _seg_cumsum(Hh, layout)
+        GR = gs[:, None] - GL
+        HR = hs[:, None] - HL
+        ok = (HL >= mcw) & (HR >= mcw) & layout.valid[None]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            gain = 0.5 * (GL ** 2 / (HL + lam) + GR ** 2 / (HR + lam)
+                          - (gs ** 2 / (hs + lam))[:, None]) - p.gamma
+        gain = np.where(ok, gain, -np.inf)
+        bidx = gain.argmax(axis=1)
+        best = gain[np.arange(n), bidx]
+        do = can_split & np.isfinite(best) & (best > 0)
+        if not do.any():
+            break
+        f_best = layout.col2f[bidx]
+        b_best = layout.col2b[bidx]
+        sslots = slots[do]
+        feature_out[sslots] = f_best[do]
+        threshold_out[sslots] = [thresholds[f][b]
+                                 for f, b in zip(f_best[do], b_best[do])]
+
+        # route the rows of splitting nodes; everyone else settles
+        sf = np.full(N, -1, np.int32)
+        sb = np.zeros(N, np.int32)
+        sf[sslots] = f_best[do]
+        sb[sslots] = b_best[do]
+        rows = all_rows[active]
+        nf = sf[node[rows]]
+        splitting = nf >= 0
+        active[rows[~splitting]] = False
+        rows = rows[splitting]
+        nf = nf[splitting]
+        go_left = binned[rows, nf] <= sb[node[rows]]
+        node[rows] = 2 * node[rows] + 2 - go_left
+
+        # histogram subtraction: bin the smaller child, derive the sibling
+        cnts = np.bincount(node[rows], minlength=N)
+        lch = 2 * sslots + 1
+        rch = 2 * sslots + 2
+        left_small = cnts[lch] <= cnts[rch]
+        small = np.where(left_small, lch, rch)
+        big = np.where(left_small, rch, lch)
+        comp = np.full(N, -1, np.int64)
+        comp[small] = np.arange(small.shape[0])
+        crow = comp[node[rows]]
+        sel = crow >= 0
+        Gh_s, Hh_s = _depth_hist(keys, layout, crow[sel], rows[sel], g, h,
+                                 small.shape[0])
+        Gh_b = Gh[do] - Gh_s
+        Hh_b = Hh[do] - Hh_s
+        slots = np.concatenate([small, big])
+        Gh = np.concatenate([Gh_s, Gh_b])
+        Hh = np.concatenate([Hh_s, Hh_b])
+        counts = np.concatenate([cnts[small], cnts[big]])
+    return node

@@ -1,11 +1,21 @@
 """The Clairvoyant predictor: features -> GBDT -> P(Long).
 
-Three inference paths, all over the same exported ensemble tensors:
+The admission fast path is batched end to end: ``p_long_batch`` runs the
+single-pass vectorized feature matcher (``features.extract_batch``) and
+scores through the pruned/binned packed ensemble
+(``core.ensemble_pack``, native scorer with numpy-traversal fallback).
+The inference paths over the same trained ensemble, slowest to fastest:
 
-* ``predict_p_long``   — numpy host path (per-request admission decision);
-* ``kernels.ref.gbdt_predict_ref`` — pure-jnp oracle;
-* ``kernels.gbdt_infer`` — Pallas batched kernel (scores whole admission
-  batches on-device; the TPU-native analogue of the ONNX C path).
+* ``GBDTModel.predict_margin_dense`` — seed dense traversal (oracle);
+* ``GBDTModel.predict_margin`` — packed host path (what this class uses);
+* ``kernels.ref.gbdt_margins_ref`` / ``gbdt_margins_packed_ref`` —
+  pure-jnp oracles for the device layouts;
+* ``kernels.gbdt_infer`` — tree-parallel Pallas kernels, dense and packed
+  (score whole admission batches on-device; the TPU-native analogue of
+  the paper's ONNX C path).
+
+All fast paths are allclose (rtol 1e-5) to the dense traversal; see
+tests/test_ensemble_pack.py and benchmarks/predictor_latency.py.
 """
 
 from __future__ import annotations

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.gbdt_infer import gbdt_margins_kernel
+from repro.kernels.gbdt_infer import (gbdt_margins_kernel,
+                                      gbdt_margins_packed_kernel)
 
 
 def _auto_interpret() -> bool:
@@ -54,6 +55,24 @@ def gbdt_margins(X, feature, threshold, value, *, n_classes: int = 3):
     return gbdt_margins_kernel(X, feature, threshold, value,
                                n_classes=n_classes,
                                interpret=_auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "depth"))
+def gbdt_margins_packed(X, feature, threshold, child, value, *,
+                        depth: int, n_classes: int = 3):
+    """Pruned-layout tree-parallel kernel (see core.ensemble_pack)."""
+    return gbdt_margins_packed_kernel(X, feature, threshold, child, value,
+                                      depth=depth, n_classes=n_classes,
+                                      interpret=_auto_interpret())
+
+
+def gbdt_margins_packed_from(packed, X):
+    """Score with a host-side :class:`~repro.core.ensemble_pack.PackedEnsemble`."""
+    return gbdt_margins_packed(
+        jnp.asarray(X, jnp.float32), jnp.asarray(packed.pfeat),
+        jnp.asarray(packed.pthr), jnp.asarray(packed.pchild),
+        jnp.asarray(packed.pvalue), depth=int(packed.depth),
+        n_classes=int(packed.n_classes))
 
 
 def gbdt_proba(X, feature, threshold, value, *, n_classes: int = 3):

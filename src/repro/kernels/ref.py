@@ -55,3 +55,22 @@ def gbdt_margins_ref(X, feature, threshold, value, *, n_classes: int = 3):
     vals = value[tr, idx]                        # (T, B)
     vals = vals.reshape(T // n_classes, n_classes, B)
     return vals.sum(axis=0).T                    # (B, n_classes)
+
+
+def gbdt_margins_packed_ref(X, feature, threshold, child, value, *,
+                            depth: int, n_classes: int = 3):
+    """Pruned-layout oracle (see core.ensemble_pack).  Tensors (T, M):
+    in-tree left-child indices, leaf self-loops with +inf thresholds."""
+    X = X.astype(jnp.float32)
+    B = X.shape[0]
+    T = feature.shape[0]
+    idx = jnp.zeros((T, B), jnp.int32)
+    tr = jnp.arange(T)[:, None]
+    for _ in range(depth):
+        f = feature[tr, idx]                     # (T, B)
+        xi = X[jnp.arange(B)[None, :], f]
+        go_right = jnp.logical_not(xi < threshold[tr, idx])
+        idx = child[tr, idx] + go_right.astype(jnp.int32)
+    vals = value[tr, idx]                        # (T, B)
+    vals = vals.reshape(T // n_classes, n_classes, B)
+    return vals.sum(axis=0).T                    # (B, n_classes)

@@ -110,7 +110,8 @@ def apply_moe(cfg, p, x):
     all-to-all.
     """
     from jax.sharding import PartitionSpec as P
-    shard_map = jax.shard_map
+    from repro.sharding.compat import shard_map_fn
+    shard_map = shard_map_fn()
 
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token

@@ -1,0 +1,30 @@
+"""Cross-version jax compat shims for the sharding substrate."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_fn():
+    """The shard_map entry point across jax versions.
+
+    Newer jax exposes ``jax.shard_map``; the 0.4.x line in this container
+    only has ``jax.experimental.shard_map.shard_map``.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+def shard_map_unchecked(fn, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions
+    (``check_vma`` on current jax, ``check_rep`` on the 0.4.x line)."""
+    shard_map = shard_map_fn()
+    try:
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)

@@ -1,0 +1,142 @@
+"""Equivalence suite for the packed-ensemble fast path.
+
+Asserts that on trained models of several shapes, the seed dense
+traversal, the pruned/binned numpy traversal, the native (C) scorer, the
+packed jnp oracle, and both Pallas kernels (interpret mode) agree within
+rtol 1e-5.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import _native
+from repro.core.ensemble_pack import pack_ensemble
+from repro.core.gbdt import GBDTParams, train_gbdt
+from repro.kernels import ref
+from repro.kernels.gbdt_infer import (gbdt_margins_kernel,
+                                      gbdt_margins_packed_kernel)
+
+SHAPES = [
+    GBDTParams(num_rounds=12, max_depth=6, n_classes=3),
+    GBDTParams(num_rounds=8, max_depth=3, n_classes=2),
+    GBDTParams(num_rounds=5, max_depth=4, n_classes=4),
+    GBDTParams(num_rounds=6, max_depth=2, n_classes=3, subsample=0.8),
+    GBDTParams(num_rounds=3, max_depth=1, n_classes=2),
+]
+
+
+def _problem(params, n=700, f=11, seed=0):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, params.n_classes, n)
+    X = rng.normal(0, 1, (n, f)).astype(np.float32)
+    X[:, 0] += y * 1.3
+    X[:, f // 2] += (y == params.n_classes - 1) * 1.7
+    return X, y
+
+
+def _allclose(a, b, msg):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5, err_msg=msg)
+
+
+@pytest.mark.parametrize("params", SHAPES,
+                         ids=[f"r{p.num_rounds}d{p.max_depth}k{p.n_classes}"
+                              for p in SHAPES])
+def test_all_paths_agree(params):
+    X, y = _problem(params)
+    model = train_gbdt(X, y, params)
+    packed = pack_ensemble(model)
+    dense = model.predict_margin_dense(X)
+
+    # host numpy traversal is bitwise identical to the dense path
+    K = packed.n_classes
+    np.testing.assert_array_equal(
+        packed._predict_margin_numpy(packed.bin_input(X)), dense)
+
+    # default host path (native when a compiler exists, numpy otherwise)
+    _allclose(packed.predict_margin(X), dense, "host fast path")
+
+    # jnp oracles
+    _allclose(ref.gbdt_margins_ref(
+        jnp.asarray(X), jnp.asarray(model.feature),
+        jnp.asarray(model.threshold), jnp.asarray(model.value),
+        n_classes=K), dense, "dense jnp oracle")
+    _allclose(ref.gbdt_margins_packed_ref(
+        jnp.asarray(X), jnp.asarray(packed.pfeat), jnp.asarray(packed.pthr),
+        jnp.asarray(packed.pchild), jnp.asarray(packed.pvalue),
+        depth=packed.depth, n_classes=K), dense, "packed jnp oracle")
+
+    # Pallas kernels, interpret mode, forcing multi-block grids
+    _allclose(gbdt_margins_kernel(
+        jnp.asarray(X), jnp.asarray(model.feature),
+        jnp.asarray(model.threshold), jnp.asarray(model.value),
+        n_classes=K, block_b=128, block_t=2 * K, interpret=True),
+        dense, "dense Pallas kernel")
+    _allclose(gbdt_margins_packed_kernel(
+        jnp.asarray(X), jnp.asarray(packed.pfeat), jnp.asarray(packed.pthr),
+        jnp.asarray(packed.pchild), jnp.asarray(packed.pvalue),
+        depth=packed.depth, n_classes=K, block_b=128, block_t=2 * K,
+        interpret=True), dense, "packed Pallas kernel")
+
+
+def test_packed_prunes_dead_nodes():
+    params = GBDTParams(num_rounds=20, max_depth=6)
+    X, y = _problem(params, n=1500, f=19)
+    model = train_gbdt(X, y, params)
+    packed = pack_ensemble(model)
+    assert packed.num_nodes < model.feature.size
+    assert packed.depth <= params.max_depth
+    # leaves are self-loops with unsatisfiable thresholds
+    leaf = packed.child == np.arange(packed.num_nodes, dtype=np.int32)
+    assert leaf.any()
+    assert (packed.thr_bin[leaf] == 0xFFFF).all()
+
+
+def test_binned_compare_is_exact_on_edge_values():
+    """Bin compares must reproduce float compares exactly at thresholds."""
+    params = GBDTParams(num_rounds=10, max_depth=4)
+    X, y = _problem(params, n=900, f=7, seed=3)
+    model = train_gbdt(X, y, params)
+    packed = pack_ensemble(model)
+    # probe exactly at every threshold the ensemble uses (x == thr goes
+    # right), plus NaN/inf corners on the numpy path
+    thr = model.threshold[model.feature >= 0]
+    probes = np.zeros((thr.size, 7), np.float32)
+    for i, t in enumerate(thr[:200]):
+        probes[i, :] = t
+    Xp = np.vstack([X, probes[:200]])
+    np.testing.assert_array_equal(
+        packed._predict_margin_numpy(packed.bin_input(Xp)),
+        model.predict_margin_dense(Xp))
+    # NaN sorts past the last edge -> goes right, same as the dense path
+    Xn = np.full((3, 7), np.nan, np.float32)
+    Xn[1] = np.inf
+    Xn[2] = -np.inf
+    np.testing.assert_array_equal(
+        packed._predict_margin_numpy(packed.bin_input(Xn)),
+        model.predict_margin_dense(Xn))
+
+
+def test_model_predict_margin_uses_packed_cache():
+    params = GBDTParams(num_rounds=6, max_depth=3)
+    X, y = _problem(params, n=400, f=5, seed=1)
+    model = train_gbdt(X, y, params)
+    p1 = model.packed()
+    assert model.packed() is p1                 # cached
+    assert model.packed(rebuild=True) is not p1
+    _allclose(model.predict_margin(X), model.predict_margin_dense(X),
+              "GBDTModel.predict_margin")
+
+
+def test_native_scorer_matches_numpy_when_available():
+    fn = _native.native_scorer()
+    if fn is None:
+        pytest.skip("no C compiler in this environment")
+    params = GBDTParams(num_rounds=10, max_depth=5)
+    X, y = _problem(params, n=800, f=9, seed=2)
+    model = train_gbdt(X, y, params)
+    packed = pack_ensemble(model)
+    got = packed._predict_margin_native(packed.bin_input(X), fn)
+    _allclose(got, model.predict_margin_dense(X), "native scorer")

@@ -69,3 +69,18 @@ def test_monotone_feature_gives_perfect_ranking():
     y = np.where(lengths < 200, 0, np.where(lengths < 800, 1, 2))
     m = train_gbdt(X, y, GBDTParams(num_rounds=40))
     assert ranking_accuracy(lengths, m.predict_proba(X)[:, 2]) > 0.99
+
+
+def test_fast_trainer_matches_reference_quality():
+    """The depth-frontier trainer is not structurally identical to the
+    seed trainer (histogram subtraction drifts near-tied gains, see
+    _build_tree), but it must match its predictive quality."""
+    from repro.core.gbdt import train_gbdt_reference
+    X, y = _problem(900, seed=5)
+    for params in (GBDTParams(num_rounds=25),
+                   GBDTParams(num_rounds=15, subsample=0.7)):
+        fast = train_gbdt(X, y, params)
+        ref = train_gbdt_reference(X, y, params)
+        acc_fast = (fast.predict_proba(X).argmax(1) == y).mean()
+        acc_ref = (ref.predict_proba(X).argmax(1) == y).mean()
+        assert abs(acc_fast - acc_ref) < 0.03, (acc_fast, acc_ref)

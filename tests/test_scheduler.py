@@ -1,37 +1,44 @@
 """Scheduler unit + property tests: heap invariants, SJF ordering,
-starvation bound, cancellation, conservation."""
+starvation bound, cancellation, conservation.
+
+Property tests use seeded ``np.random.default_rng`` loops (this container
+has no hypothesis package).
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.scheduler import MinHeap, Request, SJFQueue
 
 
 # --------------------------------------------------------------- MinHeap
-@given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
-                          width=32), max_size=200))
-def test_heap_pops_sorted(keys):
-    h = MinHeap()
-    for i, k in enumerate(keys):
-        h.push(k, i, None)
-        assert h.invariant_ok()
-    out = [h.pop()[0] for _ in range(len(keys))]
-    assert out == sorted(out)
+def test_heap_pops_sorted():
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        n = int(rng.integers(0, 200))
+        keys = rng.normal(0, 1e3, n).astype(np.float32).tolist()
+        h = MinHeap()
+        for i, k in enumerate(keys):
+            h.push(k, i, None)
+            assert h.invariant_ok()
+        out = [h.pop()[0] for _ in range(len(keys))]
+        assert out == sorted(out)
 
 
-@given(st.lists(st.integers(0, 5), min_size=2, max_size=100))
-def test_heap_fifo_tiebreak(keys):
-    h = MinHeap()
-    for i, k in enumerate(keys):
-        h.push(k, i, i)
-    prev = {}
-    while len(h):
-        k, seq, _ = h.pop()
-        if k in prev:
-            assert seq > prev[k], "equal keys must pop in FIFO order"
-        prev[k] = seq
+def test_heap_fifo_tiebreak():
+    rng = np.random.default_rng(1)
+    for trial in range(40):
+        n = int(rng.integers(2, 100))
+        keys = rng.integers(0, 6, n).tolist()
+        h = MinHeap()
+        for i, k in enumerate(keys):
+            h.push(k, i, i)
+        prev = {}
+        while len(h):
+            k, seq, _ = h.pop()
+            if k in prev:
+                assert seq > prev[k], "equal keys must pop in FIFO order"
+            prev[k] = seq
 
 
 # --------------------------------------------------------------- SJFQueue
@@ -84,46 +91,78 @@ def test_cancellation_is_lazy_and_complete():
     assert q.pop(now=0.0) is None
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0, 100)),
-                min_size=1, max_size=80),
-       st.sampled_from(["fcfs", "sjf", "sjf_oracle"]),
-       st.one_of(st.none(), st.floats(0.5, 50)))
-def test_conservation_every_request_dispatched_once(entries, policy, tau):
+def test_mass_cancellation_tombstones_and_promotion():
+    """Tombstone/promotion interaction: cancel most of a large queue
+    (including every older request), then pop with the starvation guard
+    armed.  The guard must skip cancelled FIFO entries, promote the
+    oldest *live* waiter, and never dispatch a tombstone."""
+    q = SJFQueue(policy="sjf", tau=5.0)
+    n = 200
+    for i in range(n):
+        # older requests get low p_long so SJF would prefer them
+        q.push(_mk(i, arrival=float(i) * 0.01, p_long=i / n))
+    # cancel everything except two high-p_long stragglers
+    keep = {150, 199}
+    for i in range(n):
+        if i not in keep:
+            assert q.cancel(i)
+    assert len(q) == 2
+    assert q.stats["cancellations"] == n - 2
+    # tau exceeded for req 150 (arrival 1.5) at now=100 -> promoted
+    got = q.pop(now=100.0)
+    assert got.req_id == 150 and got.promoted and not got.cancelled
+    # next pop drains the heap past all tombstones to the last live entry
+    got2 = q.pop(now=100.0)
+    assert got2.req_id == 199 and not got2.cancelled
+    assert q.pop(now=100.0) is None
+    assert q.stats["dispatched"] == 2
+    # cancelling after dispatch is a no-op
+    assert not q.cancel(150)
+
+
+def test_conservation_every_request_dispatched_once():
     """No request is lost or duplicated, under any policy/tau."""
-    q = SJFQueue(policy=policy, tau=tau)
-    for i, (p, a) in enumerate(entries):
-        q.push(Request(req_id=i, arrival=a, p_long=p, true_service=p))
-    seen = set()
-    t = 0.0
-    while True:
-        r = q.pop(now=t)
-        if r is None:
-            break
-        assert r.req_id not in seen
-        seen.add(r.req_id)
-        t += 1.0
-    assert seen == set(range(len(entries)))
+    rng = np.random.default_rng(2)
+    for trial in range(50):
+        n = int(rng.integers(1, 80))
+        policy = ["fcfs", "sjf", "sjf_oracle"][int(rng.integers(0, 3))]
+        tau = None if rng.random() < 0.3 else float(rng.uniform(0.5, 50))
+        q = SJFQueue(policy=policy, tau=tau)
+        for i in range(n):
+            p = float(rng.random())
+            q.push(Request(req_id=i, arrival=float(rng.uniform(0, 100)),
+                           p_long=p, true_service=p))
+        seen = set()
+        t = 0.0
+        while True:
+            r = q.pop(now=t)
+            if r is None:
+                break
+            assert r.req_id not in seen
+            seen.add(r.req_id)
+            t += 1.0
+        assert seen == set(range(n))
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 60), st.floats(1.0, 10.0))
-def test_starvation_wait_bound(n, tau):
+def test_starvation_wait_bound():
     """With the guard on, at every dispatch decision the oldest waiter is
     dispatched if it exceeded tau — so queue wait beyond tau never grows by
     more than one service slot per dispatch."""
     rng = np.random.default_rng(0)
-    q = SJFQueue(policy="sjf", tau=tau)
-    for i in range(n):
-        q.push(Request(req_id=i, arrival=0.0, p_long=float(rng.random()),
-                       true_service=1.0))
-    t = 0.0
-    while True:
-        oldest = q.oldest_wait(now=t)
-        r = q.pop(now=t)
-        if r is None:
-            break
-        if oldest > tau:
-            # guard must fire for the longest-waiting request
-            assert r.promoted or (t - r.arrival) >= tau
-        t += 1.0
+    for trial in range(30):
+        n = int(rng.integers(1, 60))
+        tau = float(rng.uniform(1.0, 10.0))
+        q = SJFQueue(policy="sjf", tau=tau)
+        for i in range(n):
+            q.push(Request(req_id=i, arrival=0.0,
+                           p_long=float(rng.random()), true_service=1.0))
+        t = 0.0
+        while True:
+            oldest = q.oldest_wait(now=t)
+            r = q.pop(now=t)
+            if r is None:
+                break
+            if oldest > tau:
+                # guard must fire for the longest-waiting request
+                assert r.promoted or (t - r.arrival) >= tau
+            t += 1.0
