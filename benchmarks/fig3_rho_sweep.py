@@ -3,6 +3,10 @@
 Paper: benefit peaks ~17% at rho=0.74, ~10% at 0.85, <3% below rho=0.5;
 burst is the upper bound (70-76%).  DES calibrated to the RTX 4090
 service times, tau = 3 x mu_short.
+
+The full (fcfs, sjf) x rho x seed grid runs through ``core.sweep`` in ONE
+engine call; the FCFS/SJF comparison is paired per (rho, seed) workload,
+as the seed benchmark did via deepcopy.
 """
 
 from __future__ import annotations
@@ -13,32 +17,29 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.calibration import measure_mu_short
-from repro.core.simulation import poisson_workload, simulate
+from repro.core.sweep import sweep_poisson
 from repro.serving.service_time import PAPER_4090_LONG, PAPER_4090_SHORT
 
 PAPER = {0.3: "<3", 0.5: "<3", 0.74: "~17", 0.85: "~10"}
+RHOS = (0.3, 0.5, 0.74, 0.85, 0.95)
 
 
 def run(n: int = 2000, seeds: int = 5) -> dict:
     short, long = PAPER_4090_SHORT, PAPER_4090_LONG
-    es = 0.5 * (short.mean + long.mean)
     tau = 3.0 * short.mean  # 10.5 s, per the Fig 3 caption calibration
+
+    t0 = time.perf_counter()
+    res = sweep_poisson([("fcfs", None), ("sjf", tau)], rhos=RHOS,
+                        seeds=range(seeds), n=n, short=short, long=long,
+                        mix_long=0.5)
+    dt = (time.perf_counter() - t0) * 1e6 / (len(RHOS) * seeds)
+
+    sp50 = res.metric("short_p50")                     # (2, R, S)
+    reductions = 100.0 * (1.0 - sp50[1] / sp50[0])     # paired per seed
     out = {}
-    for rho in (0.3, 0.5, 0.74, 0.85, 0.95):
-        lam = rho / es
-        t0 = time.perf_counter()
-        reductions = []
-        for s in range(seeds):
-            rng = np.random.default_rng(s)
-            reqs = poisson_workload(rng, n, lam, short, long, mix_long=0.5)
-            import copy
-            f = simulate(copy.deepcopy(reqs), policy="fcfs")
-            j = simulate(copy.deepcopy(reqs), policy="sjf", tau=tau)
-            fp, jp = f.percentile(50, "short"), j.percentile(50, "short")
-            reductions.append(100 * (1 - jp / fp))
-        dt = (time.perf_counter() - t0) * 1e6 / seeds
-        red = float(np.mean(reductions))
-        std = float(np.std(reductions))
+    for ri, rho in enumerate(RHOS):
+        red = float(reductions[ri].mean())
+        std = float(reductions[ri].std())
         out[rho] = red
         paper = PAPER.get(rho, "n/a")
         emit(f"fig3_rho_{rho}", dt,

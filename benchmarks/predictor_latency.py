@@ -151,6 +151,15 @@ def run() -> dict:
          "per request (tree-parallel packed kernel, interpret mode)")
     out["pallas_allclose"] = bool(np.allclose(
         np.asarray(packed_kernel()), dense_margins, rtol=1e-5, atol=1e-5))
+    out["pallas_auto_layout"] = ops.preferred_gbdt_layout()
+    out["pallas_auto_allclose"] = bool(np.allclose(
+        np.asarray(ops.gbdt_margins_best(Xj, model)), dense_margins,
+        rtol=1e-5, atol=1e-5))
+    emit("predictor_pallas_auto_layout", 0.0,
+         f"gbdt_margins_best selects {out['pallas_auto_layout']} on "
+         f"{__import__('jax').default_backend()} "
+         "(dense: 3 gathers/level beats packed's 4 in interpret mode; "
+         "packed wins on TPU VMEM traffic)")
 
     # --- training ----------------------------------------------------------
     Xtr, ytr = sp.train.X, sp.train.y

@@ -1,10 +1,13 @@
 """Benchmark harness: one module per paper table/figure (deliverable d).
 
-Prints ``name,us_per_call,derived`` CSV per the harness contract.  The
-predictor suite additionally writes ``BENCH_predictor.json`` at the repo
-root — the machine-readable perf record (feature-extraction us, single /
-batch host-scorer us, Pallas us, train seconds, old-vs-new speedups)
-tracked across PRs.
+Prints ``name,us_per_call,derived`` CSV per the harness contract.  Two
+suites additionally write machine-readable perf records at the repo root,
+tracked across PRs:
+
+* ``predictor`` -> ``BENCH_predictor.json`` (feature-extraction us,
+  single / batch host-scorer us, Pallas us, train seconds, speedups);
+* ``sim`` -> ``BENCH_sim.json`` (one-shot sweep vs per-event reference
+  wall clock on a table9-sized grid, trace-equivalence verdict).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -17,12 +20,15 @@ import os
 import sys
 import time
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_predictor.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSONS = {
+    "predictor": os.path.join(_ROOT, "BENCH_predictor.json"),
+    "sim": os.path.join(_ROOT, "BENCH_sim.json"),
+}
 
 
 def main() -> None:
-    from benchmarks import (fig3_rho_sweep, predictor_latency,
+    from benchmarks import (fig3_rho_sweep, predictor_latency, sim_bench,
                             table1_service_stats, table2_dataset_stats,
                             table4_ablation, table5_ranking, table6_cross,
                             table7_baselines, table8_burst, table9_tau)
@@ -38,6 +44,7 @@ def main() -> None:
         "table9": table9_tau.run,
         "fig3": fig3_rho_sweep.run,
         "predictor": predictor_latency.run,
+        "sim": sim_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()
@@ -47,12 +54,13 @@ def main() -> None:
             sys.exit(f"unknown suite {name!r}; available: {', '.join(suites)}")
         print(f"# --- {name} ---")
         result = fn()
-        if name == "predictor" and isinstance(result, dict):
-            with open(BENCH_JSON, "w") as f:
+        path = BENCH_JSONS.get(name)
+        if path and isinstance(result, dict):
+            with open(path, "w") as f:
                 json.dump({k: round(v, 4) if isinstance(v, float) else v
                            for k, v in result.items()}, f, indent=2)
                 f.write("\n")
-            print(f"# wrote {BENCH_JSON}")
+            print(f"# wrote {path}")
     print(f"# total {time.time()-t0:.1f}s")
 
 

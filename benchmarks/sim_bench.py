@@ -1,0 +1,133 @@
+"""Simulation-engine benchmark: seed per-event loop vs vectorized sweep.
+
+A table9-sized grid — 5 (policy, tau) conditions x 5 seeds, n=2000
+Poisson arrivals at rho=0.74 — is the paper's smallest end-to-end unit of
+work.  This suite times it three ways:
+
+  * ``old``      — ``simulate_reference`` per cell over Python ``Request``
+    objects + ``SimResult`` percentile extraction (the seed path);
+  * ``new``      — the whole grid through ``core.sweep`` in ONE call
+    (SoA workloads, compiled C engine, vectorized metrics);
+  * ``fallback`` — the same one-shot sweep on the stdlib-heapq engine
+    (what a host without a C compiler gets).
+
+It also checks bitwise trace equivalence (same per-request start/finish/
+promoted and promotion counts under identical tie-breaking) of both fast
+engines against the reference on every cell, and workload materialisation
+cost (per-object generator vs vectorized ``RequestBatch.poisson``).
+
+``benchmarks.run sim`` writes the result to ``BENCH_sim.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import _native
+from repro.core.sim_fast import RequestBatch, simulate_batch
+from repro.core.simulation import poisson_workload, simulate_reference
+from repro.core.sweep import METRICS, sweep_batches
+from repro.serving.service_time import PAPER_4090_LONG, PAPER_4090_SHORT
+
+
+def _best(fn, reps: int = 3) -> float:
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _old_sweep(batches, conditions):
+    """The seed path: per-cell object simulation + percentile extraction."""
+    out = np.empty((len(conditions), len(batches), 4))
+    for c, (policy, tau) in enumerate(conditions):
+        for g, reqs in enumerate(batches):
+            res = simulate_reference(reqs, policy=policy, tau=tau)
+            out[c, g] = (res.percentile(50, "short"),
+                         res.percentile(95, "short"),
+                         res.percentile(50, "long"),
+                         res.percentile(95, "long"))
+    return out
+
+
+def run(n: int = 2000, seeds: int = 5, rho: float = 0.74) -> dict:
+    short, long = PAPER_4090_SHORT, PAPER_4090_LONG
+    es = 0.5 * (short.mean + long.mean)
+    lam = rho / es
+    mu = short.mean
+    conditions = [("fcfs", None), ("sjf", 1 * mu), ("sjf", 3 * mu),
+                  ("sjf", 5 * mu), ("sjf", None)]
+    cells = len(conditions) * seeds
+
+    # --- workload materialisation: per-object vs SoA --------------------
+    t_obj = _best(lambda: [poisson_workload(np.random.default_rng(s), n,
+                                            lam, short, long, mix_long=0.5)
+                           for s in range(seeds)])
+    t_soa = _best(lambda: [RequestBatch.poisson(np.random.default_rng(s), n,
+                                                lam, short, long,
+                                                mix_long=0.5)
+                           for s in range(seeds)])
+    out = {"n": n, "seeds": seeds, "conditions": len(conditions),
+           "cells": cells, "rho": rho,
+           "workload_old_s": t_obj, "workload_new_s": t_soa,
+           "workload_speedup": t_obj / t_soa}
+    emit("sim_workload_old", t_obj / seeds * 1e6, "per 2000-req stream "
+         "(per-object generator)")
+    emit("sim_workload_new", t_soa / seeds * 1e6,
+         f"per stream (RequestBatch SoA; {out['workload_speedup']:.1f}x)")
+
+    batches = [RequestBatch.poisson(np.random.default_rng(s), n, lam, short,
+                                    long, mix_long=0.5)
+               for s in range(seeds)]
+    obj_batches = [b.to_requests() for b in batches]
+
+    # --- trace equivalence on every cell, both engines ------------------
+    engines = ["python"] + (["native"] if _native.native_des() else [])
+    equivalent = True
+    for policy, tau in conditions:
+        for b, reqs in zip(batches, obj_batches):
+            ref = simulate_reference(reqs, policy=policy, tau=tau)
+            rs = np.array([r.start for r in sorted(ref.requests,
+                                                   key=lambda r: r.req_id)])
+            rf = np.array([r.finish for r in sorted(ref.requests,
+                                                    key=lambda r: r.req_id)])
+            for eng in engines:
+                fast = simulate_batch(b, policy=policy, tau=tau, engine=eng)
+                if not (np.array_equal(fast.start, rs)
+                        and np.array_equal(fast.finish, rf)
+                        and fast.promotions == ref.promotions):
+                    equivalent = False
+    out["trace_equivalent"] = equivalent
+    out["native"] = _native.native_des() is not None
+    emit("sim_trace_equivalence", 0.0,
+         f"bitwise={'PASS' if equivalent else 'FAIL'} over {cells} cells "
+         f"x {len(engines)} engines")
+
+    # --- full-sweep wall clock ------------------------------------------
+    t_old = _best(lambda: _old_sweep(obj_batches, conditions))
+    t_new = _best(lambda: sweep_batches(batches, conditions))
+    t_fb = _best(lambda: sweep_batches(batches, conditions,
+                                       backend="python"))
+    out.update(old_s=t_old, new_s=t_new, fallback_s=t_fb,
+               speedup=t_old / t_new, fallback_speedup=t_old / t_fb,
+               old_us_per_req=t_old / (cells * n) * 1e6,
+               new_us_per_req=t_new / (cells * n) * 1e6)
+    emit("sim_sweep_old", t_old / cells * 1e6,
+         f"per cell ({t_old:.2f}s total, simulate_reference loop)")
+    emit("sim_sweep_new", t_new / cells * 1e6,
+         f"per cell ({t_new*1e3:.0f}ms total, one-shot sweep; "
+         f"{out['speedup']:.1f}x)")
+    emit("sim_sweep_fallback", t_fb / cells * 1e6,
+         f"per cell (heapq fallback engine; {out['fallback_speedup']:.1f}x)")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

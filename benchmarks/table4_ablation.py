@@ -3,6 +3,9 @@
 Paper: prompt_token_len universally harmful to drop (-3.09 pp avg);
 instruction_verb mixed (-5.04 LMSYS, +3.21 OASST1); format/clause
 net-harmful (positive delta when dropped).
+
+The (feature-group x model) grid is evaluated through ``sweep.run_grid``
+in one call (models and per-group retrains cached by ``model_and_splits``).
 """
 
 from __future__ import annotations
@@ -12,6 +15,7 @@ import time
 from benchmarks.common import emit, model_and_splits
 from repro.core.features import FEATURE_GROUPS
 from repro.core.ranking import ranking_accuracy
+from repro.core.sweep import run_grid
 
 PAPER_AVG = {
     "prompt_token_len": -3.09, "instruction_verb": -1.78,
@@ -21,23 +25,26 @@ PAPER_AVG = {
 }
 
 
+def _accuracy(m: str, drop: tuple = ()) -> float:
+    # no-drop goes through the same cache key as the other suites
+    pred, sp, Xte, _ = (model_and_splits(m, drop_features=drop) if drop
+                        else model_and_splits(m))
+    return 100 * ranking_accuracy(sp.test.lengths,
+                                  pred.model.predict_p_long(Xte))
+
+
 def run() -> dict:
-    base = {}
-    for m in "ABC":
-        pred, sp, Xte, _ = model_and_splits(m)
-        base[m] = 100 * ranking_accuracy(
-            sp.test.lengths, pred.model.predict_p_long(Xte))
+    base = run_grid({"m": "ABC"}, _accuracy)
+
+    t0 = time.perf_counter()
+    grid = run_grid(
+        {"group": tuple(FEATURE_GROUPS), "m": "ABC"},
+        lambda group, m: _accuracy(m, drop=tuple(FEATURE_GROUPS[group])))
+    dt = (time.perf_counter() - t0) * 1e6 / len(FEATURE_GROUPS)
 
     out = {}
-    for group, cols in FEATURE_GROUPS.items():
-        deltas = {}
-        t0 = time.perf_counter()
-        for m in "ABC":
-            pred, sp, Xte, _ = model_and_splits(m, drop_features=tuple(cols))
-            ra = 100 * ranking_accuracy(
-                sp.test.lengths, pred.model.predict_p_long(Xte))
-            deltas[m] = ra - base[m]
-        dt = (time.perf_counter() - t0) * 1e6
+    for group in FEATURE_GROUPS:
+        deltas = {m: grid[(group, m)] - base[(m,)] for m in "ABC"}
         avg = sum(deltas.values()) / 3
         out[group] = dict(**deltas, avg=avg)
         emit(f"table4_drop_{group}", dt,

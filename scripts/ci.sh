@@ -1,15 +1,15 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + the predictor microbenchmark.
+# CI entry point: tier-1 tests + the perf microbenchmarks.
 #
-#   scripts/ci.sh            # full tier-1 + predictor bench (writes
-#                            # BENCH_predictor.json at the repo root)
+#   scripts/ci.sh            # full tier-1 + predictor/sim benches (write
+#                            # BENCH_predictor.json / BENCH_sim.json)
 #   SKIP_BENCH=1 scripts/ci.sh   # tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
+echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
 
 if [ -z "${SKIP_BENCH:-}" ]; then
@@ -17,4 +17,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run predictor
     echo "== BENCH_predictor.json =="
     cat BENCH_predictor.json
+    echo "== simulation sweep benchmark =="
+    python -m benchmarks.run sim
+    echo "== BENCH_sim.json =="
+    cat BENCH_sim.json
 fi

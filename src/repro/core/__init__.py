@@ -3,8 +3,11 @@
 features   — the 19 lexical features (§3.2)
 gbdt       — from-scratch XGBoost-class boosted trees (§4.3)
 predictor  — features + ensemble -> P(Long)
-scheduler  — SJF min-heap + starvation timeout (§3.4)
+scheduler  — SJF indexed array-heap + starvation timeout (§3.4)
 simulation — serial-backend DES, workload generators, P-K theory (§2.4, §5.5)
+sim_fast   — SoA request batches + compiled/vectorized DES engines
+sim_jax    — the same DES as a vmapped JAX scan (device replication axis)
+sweep      — one-shot policy x tau x rho x seed grids over the DES
 ranking    — ranking accuracy (Algorithm 1) + Table 7 baselines
 calibration— tau = 3 x mu_short (§3.4)
 router     — beyond-paper: predictive multi-replica placement
@@ -15,15 +18,23 @@ from repro.core.gbdt import GBDTModel, GBDTParams, train_gbdt
 from repro.core.predictor import Predictor
 from repro.core.ranking import (classification_accuracy, class_labels,
                                 ranking_accuracy)
-from repro.core.scheduler import MinHeap, Request, SJFQueue
+from repro.core.scheduler import ArrayHeap, MinHeap, Request, SJFQueue
+from repro.core.sim_fast import (BatchSimResult, RequestBatch,
+                                 simulate_batch)
 from repro.core.simulation import (ServiceDist, SimResult, burst_workload,
-                                   poisson_workload, simulate)
+                                   poisson_workload, simulate,
+                                   simulate_reference)
+from repro.core.sweep import (SweepResult, run_grid, sweep_batches,
+                              sweep_burst, sweep_poisson)
 
 __all__ = [
     "FEATURE_NAMES", "N_FEATURES", "extract", "extract_batch",
     "GBDTModel", "GBDTParams", "train_gbdt", "Predictor",
     "classification_accuracy", "class_labels", "ranking_accuracy",
-    "MinHeap", "Request", "SJFQueue",
+    "ArrayHeap", "MinHeap", "Request", "SJFQueue",
     "ServiceDist", "SimResult", "burst_workload", "poisson_workload",
-    "simulate",
+    "simulate", "simulate_reference",
+    "BatchSimResult", "RequestBatch", "simulate_batch",
+    "SweepResult", "run_grid", "sweep_batches", "sweep_burst",
+    "sweep_poisson",
 ]

@@ -1,4 +1,4 @@
-"""Runtime-compiled C scorer for the packed GBDT admission path.
+"""Runtime-compiled C hot loops: GBDT scorer + discrete-event simulator.
 
 The numpy traversal in ``ensemble_pack`` pays one full (T, B) vector pass
 per gather per depth.  This module compiles (once per process, with the
@@ -10,11 +10,19 @@ Margins accumulate class-wise in tree order (sequential, not numpy's
 pairwise — results are allclose to, not bitwise equal to, the dense
 path).
 
+``des_run_many`` is the serial-backend DES inner loop (see
+``core.sim_fast``): G independent simulations over struct-of-arrays
+request batches, each driven by an index-based binary min-heap keyed on
+``(key[i], i)`` with lazy tombstones for starvation promotions.  All
+arithmetic is C ``double`` — bitwise identical to the Python reference
+loop (``simulation.simulate_reference``), which also accumulates the
+clock in float64.
+
 Compilation is lazy, cached, thread-safe, and entirely optional: any
 failure (no compiler, sandboxed tmpdir, exotic platform) degrades to the
-pure-numpy traversal.  Set ``REPRO_NO_NATIVE=1`` to force the fallback.
-The exported function releases the GIL (ctypes), so callers can shard a
-batch across OS threads.
+pure-numpy paths.  Set ``REPRO_NO_NATIVE=1`` to force the fallbacks.
+The exported functions release the GIL (ctypes), so callers can shard
+batches across OS threads.
 """
 
 from __future__ import annotations
@@ -69,17 +77,117 @@ void gbdt_score(const int32_t* feat, const uint16_t* thrbin,
 }
 """
 
+_DES_SOURCE = r"""
+#include <stdint.h>
+
+/* One serial-server simulation over struct-of-arrays requests, indices
+ * pre-sorted by (arrival, req_id).  The admission queue is an indexed
+ * binary min-heap over (key[i], i): the seq tiebreak of the Python
+ * SJFQueue collapses to the request index because pushes happen in
+ * arrival order.  The starvation guard promotes the FIFO-oldest live
+ * request past the heap; its stale heap entry becomes a tombstone that
+ * pop skips via the done[] flags (lazy deletion, no re-heapify). */
+static void des_run_one(const double* arrival, const double* service,
+                        const double* key, double tau, int64_t n,
+                        double* start, double* finish, uint8_t* promoted,
+                        int64_t* promotions,
+                        int32_t* heap, uint8_t* done) {
+    int64_t hs = 0;          /* heap size (live + tombstones)            */
+    int64_t i_arr = 0;       /* next not-yet-admitted arrival            */
+    int64_t oldest = 0;      /* FIFO head: min index admitted & undone   */
+    int64_t ndone = 0;
+    int64_t promos = 0;
+    double t = 0.0;
+    for (int64_t i = 0; i < n; i++) done[i] = 0;
+    while (ndone < n) {
+        if (i_arr == ndone) {
+            /* queue empty (admitted == done): jump to the next arrival */
+            if (t < arrival[i_arr]) t = arrival[i_arr];
+        }
+        while (i_arr < n && arrival[i_arr] <= t) {
+            /* heap push of index i_arr */
+            int64_t c = hs++;
+            heap[c] = (int32_t)i_arr;
+            while (c > 0) {
+                int64_t p = (c - 1) >> 1;
+                int32_t hc = heap[c], hp = heap[p];
+                if (key[hp] < key[hc] ||
+                    (key[hp] == key[hc] && hp < hc)) break;
+                heap[p] = hc; heap[c] = hp;
+                c = p;
+            }
+            i_arr++;
+        }
+        while (oldest < i_arr && done[oldest]) oldest++;
+        int64_t j;
+        /* NaN tau disables the guard (any comparison with NaN is false);
+         * negative tau promotes every waiter, like the Python queue. */
+        if ((t - arrival[oldest]) > tau) {
+            j = oldest;               /* promote past the heap */
+            promoted[j] = 1;
+            promos++;
+        } else {
+            /* heap pop, skipping tombstones of promoted requests */
+            for (;;) {
+                int32_t top = heap[0];
+                int64_t last = --hs;
+                if (hs > 0) {
+                    heap[0] = heap[last];
+                    int64_t c = 0;
+                    for (;;) {
+                        int64_t l = 2 * c + 1, r = l + 1, m = c;
+                        if (l < hs && (key[heap[l]] < key[heap[m]] ||
+                            (key[heap[l]] == key[heap[m]] &&
+                             heap[l] < heap[m]))) m = l;
+                        if (r < hs && (key[heap[r]] < key[heap[m]] ||
+                            (key[heap[r]] == key[heap[m]] &&
+                             heap[r] < heap[m]))) m = r;
+                        if (m == c) break;
+                        int32_t tmp = heap[c]; heap[c] = heap[m];
+                        heap[m] = tmp;
+                        c = m;
+                    }
+                }
+                if (!done[top]) { j = top; break; }
+            }
+        }
+        done[j] = 1;
+        start[j] = t;
+        t += service[j];
+        finish[j] = t;
+        ndone++;
+    }
+    *promotions = promos;
+}
+
+/* G independent simulations of n requests each; arrays are (G, n)
+ * row-major, tau is per-cell (NaN disables the guard).  heap and
+ * done are caller-provided scratch of n int32 / n uint8. */
+void des_run_many(const double* arrival, const double* service,
+                  const double* key, const double* tau,
+                  int64_t g, int64_t n,
+                  double* start, double* finish, uint8_t* promoted,
+                  int64_t* promotions,
+                  int32_t* heap, uint8_t* done) {
+    for (int64_t s = 0; s < g; s++) {
+        int64_t off = s * n;
+        des_run_one(arrival + off, service + off, key + off, tau[s], n,
+                    start + off, finish + off, promoted + off,
+                    promotions + s, heap, done);
+    }
+}
+"""
+
 _lock = threading.Lock()
-_cached = False
-_fn = None
+_cache: dict = {}
 
 
-def _compile():
-    workdir = tempfile.mkdtemp(prefix="repro_gbdt_")
-    src = os.path.join(workdir, "gbdt_score.c")
-    lib = os.path.join(workdir, "libgbdt_score.so")
+def _compile_lib(name: str, source: str):
+    workdir = tempfile.mkdtemp(prefix=f"repro_{name}_")
+    src = os.path.join(workdir, f"{name}.c")
+    lib = os.path.join(workdir, f"lib{name}.so")
     with open(src, "w") as f:
-        f.write(_SOURCE)
+        f.write(source)
     for cc in ("cc", "gcc", "clang"):
         try:
             r = subprocess.run([cc, "-O3", "-shared", "-fPIC", src, "-o", lib],
@@ -90,7 +198,13 @@ def _compile():
             break
     else:
         return None
-    dll = ctypes.CDLL(lib)
+    return ctypes.CDLL(lib)
+
+
+def _compile_gbdt():
+    dll = _compile_lib("gbdt_score", _SOURCE)
+    if dll is None:
+        return None
     fn = dll.gbdt_score
     i64 = ctypes.c_int64
     p = ctypes.POINTER
@@ -101,22 +215,43 @@ def _compile():
     return fn
 
 
-def native_scorer():
-    """The compiled scorer function, or None when unavailable."""
-    global _cached, _fn
-    if _cached:
-        return _fn
+def _compile_des():
+    dll = _compile_lib("des_run", _DES_SOURCE)
+    if dll is None:
+        return None
+    fn = dll.des_run_many
+    i64 = ctypes.c_int64
+    p = ctypes.POINTER
+    pd = p(ctypes.c_double)
+    fn.argtypes = [pd, pd, pd, pd, i64, i64, pd, pd, p(ctypes.c_uint8),
+                   p(ctypes.c_int64), p(ctypes.c_int32), p(ctypes.c_uint8)]
+    fn.restype = None
+    return fn
+
+
+def _native_fn(name: str, builder):
+    if name in _cache:
+        return _cache[name]
     with _lock:
-        if not _cached:
+        if name not in _cache:
             if os.environ.get("REPRO_NO_NATIVE"):
-                _fn = None
+                _cache[name] = None
             else:
                 try:
-                    _fn = _compile()
+                    _cache[name] = builder()
                 except Exception:
-                    _fn = None
-            _cached = True
-    return _fn
+                    _cache[name] = None
+    return _cache[name]
+
+
+def native_scorer():
+    """The compiled GBDT scorer function, or None when unavailable."""
+    return _native_fn("gbdt", _compile_gbdt)
+
+
+def native_des():
+    """The compiled DES engine (``des_run_many``), or None."""
+    return _native_fn("des", _compile_des)
 
 
 def as_ptr(arr, ctype):

@@ -38,9 +38,25 @@ class Predictor:
     def features(self, prompt: str) -> np.ndarray:
         return F.extract(prompt)
 
+    def _single_path(self):
+        """Packed ensemble + reusable (1, F) feature row, cached across
+        calls so the serial serving path never re-enters setup code
+        (ensemble packing, edge-matrix build, ctypes pointer tuples).
+        Like the PackedEnsemble host buffers, the shared row makes
+        ``p_long`` not thread-safe — concurrent scorers need one
+        Predictor each (the packed tables themselves can be shared)."""
+        cached = self.__dict__.get("_single")
+        if cached is None:
+            packed = self.model.packed()
+            packed.bin_input(np.zeros((1, F.N_FEATURES), np.float32))
+            cached = (packed, np.empty((1, F.N_FEATURES), np.float32))
+            self.__dict__["_single"] = cached
+        return cached
+
     def p_long(self, prompt: str) -> float:
-        x = F.extract(prompt)[None, :]
-        return float(self.model.predict_p_long(x, LONG_CLASS)[0])
+        packed, xbuf = self._single_path()
+        xbuf[0] = F.extract(prompt)
+        return float(packed.predict_p_long(xbuf, LONG_CLASS)[0])
 
     def p_long_batch(self, prompts: Sequence[str]) -> np.ndarray:
         return self.model.predict_p_long(F.extract_batch(prompts), LONG_CLASS)

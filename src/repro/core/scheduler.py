@@ -1,18 +1,27 @@
 """SJF admission queue with starvation timeout (paper §3.4).
 
-A from-scratch array-based binary min-heap keyed on ascending P(Long), plus:
+The queue is an **indexed struct-of-arrays binary min-heap**
+(:class:`ArrayHeap`) keyed on ascending ``(P(Long), seq)``, plus:
 
 * **starvation guard** — before each dispatch decision, if the longest-waiting
   request has waited more than tau, it is promoted to the head regardless of
   its predicted priority (tracked via an arrival-order FIFO);
-* **lazy cancellation** — client disconnects mark entries dead; tombstones are
-  skipped at pop time (heap deletion without re-heapify);
+* **lazy cancellation** — client disconnects (and guard promotions) mark
+  heap entries dead in O(1) via the heap's position index; tombstones are
+  skipped at pop time, and when they outnumber live entries the heap
+  compacts in one vectorized pass — amortized O(1) per tombstone, never a
+  per-element re-heapify;
 * **policy pluggability** — FCFS / SJF(predicted) / SJF(oracle) are the same
   queue with different priority keys, which is how the benchmark ablations
   flip between the paper's conditions.
 
 Medium requests get no discrete treatment: the continuous P(Long) score is
 the key, producing the smooth ordering gradient described in the paper.
+
+The simulation fast path (``core.sim_fast``) runs this same dispatch rule
+over pure arrays in compiled code; this class is the serving-path
+(one-request-at-a-time) form.  ``MinHeap`` is the seed tuple heap, kept
+as the equivalence oracle.
 """
 
 from __future__ import annotations
@@ -21,6 +30,8 @@ import itertools
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
+
+import numpy as np
 
 POLICIES = ("fcfs", "sjf", "sjf_oracle")
 
@@ -101,6 +112,155 @@ class MinHeap:
         return all(a[(i - 1) >> 1] <= a[i] for i in range(1, len(a)))
 
 
+class ArrayHeap:
+    """Indexed SoA binary min-heap over ``(key, seq)`` with tombstones.
+
+    Parallel numpy columns (float64 key / int64 seq / int64 id) instead of
+    a list of tuples; a position map ``id -> slot`` is maintained through
+    sifts so :meth:`kill` is O(1) — mark dead, no re-heapify.  Dead entries
+    keep their ordering key, are skipped at pop, and once they outnumber
+    the live ones the heap compacts in one vectorized lexsort pass (a
+    key-sorted array is a valid binary heap) — amortized O(1) per
+    tombstone.
+    """
+
+    _MIN_COMPACT = 32     # don't bother compacting tiny heaps
+
+    def __init__(self, capacity: int = 16):
+        capacity = max(capacity, 1)
+        self._key = np.empty(capacity, np.float64)
+        self._seq = np.empty(capacity, np.int64)
+        self._id = np.empty(capacity, np.int64)
+        self._dead = np.zeros(capacity, bool)
+        self._pos: dict[int, int] = {}
+        self._n = 0           # slots in use (live + dead)
+        self._ndead = 0
+
+    def __len__(self) -> int:
+        return self._n - self._ndead
+
+    def _less(self, a: int, b: int) -> bool:
+        ka, kb = self._key[a], self._key[b]
+        return bool(ka < kb or (ka == kb and self._seq[a] < self._seq[b]))
+
+    def _swap(self, a: int, b: int) -> None:
+        k, s, i, d = self._key, self._seq, self._id, self._dead
+        k[a], k[b] = k[b], k[a]
+        s[a], s[b] = s[b], s[a]
+        i[a], i[b] = i[b], i[a]
+        d[a], d[b] = d[b], d[a]
+        self._pos[int(i[a])] = a
+        self._pos[int(i[b])] = b
+
+    def _grow(self) -> None:
+        cap = self._key.shape[0] * 2
+        for name in ("_key", "_seq", "_id", "_dead"):
+            old = getattr(self, name)
+            new = np.zeros(cap, old.dtype) if old.dtype == bool \
+                else np.empty(cap, old.dtype)
+            new[:self._n] = old[:self._n]
+            setattr(self, name, new)
+
+    def push(self, key: float, seq: int, item_id: int) -> None:
+        slot = self._pos.get(item_id)
+        if slot is not None:
+            if not self._dead[slot]:
+                raise ValueError(f"duplicate heap id {item_id}")
+            # cancel-then-retry of the same id: evict the tombstone so the
+            # position index stays one-to-one
+            self._remove_at(slot)
+            self._ndead -= 1
+        if self._n == self._key.shape[0]:
+            self._grow()
+        c = self._n
+        self._n += 1
+        self._key[c] = key
+        self._seq[c] = seq
+        self._id[c] = item_id
+        self._dead[c] = False
+        self._pos[item_id] = c
+        self._sift_up(c)
+
+    def _sift_up(self, c: int) -> None:
+        while c > 0:
+            parent = (c - 1) >> 1
+            if not self._less(c, parent):
+                break
+            self._swap(c, parent)
+            c = parent
+
+    def _sift_down(self, c: int) -> None:
+        n = self._n
+        while True:
+            l, r = 2 * c + 1, 2 * c + 2
+            smallest = c
+            if l < n and self._less(l, smallest):
+                smallest = l
+            if r < n and self._less(r, smallest):
+                smallest = r
+            if smallest == c:
+                return
+            self._swap(c, smallest)
+            c = smallest
+
+    def _remove_at(self, slot: int) -> None:
+        """Physically delete the entry at ``slot`` (swap-with-last)."""
+        last = self._n - 1
+        if slot != last:
+            self._swap(slot, last)    # moves the victim's pos to `last`...
+        self._n = last
+        del self._pos[int(self._id[last])]   # ...so delete it afterwards
+        if slot < last:
+            self._sift_down(slot)
+            self._sift_up(slot)
+
+    def _remove_root(self):
+        root = (float(self._key[0]), int(self._seq[0]), int(self._id[0]),
+                bool(self._dead[0]))
+        self._remove_at(0)
+        return root
+
+    def kill(self, item_id: int) -> bool:
+        """O(1) tombstone; the entry stays in place until popped/compacted."""
+        slot = self._pos.get(item_id)
+        if slot is None or self._dead[slot]:
+            return False
+        self._dead[slot] = True
+        self._ndead += 1
+        if self._ndead > len(self) and self._n >= self._MIN_COMPACT:
+            self.compact()
+        return True
+
+    def compact(self) -> None:
+        """Drop all tombstones in one vectorized pass (sorted => heap)."""
+        n = self._n
+        live = ~self._dead[:n]
+        order = np.lexsort((self._seq[:n][live], self._key[:n][live]))
+        for name in ("_key", "_seq", "_id"):
+            arr = getattr(self, name)
+            arr[:order.shape[0]] = arr[:n][live][order]
+        self._n = order.shape[0]
+        self._ndead = 0
+        self._dead[:self._n] = False
+        self._pos = {int(i): s for s, i in enumerate(self._id[:self._n])}
+
+    def pop(self):
+        """Min live ``(key, seq, id)``; skips tombstones."""
+        while self._n:
+            key, seq, item_id, dead = self._remove_root()
+            if dead:
+                self._ndead -= 1
+                continue
+            return key, seq, item_id
+        raise IndexError("pop from empty heap")
+
+    def invariant_ok(self) -> bool:
+        ok = all(not self._less(i, (i - 1) >> 1) for i in range(1, self._n))
+        pos_ok = all(int(self._id[s]) == i and s < self._n
+                     for i, s in self._pos.items())
+        return ok and pos_ok and len(self._pos) == self._n
+
+
 class SJFQueue:
     """Admission queue implementing the paper's dispatch rule."""
 
@@ -108,7 +268,7 @@ class SJFQueue:
         assert policy in POLICIES, policy
         self.policy = policy
         self.tau = tau
-        self._heap = MinHeap()
+        self._heap = ArrayHeap()
         self._fifo: deque = deque()       # arrival order for starvation guard
         self._seq = itertools.count()
         self._live: dict[int, Request] = {}
@@ -127,15 +287,16 @@ class SJFQueue:
     def push(self, req: Request) -> None:
         seq = next(self._seq)
         self._live[req.req_id] = req
-        self._heap.push(self._key(req), seq, req)
+        self._heap.push(self._key(req), seq, req.req_id)
         self._fifo.append(req)
 
     def cancel(self, req_id: int) -> bool:
-        """Client disconnect while queued: lazy heap deletion."""
+        """Client disconnect while queued: O(1) lazy heap deletion."""
         req = self._live.pop(req_id, None)
         if req is None:
             return False
         req.cancelled = True
+        self._heap.kill(req_id)
         self.stats["cancellations"] += 1
         return True
 
@@ -157,18 +318,18 @@ class SJFQueue:
         """Next request to dispatch at time ``now`` (None if empty)."""
         victim = self._starving(now)
         if victim is not None:
-            # promote the longest-waiting request past the heap
+            # promote the longest-waiting request past the heap; its heap
+            # entry becomes a tombstone
             self._fifo.popleft()
             del self._live[victim.req_id]
+            self._heap.kill(victim.req_id)
             victim.promoted = True
             self.stats["promotions"] += 1
             self.stats["dispatched"] += 1
             return victim
-        while len(self._heap):
-            _, _, req = self._heap.pop()
-            if req.cancelled or req.req_id not in self._live:
-                continue  # tombstone
-            del self._live[req.req_id]
+        if len(self._heap):
+            _, _, req_id = self._heap.pop()
+            req = self._live.pop(req_id)
             self.stats["dispatched"] += 1
             return req
         return None

@@ -1,0 +1,344 @@
+"""Vectorized serial-backend DES: SoA request batches + compiled engine.
+
+The seed simulator (kept as ``simulation.simulate_reference``) walks one
+Python ``Request`` object per event through a tuple-heap — minutes of
+interpreter time for the paper's sweep grids.  This module rebuilds that
+stack around struct-of-arrays data:
+
+* :class:`RequestBatch` — numpy columns (arrival / true_service / p_long /
+  klass codes / tenant codes) for a whole arrival stream, with vectorized
+  Poisson and burst generators replacing the per-object loops;
+* :func:`simulate_arrays` / :func:`simulate_grid` — the event loop over
+  those arrays.  The primary engine is ``_native.des_run_many``, a C loop
+  (compiled once at first use) driving an index-based binary min-heap
+  keyed on ``(key[i], i)`` with lazy tombstones for starvation
+  promotions; ``simulate_grid`` runs G independent simulations
+  (policy x tau x rho x seed cells) in ONE call so a whole sweep costs one
+  FFI round trip;
+* when no C compiler exists, a fallback runs the same per-event loop over
+  plain floats with stdlib ``heapq`` (C-speed sifts) — slower than the
+  native engine but still well ahead of the object/tuple-heap reference.
+
+Both engines are trace-equivalent to the reference loop — same float64
+clock accumulation, same ``(key, seq)`` tie-breaking, same strict
+``wait > tau`` promotion rule — bitwise, not just allclose
+(tests/test_simulation.py).
+
+Sweep usage (see ``core.sweep`` for the full grid API)::
+
+    from repro.core.sim_fast import RequestBatch, simulate_batch
+    from repro.core.sweep import sweep_poisson
+
+    rng = np.random.default_rng(0)
+    batch = RequestBatch.poisson(rng, n=2000, lam=0.12, short=S, long=L)
+    res = simulate_batch(batch, policy="sjf", tau=10.5)
+    res.percentile(50, klass="short")          # one cell
+
+    sweep = sweep_poisson(                      # whole grid, one call
+        conditions=[("fcfs", None), ("sjf", 10.5)],
+        rhos=(0.5, 0.74, 0.85), seeds=range(5), n=2000,
+        short=S, long=L)
+    sweep.metric("short_p50")                   # (C, R, S) array
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import _native
+from repro.core.scheduler import POLICIES, Request
+
+KLASSES = ("", "short", "medium", "long")
+_KLASS_CODE = {k: i for i, k in enumerate(KLASSES)}
+
+
+def _klass_codes(names: Sequence[str]) -> np.ndarray:
+    return np.array([_KLASS_CODE.get(k, 0) for k in names], np.int8)
+
+
+@dataclass
+class RequestBatch:
+    """Struct-of-arrays arrival stream (one row per request)."""
+
+    arrival: np.ndarray        # (n,) float64
+    true_service: np.ndarray   # (n,) float64
+    p_long: np.ndarray         # (n,) float64
+    klass: np.ndarray          # (n,) int8, index into KLASSES
+    tenant: np.ndarray         # (n,) int32, index into ``tenants``
+    req_id: np.ndarray         # (n,) int64
+    tenants: Tuple[str, ...] = ("default",)
+
+    def __len__(self) -> int:
+        return self.arrival.shape[0]
+
+    def __post_init__(self):
+        self.arrival = np.ascontiguousarray(self.arrival, np.float64)
+        self.true_service = np.ascontiguousarray(self.true_service,
+                                                 np.float64)
+        self.p_long = np.ascontiguousarray(self.p_long, np.float64)
+        self.klass = np.ascontiguousarray(self.klass, np.int8)
+        self.tenant = np.ascontiguousarray(self.tenant, np.int32)
+        self.req_id = np.ascontiguousarray(self.req_id, np.int64)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_arrays(cls, arrival, true_service, p_long=None, klass=None,
+                    req_id=None) -> "RequestBatch":
+        n = len(arrival)
+        if p_long is None:
+            p_long = np.zeros(n)
+        if klass is None:
+            klass = np.zeros(n, np.int8)
+        else:
+            klass = np.asarray(klass)
+            if klass.dtype.kind in "US":
+                klass = _klass_codes(klass)
+        if req_id is None:
+            req_id = np.arange(n, dtype=np.int64)
+        return cls(arrival=np.asarray(arrival, np.float64),
+                   true_service=np.asarray(true_service, np.float64),
+                   p_long=np.asarray(p_long, np.float64),
+                   klass=np.asarray(klass, np.int8),
+                   tenant=np.zeros(n, np.int32), req_id=req_id)
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request]) -> "RequestBatch":
+        tenants = tuple(dict.fromkeys(r.tenant for r in requests)) or \
+            ("default",)
+        tcode = {t: i for i, t in enumerate(tenants)}
+        return cls(
+            arrival=np.array([r.arrival for r in requests], np.float64),
+            true_service=np.array([r.true_service for r in requests],
+                                  np.float64),
+            p_long=np.array([r.p_long for r in requests], np.float64),
+            klass=_klass_codes([r.klass for r in requests]),
+            tenant=np.array([tcode[r.tenant] for r in requests], np.int32),
+            req_id=np.array([r.req_id for r in requests], np.int64),
+            tenants=tenants)
+
+    def to_requests(self) -> List[Request]:
+        return [Request(req_id=int(self.req_id[i]),
+                        arrival=float(self.arrival[i]),
+                        true_service=float(self.true_service[i]),
+                        p_long=float(self.p_long[i]),
+                        klass=KLASSES[self.klass[i]],
+                        tenant=self.tenants[self.tenant[i]])
+                for i in range(len(self))]
+
+    # -- vectorized workload generators -------------------------------------
+
+    @classmethod
+    def poisson(cls, rng, n: int, lam: float, short, long,
+                mix_long: float = 0.5) -> "RequestBatch":
+        """Open-loop Poisson arrivals, short/long service mix (one shot —
+        no per-object loop; draw order differs from the seed generator)."""
+        arrival = np.cumsum(rng.exponential(1.0 / lam, n))
+        is_long = rng.random(n) < mix_long
+        service = np.where(is_long, long.sample(rng, n),
+                           short.sample(rng, n))
+        klass = np.where(is_long, _KLASS_CODE["long"],
+                         _KLASS_CODE["short"]).astype(np.int8)
+        return cls.from_arrays(arrival, service,
+                               p_long=is_long.astype(np.float64),
+                               klass=klass)
+
+    @classmethod
+    def burst(cls, rng, n_short: int, n_long: int, short, long,
+              window: float = 0.05) -> "RequestBatch":
+        """All requests arrive within ``window`` seconds (§5.5 stress)."""
+        total = n_short + n_long
+        is_long = rng.permutation(total) >= n_short
+        arrival = rng.uniform(0, window, total)
+        service = np.where(is_long, long.sample(rng, total),
+                           short.sample(rng, total))
+        klass = np.where(is_long, _KLASS_CODE["long"],
+                         _KLASS_CODE["short"]).astype(np.int8)
+        return cls.from_arrays(arrival, service,
+                               p_long=is_long.astype(np.float64),
+                               klass=klass)
+
+
+def dispatch_key(policy: str, arrival: np.ndarray, p_long: np.ndarray,
+                 true_service: np.ndarray) -> np.ndarray:
+    """The SJFQueue priority key of each request, as an array."""
+    assert policy in POLICIES, policy
+    if policy == "fcfs":
+        return arrival
+    if policy == "sjf_oracle":
+        return true_service
+    return p_long
+
+
+# ---------------------------------------------------------------------------
+# Engines.  Contract: ``arrival`` ascending (ties broken by array index,
+# which is the reference's (arrival, req_id) push order -> heap seq).
+# ---------------------------------------------------------------------------
+
+def _simulate_arrays_python(arrival, service, key, tau):
+    """Fallback engine (no C compiler): the same per-event loop over plain
+    floats, with stdlib ``heapq`` doing the (key, seq) sifts in C.  Bitwise
+    trace-equivalent to the reference — identical float ops, identical
+    tie-breaking, identical strict ``(now - arrival) > tau`` promotion."""
+    import heapq
+    n = arrival.shape[0]
+    arr = arrival.tolist()
+    svc = service.tolist()
+    ks = key.tolist()
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    promoted = np.zeros(n, bool)
+    done = [False] * n
+    heap: list = []
+    guard = tau is not None
+    t = 0.0
+    i_arr = 0
+    oldest = 0
+    promos = 0
+    ndone = 0
+    while ndone < n:
+        if i_arr == ndone:                        # queue empty: jump
+            a = arr[i_arr]
+            if t < a:
+                t = a
+        while i_arr < n and arr[i_arr] <= t:
+            heapq.heappush(heap, (ks[i_arr], i_arr))
+            i_arr += 1
+        while done[oldest]:
+            oldest += 1
+        if guard and (t - arr[oldest]) > tau:
+            j = oldest                            # promote past the heap;
+            promoted[j] = True                    # stale entry -> tombstone
+            promos += 1
+        else:
+            while True:
+                _, j = heapq.heappop(heap)
+                if not done[j]:
+                    break
+        done[j] = True
+        start[j] = t
+        t += svc[j]
+        finish[j] = t
+        ndone += 1
+    return start, finish, promoted, promos
+
+
+def simulate_grid(arrival, service, key, tau, engine: str = "auto"):
+    """G independent simulations in one call.
+
+    ``arrival``/``service``/``key``: (G, n) float64, each row ascending in
+    arrival; ``tau``: length-G sequence (None entries disable the guard).
+    Returns ``(start, finish, promoted, promotions)`` with shapes
+    ((G, n), (G, n), (G, n) bool, (G,) int64).
+    """
+    arrival = np.ascontiguousarray(arrival, np.float64)
+    service = np.ascontiguousarray(service, np.float64)
+    key = np.ascontiguousarray(key, np.float64)
+    G, n = arrival.shape
+    # NaN = guard disabled (None); any real tau — including negative, which
+    # promotes every waiter — keeps the reference's strict wait > tau rule
+    tau_arr = np.array([np.nan if t is None else float(t) for t in tau],
+                       np.float64)
+    if tau_arr.shape != (G,):
+        raise ValueError(f"tau must have length {G}")
+    start = np.empty((G, n))
+    finish = np.empty((G, n))
+    promoted_u8 = np.zeros((G, n), np.uint8)
+    promotions = np.zeros(G, np.int64)
+    if n == 0:
+        return start, finish, promoted_u8.astype(bool), promotions
+    if engine not in ("auto", "native", "python"):
+        raise ValueError(f"unknown engine {engine!r}")
+    fn = _native.native_des() if engine in ("auto", "native") else None
+    if engine == "native" and fn is None:
+        raise RuntimeError("native DES engine unavailable")
+    if fn is not None:
+        import ctypes
+        heap = np.empty(n, np.int32)
+        done = np.empty(n, np.uint8)
+        pd = ctypes.c_double
+        fn(_native.as_ptr(arrival, pd), _native.as_ptr(service, pd),
+           _native.as_ptr(key, pd), _native.as_ptr(tau_arr, pd), G, n,
+           _native.as_ptr(start, pd), _native.as_ptr(finish, pd),
+           _native.as_ptr(promoted_u8, ctypes.c_uint8),
+           _native.as_ptr(promotions, ctypes.c_int64),
+           _native.as_ptr(heap, ctypes.c_int32),
+           _native.as_ptr(done, ctypes.c_uint8))
+        return start, finish, promoted_u8.astype(bool), promotions
+    promoted = np.zeros((G, n), bool)
+    for g in range(G):
+        tg = None if np.isnan(tau_arr[g]) else float(tau_arr[g])
+        start[g], finish[g], promoted[g], promos = _simulate_arrays_python(
+            arrival[g], service[g], key[g], tg)
+        promotions[g] = promos
+    return start, finish, promoted, promotions
+
+
+def simulate_arrays(arrival, service, key, tau: Optional[float],
+                    engine: str = "auto"):
+    """One simulation over flat (n,) arrays; see :func:`simulate_grid`."""
+    start, finish, promoted, promotions = simulate_grid(
+        arrival[None], service[None], key[None], (tau,), engine=engine)
+    return start[0], finish[0], promoted[0], int(promotions[0])
+
+
+# ---------------------------------------------------------------------------
+# Batch-level front end
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BatchSimResult:
+    """Per-request outcomes aligned with the input batch's row order."""
+
+    batch: RequestBatch
+    start: np.ndarray          # (n,) float64
+    finish: np.ndarray         # (n,) float64
+    promoted: np.ndarray       # (n,) bool
+    promotions: int
+    makespan: float
+
+    def _vals(self, klass: Optional[str], attr: str) -> np.ndarray:
+        if attr == "sojourn":
+            v = self.finish - self.batch.arrival
+        elif attr == "wait":
+            v = self.start - self.batch.arrival
+        else:
+            v = getattr(self, attr)
+        if klass is not None:
+            v = v[self.batch.klass == _KLASS_CODE[klass]]
+        return v
+
+    def percentile(self, q: float, klass: Optional[str] = None,
+                   attr: str = "sojourn") -> float:
+        v = self._vals(klass, attr)
+        return float(np.percentile(v, q)) if len(v) else float("nan")
+
+    def mean(self, klass: Optional[str] = None,
+             attr: str = "sojourn") -> float:
+        v = self._vals(klass, attr)
+        return float(v.mean()) if len(v) else float("nan")
+
+
+def simulate_batch(batch: RequestBatch, policy: str = "sjf",
+                   tau: Optional[float] = None,
+                   engine: str = "auto") -> BatchSimResult:
+    """Run the serial-server DES over a :class:`RequestBatch`."""
+    perm = np.lexsort((batch.req_id, batch.arrival))
+    arrival = batch.arrival[perm]
+    service = batch.true_service[perm]
+    key = dispatch_key(policy, arrival, batch.p_long[perm], service)
+    start_s, finish_s, promoted_s, promotions = simulate_arrays(
+        arrival, service, key, tau, engine=engine)
+    n = len(batch)
+    start = np.empty(n)
+    finish = np.empty(n)
+    promoted = np.empty(n, bool)
+    start[perm] = start_s
+    finish[perm] = finish_s
+    promoted[perm] = promoted_s
+    return BatchSimResult(batch=batch, start=start, finish=finish,
+                          promoted=promoted, promotions=promotions,
+                          makespan=float(finish.max()) if n else 0.0)

@@ -1,0 +1,81 @@
+"""JAX replication engine: the serial-server DES as a vmapped scan.
+
+The host engines (``core.sim_fast``) are fastest for one cell on CPU; this
+module is the device path for the *embarrassingly parallel* axis of a
+sweep — every (policy, tau, rho, seed) cell is an independent simulation,
+so the whole grid maps onto hardware as one ``vmap`` over a fixed-length
+``lax.scan``.
+
+Each simulation dispatches exactly ``n`` requests, so the scan runs ``n``
+steps of O(n) masked vector work (admission mask, FIFO-oldest argmax,
+(key, seq) argmin) — O(n^2) lanes per cell, but every lane is data
+parallel, which is the right trade for accelerators and keeps the whole
+grid in one XLA computation.  Requests must be pre-sorted by
+``(arrival, req_id)`` per row, exactly like the host engines.
+
+In float64 mode (``jax.config.update("jax_enable_x64", True)``) the
+dispatch trace matches the host engines bitwise; under default float32
+the dispatch *order* still matches whenever clock rounding cannot flip a
+comparison, and times agree to float32 tolerance (see
+tests/test_simulation.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _simulate_one(arrival, service, key, tau):
+    """One cell: (n,) arrays -> (start, finish, promoted, promotions)."""
+    n = arrival.shape[0]
+    dt = arrival.dtype
+    inf = jnp.asarray(jnp.inf, dt)
+
+    def step(carry, _):
+        t, done, start, promoted, promos = carry
+        next_arr = jnp.where(done, inf, arrival).min()
+        queued = (arrival <= t) & ~done
+        t = jnp.where(queued.any(), t, jnp.maximum(t, next_arr))
+        queued = (arrival <= t) & ~done
+        oldest = jnp.argmax(queued)           # first queued = FIFO head
+        promote = (t - arrival[oldest]) > tau  # NaN tau: always False
+        masked = jnp.where(queued, key, inf)
+        pick = jnp.argmax(queued & (masked == masked.min()))
+        j = jnp.where(promote, oldest, pick)
+        start = start.at[j].set(t)
+        t = t + service[j]
+        done = done.at[j].set(True)
+        promoted = promoted.at[j].set(promote)
+        promos = promos + promote.astype(jnp.int32)
+        return (t, done, start, promoted, promos), None
+
+    init = (jnp.asarray(0.0, dt), jnp.zeros(n, bool), jnp.zeros(n, dt),
+            jnp.zeros(n, bool), jnp.asarray(0, jnp.int32))
+    (t, _, start, promoted, promos), _ = jax.lax.scan(
+        step, init, None, length=n)
+    return start, start + service, promoted, promos
+
+
+@jax.jit
+def _simulate_grid_jit(arrival, service, key, tau):
+    return jax.vmap(_simulate_one)(arrival, service, key, tau)
+
+
+def simulate_grid_jax(arrival, service, key, tau):
+    """G independent simulations on the JAX backend, one computation.
+
+    Same contract as :func:`sim_fast.simulate_grid`: (G, n) arrays sorted
+    by arrival per row, ``tau`` a length-G sequence with None disabling
+    the guard.  Returns numpy ``(start, finish, promoted, promotions)``.
+    """
+    dt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    tau_arr = np.array([np.nan if t is None else float(t) for t in tau])
+    start, finish, promoted, promos = _simulate_grid_jit(
+        jnp.asarray(arrival, dt), jnp.asarray(service, dt),
+        jnp.asarray(key, dt), jnp.asarray(tau_arr, dt))
+    return (np.asarray(start, np.float64), np.asarray(finish, np.float64),
+            np.asarray(promoted, bool), np.asarray(promos, np.int64))

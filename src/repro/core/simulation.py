@@ -5,6 +5,13 @@ of the paper's steady-state analysis and the closed-queue setting of its
 burst benchmark.  Service times come either from parametric distributions
 (the paper's calibrated Gaussians) or from the framework's roofline-derived
 engine cost model (serving/service_time.py).
+
+``simulate`` runs on the vectorized SoA engine (``core.sim_fast`` — C
+inner loop with a run-batched numpy fallback); the seed per-event Python
+loop is kept as ``simulate_reference``, the trace-equivalence oracle and
+the "old" side of ``benchmarks/sim_bench.py``.  For whole grids
+(policy x tau x rho x seed) use ``core.sweep`` — one call per sweep, not
+one per cell.
 """
 
 from __future__ import annotations
@@ -39,9 +46,9 @@ class SimResult:
         return float(v.mean()) if len(v) else float("nan")
 
 
-def simulate(requests: Sequence[Request], policy: str = "sjf",
-             tau: Optional[float] = None) -> SimResult:
-    """Run the serial-server DES.  ``requests`` carry arrival/p_long/service."""
+def simulate_reference(requests: Sequence[Request], policy: str = "sjf",
+                       tau: Optional[float] = None) -> SimResult:
+    """Seed per-event loop (the trace-equivalence oracle; slow)."""
     reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
     q = SJFQueue(policy=policy, tau=tau)
     t = 0.0
@@ -62,6 +69,34 @@ def simulate(requests: Sequence[Request], policy: str = "sjf",
         done.append(req)
     return SimResult(requests=done, promotions=q.stats["promotions"],
                      makespan=t)
+
+
+def simulate(requests: Sequence[Request], policy: str = "sjf",
+             tau: Optional[float] = None, engine: str = "auto") -> SimResult:
+    """Run the serial-server DES.  ``requests`` carry arrival/p_long/service.
+
+    Same contract as the seed loop (start/finish/promoted written onto the
+    passed Requests, dispatch-ordered result list), but executed on the
+    vectorized array engine — trace-equivalent bitwise.
+    """
+    from repro.core.sim_fast import dispatch_key, simulate_arrays
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    n = len(reqs)
+    if n == 0:
+        return SimResult(requests=[], promotions=0, makespan=0.0)
+    arrival = np.array([r.arrival for r in reqs], np.float64)
+    service = np.array([r.true_service for r in reqs], np.float64)
+    p_long = np.array([r.p_long for r in reqs], np.float64)
+    key = dispatch_key(policy, arrival, p_long, service)
+    start, finish, promoted, promotions = simulate_arrays(
+        arrival, service, key, tau, engine=engine)
+    for i, r in enumerate(reqs):
+        r.start = float(start[i])
+        r.finish = float(finish[i])
+        r.promoted = bool(promoted[i])
+    done = [reqs[i] for i in np.argsort(start, kind="stable")]
+    return SimResult(requests=done, promotions=promotions,
+                     makespan=float(finish.max()))
 
 
 # ---------------------------------------------------------------------------

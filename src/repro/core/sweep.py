@@ -1,0 +1,189 @@
+"""One-shot sweep grids over the queueing simulation (paper §5.4/§5.5).
+
+Every end-to-end number in the paper is a grid — policy x tau for Table 9,
+policy x rho x seed for Fig. 3, policy x workload x run for Table 8.  The
+seed benchmarks walked those grids cell by cell through the per-object
+simulator; this module runs a whole grid through the vectorized engine
+(``core.sim_fast``) in ONE call:
+
+    from repro.core.sweep import sweep_poisson
+    res = sweep_poisson(
+        conditions=[("fcfs", None), ("sjf", 10.5), ("sjf", None)],
+        rhos=(0.5, 0.74), seeds=range(5), n=2000, short=S, long=L)
+    res.metric("short_p50")          # (C, R, S) ndarray
+    res.metric("short_p50").mean(-1) # seed-averaged (C, R)
+
+Workloads are generated once per (rho, seed) cell — vectorized, no Request
+objects — and shared across all conditions (paired comparison, as the seed
+benchmarks did via deepcopy).  Backends: ``auto`` (compiled C engine,
+stdlib-heapq fallback) and ``jax`` (vmapped scan, ``core.sim_jax``) for
+running the per-cell axis on an accelerator.
+
+``run_grid`` is the non-DES counterpart used by the accuracy-table
+benchmarks (model x feature-group, model x baseline): one call evaluates
+a cartesian grid of cells and returns the keyed results.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sim_fast import RequestBatch, dispatch_key, simulate_grid
+
+Condition = Tuple[str, Optional[float]]          # (policy, tau)
+
+METRICS = ("short_p50", "short_p95", "long_p50", "long_p95",
+           "mean_sojourn", "mean_wait", "promotions", "makespan")
+
+
+@dataclass
+class SweepResult:
+    """Metric arrays over a conditions x rhos x seeds grid."""
+
+    conditions: Tuple[Condition, ...]
+    rhos: Tuple[float, ...]
+    seeds: Tuple[int, ...]
+    metrics: Dict[str, np.ndarray]               # each (C, R, S)
+
+    def metric(self, name: str) -> np.ndarray:
+        return self.metrics[name]
+
+    def condition_index(self, policy: str, tau: Optional[float]) -> int:
+        return self.conditions.index((policy, tau))
+
+
+def _percentile_metrics(start: np.ndarray, finish: np.ndarray,
+                        promotions: int, arrival: np.ndarray,
+                        short_mask: np.ndarray,
+                        long_mask: np.ndarray) -> Tuple[float, ...]:
+    sojourn = finish - arrival
+    wait = start - arrival
+    s, l = sojourn[short_mask], sojourn[long_mask]
+    return (float(np.percentile(s, 50)) if s.size else float("nan"),
+            float(np.percentile(s, 95)) if s.size else float("nan"),
+            float(np.percentile(l, 50)) if l.size else float("nan"),
+            float(np.percentile(l, 95)) if l.size else float("nan"),
+            float(sojourn.mean()), float(wait.mean()),
+            float(promotions), float(finish.max()))
+
+
+def sweep_batches(batches: Sequence[RequestBatch],
+                  conditions: Sequence[Condition],
+                  backend: str = "auto", return_arrays: bool = False):
+    """Simulate every (condition, batch) cell in one engine call.
+
+    Returns ``{metric: (C, B) ndarray}``.  All batches must have equal
+    length (stacked into one (C*B, n) grid).  With ``return_arrays``,
+    additionally returns ``(arrival, klass, start, finish, promoted)`` as
+    (C*B, n) arrays (row ``c * B + g``, each row in its batch's
+    arrival-sorted order) for callers that pool raw sojourns across cells.
+    """
+    C, B = len(conditions), len(batches)
+    n = len(batches[0])
+    assert all(len(b) == n for b in batches), "batches must be same length"
+
+    # sort each batch once; reuse the sorted arrays for every condition
+    sorted_cols = []
+    for b in batches:
+        perm = np.lexsort((b.req_id, b.arrival))
+        sorted_cols.append((b.arrival[perm], b.true_service[perm],
+                            b.p_long[perm], b.klass[perm]))
+
+    arrival = np.empty((C * B, n))
+    service = np.empty((C * B, n))
+    key = np.empty((C * B, n))
+    taus: List[Optional[float]] = []
+    for c, (policy, tau) in enumerate(conditions):
+        for g, (arr, svc, pl, _) in enumerate(sorted_cols):
+            row = c * B + g
+            arrival[row] = arr
+            service[row] = svc
+            key[row] = dispatch_key(policy, arr, pl, svc)
+            taus.append(tau)
+
+    if backend == "jax":
+        from repro.core.sim_jax import simulate_grid_jax
+        start, finish, promoted, promotions = simulate_grid_jax(
+            arrival, service, key, taus)
+    else:
+        start, finish, promoted, promotions = simulate_grid(
+            arrival, service, key, taus, engine=backend)
+
+    from repro.core.sim_fast import _KLASS_CODE
+    out = {m: np.empty((C, B)) for m in METRICS}
+    for c in range(C):
+        for g in range(B):
+            row = c * B + g
+            klass = sorted_cols[g][3]
+            vals = _percentile_metrics(
+                start[row], finish[row], int(promotions[row]),
+                arrival[row], klass == _KLASS_CODE["short"],
+                klass == _KLASS_CODE["long"])
+            for m, v in zip(METRICS, vals):
+                out[m][c, g] = v
+    if return_arrays:
+        klass = np.tile(np.stack([kc for _, _, _, kc in sorted_cols]),
+                        (C, 1))
+        return out, (arrival, klass, start, finish, promoted)
+    return out
+
+
+def sweep_poisson(conditions: Sequence[Condition], rhos: Sequence[float],
+                  seeds: Sequence[int], n: int, short, long,
+                  mix_long: float = 0.5,
+                  backend: str = "auto") -> SweepResult:
+    """The paper's steady-state grid: conditions x rhos x seeds, one call.
+
+    ``rho = lam * E[S]`` fixes the arrival rate per rho; one workload per
+    (rho, seed) is shared across all conditions.
+    """
+    conditions = tuple((p, t) for p, t in conditions)
+    rhos = tuple(float(r) for r in rhos)
+    seeds = tuple(int(s) for s in seeds)
+    es = mix_long * long.mean + (1.0 - mix_long) * short.mean
+    batches = []
+    for rho in rhos:
+        lam = rho / es
+        for seed in seeds:
+            rng = np.random.default_rng(seed)
+            batches.append(RequestBatch.poisson(rng, n, lam, short, long,
+                                                mix_long=mix_long))
+    flat = sweep_batches(batches, conditions, backend=backend)
+    C, R, S = len(conditions), len(rhos), len(seeds)
+    return SweepResult(conditions=conditions, rhos=rhos, seeds=seeds,
+                       metrics={m: v.reshape(C, R, S)
+                                for m, v in flat.items()})
+
+
+def sweep_burst(conditions: Sequence[Condition], seeds: Sequence[int],
+                n_short: int, n_long: int, short, long,
+                window: float = 0.05,
+                backend: str = "auto") -> SweepResult:
+    """The §5.5 burst grid: all requests arrive within ``window``."""
+    conditions = tuple((p, t) for p, t in conditions)
+    seeds = tuple(int(s) for s in seeds)
+    batches = [RequestBatch.burst(np.random.default_rng(s), n_short, n_long,
+                                  short, long, window=window)
+               for s in seeds]
+    flat = sweep_batches(batches, conditions, backend=backend)
+    C, S = len(conditions), len(seeds)
+    return SweepResult(conditions=conditions, rhos=(float("nan"),),
+                       seeds=seeds,
+                       metrics={m: v.reshape(C, 1, S)
+                                for m, v in flat.items()})
+
+
+def run_grid(axes: Dict[str, Sequence], fn: Callable) -> Dict[tuple, object]:
+    """Evaluate ``fn(**point)`` over the cartesian product of ``axes``.
+
+    The non-DES grid helper: the accuracy tables (model x feature-group,
+    model x baseline) run their whole grid through one call and get back
+    ``{(v1, v2, ...): fn_result}`` keyed in axis order.
+    """
+    names = list(axes)
+    return {combo: fn(**dict(zip(names, combo)))
+            for combo in itertools.product(*(axes[k] for k in names))}

@@ -35,6 +35,15 @@ class ServiceTimeModel:
                 + prompt_tokens / self.prefill_tok_per_s
                 + output_tokens / self.decode_tok_per_s)
 
+    def service_batch(self, prompt_tokens, output_tokens) -> np.ndarray:
+        """Vectorized ``service`` over whole request batches (float64) —
+        what the SoA simulation path (core.sim_fast) consumes."""
+        return (self.overhead_s
+                + np.asarray(prompt_tokens, np.float64)
+                / self.prefill_tok_per_s
+                + np.asarray(output_tokens, np.float64)
+                / self.decode_tok_per_s)
+
     @classmethod
     def from_arch(cls, cfg, chips: int = 1, mfu: float = 0.4,
                   hbm_frac: float = 0.7, kv_tokens: int = 2048
@@ -60,10 +69,36 @@ PAPER_M1_SHORT = ServiceDist(mean=2.1, std=1.1)
 PAPER_M1_LONG = ServiceDist(mean=29.7, std=11.7)
 
 
+# per-class response-length draws: (lognormal mu, sigma, clip lo, clip hi);
+# medium is a uniform integer range instead
+_LEN_SHORT = (3.7, 0.8, 1, 199)
+_LEN_LONG = (float(np.log(1400.0)), 0.45, 800, 8000)
+_LEN_MEDIUM = (200, 800)
+
+
 def sample_output_tokens(rng, klass: str) -> int:
     """Response-length draw consistent with the corpus class boundaries."""
-    if klass == "short":
-        return int(np.clip(rng.lognormal(3.7, 0.8), 1, 199))
     if klass == "medium":
-        return int(rng.integers(200, 800))
-    return int(np.clip(rng.lognormal(np.log(1400.0), 0.45), 800, 8000))
+        return int(rng.integers(*_LEN_MEDIUM))
+    mu, sig, lo, hi = _LEN_SHORT if klass == "short" else _LEN_LONG
+    return int(np.clip(rng.lognormal(mu, sig), lo, hi))
+
+
+def sample_output_tokens_batch(rng, klasses) -> np.ndarray:
+    """Vectorized :func:`sample_output_tokens` over an array of class
+    names (or ``sim_fast.KLASSES`` codes) — one draw pass per class."""
+    klasses = np.asarray(klasses)
+    if klasses.dtype.kind in "US":
+        from repro.core.sim_fast import KLASSES
+        code = {k: i for i, k in enumerate(KLASSES)}
+        klasses = np.array([code[k] for k in klasses], np.int8)
+    n = klasses.shape[0]
+    out = np.empty(n, np.int64)
+    short = klasses == 1
+    med = klasses == 2
+    long = ~(short | med)
+    for mask, (mu, sig, lo, hi) in ((short, _LEN_SHORT), (long, _LEN_LONG)):
+        out[mask] = np.clip(rng.lognormal(mu, sig, int(mask.sum())),
+                            lo, hi).astype(np.int64)
+    out[med] = rng.integers(*_LEN_MEDIUM, size=int(med.sum()))
+    return out

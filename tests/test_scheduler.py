@@ -8,7 +8,7 @@ has no hypothesis package).
 import numpy as np
 import pytest
 
-from repro.core.scheduler import MinHeap, Request, SJFQueue
+from repro.core.scheduler import ArrayHeap, MinHeap, Request, SJFQueue
 
 
 # --------------------------------------------------------------- MinHeap
@@ -39,6 +39,73 @@ def test_heap_fifo_tiebreak():
             if k in prev:
                 assert seq > prev[k], "equal keys must pop in FIFO order"
             prev[k] = seq
+
+
+# --------------------------------------------------------------- ArrayHeap
+def test_array_heap_pops_sorted_with_fifo_tiebreak():
+    rng = np.random.default_rng(5)
+    for trial in range(30):
+        n = int(rng.integers(1, 200))
+        keys = rng.integers(0, 8, n).astype(float).tolist()
+        h = ArrayHeap()
+        for i, k in enumerate(keys):
+            h.push(k, i, i)
+            assert h.invariant_ok()
+        out = [h.pop() for _ in range(len(h))]
+        assert [k for k, _, _ in out] == sorted(keys)
+        prev = {}
+        for k, seq, _ in out:
+            if k in prev:
+                assert seq > prev[k], "equal keys must pop FIFO"
+            prev[k] = seq
+        with pytest.raises(IndexError):
+            h.pop()
+
+
+def test_array_heap_kill_is_lazy_and_compacts():
+    rng = np.random.default_rng(6)
+    for trial in range(20):
+        n = int(rng.integers(40, 300))
+        keys = rng.normal(0, 10, n).tolist()
+        h = ArrayHeap()
+        for i, k in enumerate(keys):
+            h.push(k, i, i)
+        dead = set(int(i) for i in
+                   rng.choice(n, size=int(rng.integers(1, n)), replace=False))
+        for i in dead:
+            assert h.kill(i)
+            assert not h.kill(i)          # double-kill is a no-op
+        assert len(h) == n - len(dead)
+        assert h.invariant_ok()           # compaction keeps the heap valid
+        out = [h.pop() for _ in range(len(h))]
+        assert {i for _, _, i in out} == set(range(n)) - dead
+        assert [k for k, _, _ in out] == sorted(k for i, k in enumerate(keys)
+                                                if i not in dead)
+
+
+def test_array_heap_interleaved_push_kill_pop():
+    rng = np.random.default_rng(7)
+    h = ArrayHeap()
+    live = {}
+    next_id = 0
+    popped = []
+    for step in range(3000):
+        op = rng.random()
+        if op < 0.5 or not live:
+            h.push(float(rng.integers(0, 50)), next_id, next_id)
+            live[next_id] = True
+            next_id += 1
+        elif op < 0.75:
+            victim = int(rng.choice(list(live)))
+            assert h.kill(victim)
+            del live[victim]
+        else:
+            k, _, i = h.pop()
+            assert i in live
+            del live[i]
+            popped.append((k, i))
+        assert len(h) == len(live)
+    assert h.invariant_ok()
 
 
 # --------------------------------------------------------------- SJFQueue
@@ -118,6 +185,70 @@ def test_mass_cancellation_tombstones_and_promotion():
     assert q.stats["dispatched"] == 2
     # cancelling after dispatch is a no-op
     assert not q.cancel(150)
+
+
+def test_cancel_then_repush_same_req_id():
+    """A client retry after disconnect reuses its req_id: the queue must
+    accept the re-push (evicting the heap tombstone) and dispatch the
+    retried request once."""
+    q = SJFQueue(policy="sjf")
+    q.push(_mk(0, p_long=0.2))
+    q.push(_mk(1, p_long=0.5))
+    assert q.cancel(0)
+    q.push(_mk(0, p_long=0.9))               # retry, worse priority now
+    assert len(q) == 2
+    got = [q.pop(now=0.0).req_id for _ in range(2)]
+    assert got == [1, 0]
+    assert q.pop(now=0.0) is None
+    assert q.stats["dispatched"] == 2 and q.stats["cancellations"] == 1
+    h = ArrayHeap()
+    h.push(1.0, 0, 7)
+    with pytest.raises(ValueError):          # live duplicates still rejected
+        h.push(2.0, 1, 7)
+
+
+def test_promotion_fifo_order_under_simultaneous_arrivals():
+    """Equal arrival times: the guard promotes in push (seq) order, not by
+    p_long — the FIFO is the tie-break, matching the simulation engines."""
+    q = SJFQueue(policy="sjf", tau=1.0)
+    for i, p in enumerate([0.9, 0.5, 0.7, 0.2]):
+        q.push(_mk(i, arrival=0.0, p_long=p))
+    got = [q.pop(now=10.0).req_id for _ in range(4)]
+    assert got == [0, 1, 2, 3]              # all starving -> pure FIFO
+    assert q.stats["promotions"] == 4
+    assert all(r == i for i, r in enumerate(got))
+
+
+def test_tau_zero_promotes_any_positive_wait():
+    """tau=0 is a valid guard (not falsy-None): strictly positive wait
+    promotes; zero wait does not."""
+    q = SJFQueue(policy="sjf", tau=0.0)
+    q.push(_mk(0, arrival=0.0, p_long=0.9))
+    q.push(_mk(1, arrival=0.0, p_long=0.1))
+    # at now=0 the wait is exactly 0, NOT > tau: SJF order applies
+    assert q.pop(now=0.0).req_id == 1
+    assert q.stats["promotions"] == 0
+    # any positive wait now promotes the survivor
+    got = q.pop(now=1e-9)
+    assert got.req_id == 0 and got.promoted
+    assert q.stats["promotions"] == 1
+
+
+def test_promotion_skips_tombstoned_fifo_head():
+    """Cancel the oldest waiter, then pop with the guard armed: the guard
+    must skip the tombstone and promote the oldest LIVE request, and the
+    cancelled request must never be dispatched."""
+    q = SJFQueue(policy="sjf", tau=2.0)
+    q.push(_mk(0, arrival=0.0, p_long=0.4))   # oldest; will be cancelled
+    q.push(_mk(1, arrival=1.0, p_long=0.8))   # oldest live -> promoted
+    q.push(_mk(2, arrival=9.0, p_long=0.1))   # below tau, better p_long
+    assert q.cancel(0)
+    got = q.pop(now=10.0)
+    assert got.req_id == 1 and got.promoted
+    # the heap tombstone of req 0 must be skipped on the next pop too
+    assert q.pop(now=10.2).req_id == 2
+    assert q.pop(now=10.4) is None
+    assert q.stats == {"promotions": 1, "cancellations": 1, "dispatched": 2}
 
 
 def test_conservation_every_request_dispatched_once():

@@ -1,4 +1,5 @@
-"""DES correctness: work conservation, SJF optimality, P-K agreement.
+"""DES correctness: work conservation, SJF optimality, P-K agreement,
+and trace equivalence of every fast engine against the seed loop.
 
 Property tests use seeded ``np.random.default_rng`` loops (this container
 has no hypothesis package).
@@ -8,8 +9,11 @@ import numpy as np
 import pytest
 
 from repro.core.scheduler import Request
+from repro.core.sim_fast import RequestBatch, simulate_batch
 from repro.core.simulation import (ServiceDist, burst_workload, cs2,
-                                   pk_wait_fcfs, poisson_workload, simulate)
+                                   pk_wait_fcfs, poisson_workload, simulate,
+                                   simulate_reference)
+from repro.core.sweep import sweep_batches, sweep_poisson
 
 
 def _reqs(entries):
@@ -70,6 +74,125 @@ def test_cs2_mixed_exceeds_homogeneous():
     long = ServiceDist(29.7, 11.7).sample(rng, 5000)
     mixed = np.where(rng.random(5000) < 0.8, short, long)
     assert cs2(mixed) > 1.0 > max(cs2(short), cs2(long))
+
+
+# ------------------------------------------------------- trace equivalence
+
+def _engines():
+    from repro.core import _native
+    return ["python"] + (["native"] if _native.native_des() else [])
+
+
+def test_trace_equivalence_randomized_streams():
+    """Fast engines vs the seed loop: bitwise-identical start/finish/
+    promoted per request, identical promotion counts — every policy,
+    tau in {None, negative (promote-always), 0, small, large}, randomized
+    arrival streams with duplicate arrivals and tied keys."""
+    rng = np.random.default_rng(11)
+    for trial in range(40):
+        n = int(rng.integers(1, 120))
+        policy = ["fcfs", "sjf", "sjf_oracle"][int(rng.integers(0, 3))]
+        tau = [None, -1.0, 0.0, float(rng.uniform(0.1, 5.0)),
+               float(rng.uniform(5.0, 80.0))][int(rng.integers(0, 5))]
+        arrival = np.round(rng.uniform(0, 30, n), 2)   # rounded: duplicates
+        service = np.round(rng.uniform(0.05, 8, n), 3)
+        p_long = np.round(rng.random(n), 1)            # coarse: tied keys
+
+        def mk():
+            return [Request(req_id=i, arrival=float(arrival[i]),
+                            true_service=float(service[i]),
+                            p_long=float(p_long[i]))
+                    for i in range(n)]
+
+        ref = simulate_reference(mk(), policy=policy, tau=tau)
+        ref_by_id = {r.req_id: (r.start, r.finish, r.promoted)
+                     for r in ref.requests}
+        for eng in _engines():
+            fast = simulate(mk(), policy=policy, tau=tau, engine=eng)
+            assert fast.promotions == ref.promotions, (policy, tau, eng)
+            assert fast.makespan == ref.makespan
+            for r in fast.requests:
+                assert ref_by_id[r.req_id] == (r.start, r.finish,
+                                               r.promoted), \
+                    (policy, tau, eng, r.req_id)
+
+
+def test_trace_equivalence_poisson_and_burst_batches():
+    """simulate_batch (SoA front end) vs the reference on generated
+    workloads, all three policies."""
+    rng = np.random.default_rng(3)
+    short, long = ServiceDist(2.0, 0.5), ServiceDist(12.0, 2.0)
+    batches = [RequestBatch.poisson(rng, 400, 0.3, short, long),
+               RequestBatch.burst(rng, 60, 20, short, long)]
+    for batch in batches:
+        for policy in ("fcfs", "sjf", "sjf_oracle"):
+            for tau in (None, 6.0):
+                ref = simulate_reference(batch.to_requests(), policy=policy,
+                                         tau=tau)
+                ref_start = np.array(
+                    [r.start for r in sorted(ref.requests,
+                                             key=lambda r: r.req_id)])
+                for eng in _engines():
+                    res = simulate_batch(batch, policy=policy, tau=tau,
+                                         engine=eng)
+                    assert np.array_equal(res.start, ref_start)
+                    assert res.promotions == ref.promotions
+                    soj = res.finish - batch.arrival
+                    assert np.isclose(
+                        res.percentile(50, klass="short"),
+                        float(np.percentile(
+                            soj[batch.klass == 1], 50)))
+
+
+def test_sweep_matches_per_cell_reference():
+    """One-shot sweep metrics == per-cell reference percentiles."""
+    short, long = ServiceDist(2.0, 0.5), ServiceDist(10.0, 2.0)
+    conditions = [("fcfs", None), ("sjf", 6.0), ("sjf_oracle", None)]
+    res = sweep_poisson(conditions, rhos=(0.6,), seeds=(0, 1), n=300,
+                        short=short, long=long)
+    es = 0.5 * (short.mean + long.mean)
+    for ci, (policy, tau) in enumerate(conditions):
+        for si, seed in enumerate((0, 1)):
+            rng = np.random.default_rng(seed)
+            batch = RequestBatch.poisson(rng, 300, 0.6 / es, short, long)
+            ref = simulate_reference(batch.to_requests(), policy=policy,
+                                     tau=tau)
+            assert np.isclose(res.metric("short_p50")[ci, 0, si],
+                              ref.percentile(50, "short"), rtol=1e-12)
+            assert np.isclose(res.metric("long_p95")[ci, 0, si],
+                              ref.percentile(95, "long"), rtol=1e-12)
+            assert res.metric("promotions")[ci, 0, si] == ref.promotions
+
+
+def test_jax_engine_matches_dispatch_order():
+    """The vmapped JAX scan engine: identical dispatch order (float32 clock
+    cannot flip these comparisons) and times within float32 tolerance."""
+    jax = pytest.importorskip("jax")
+    from repro.core.sim_jax import simulate_grid_jax
+    from repro.core.sim_fast import dispatch_key
+    rng = np.random.default_rng(5)
+    n, G = 80, 6
+    arrival = np.sort(np.round(rng.uniform(0, 20, (G, n)), 2), axis=1)
+    service = np.round(rng.uniform(0.5, 4, (G, n)), 2)
+    p_long = np.round(rng.random((G, n)), 2)
+    taus = [None, 0.0, 3.0, None, 8.0, 1.0]
+    policies = ["fcfs", "sjf", "sjf", "sjf_oracle", "sjf", "sjf"]
+    key = np.stack([dispatch_key(p, arrival[g], p_long[g], service[g])
+                    for g, p in enumerate(policies)])
+    start, finish, promoted, promos = simulate_grid_jax(
+        arrival, service, key, taus)
+    for g in range(G):
+        reqs = [Request(req_id=i, arrival=float(arrival[g, i]),
+                        true_service=float(service[g, i]),
+                        p_long=float(p_long[g, i])) for i in range(n)]
+        ref = simulate_reference(reqs, policy=policies[g], tau=taus[g])
+        ref_start = np.array([r.start for r in sorted(ref.requests,
+                                                      key=lambda r: r.req_id)])
+        assert np.allclose(start[g], ref_start, rtol=1e-5, atol=1e-4), g
+        # same dispatch ORDER, not just close times
+        assert np.array_equal(np.argsort(start[g], kind="stable"),
+                              np.argsort(ref_start, kind="stable")), g
+        assert int(promos[g]) == ref.promotions, g
 
 
 def test_starvation_timeout_bounds_long_wait():
