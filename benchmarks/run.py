@@ -7,7 +7,9 @@ tracked across PRs:
 * ``predictor`` -> ``BENCH_predictor.json`` (feature-extraction us,
   single / batch host-scorer us, Pallas us, train seconds, speedups);
 * ``sim`` -> ``BENCH_sim.json`` (one-shot sweep vs per-event reference
-  wall clock on a table9-sized grid, trace-equivalence verdict).
+  wall clock on a table9-sized grid, trace-equivalence verdict);
+* ``serve`` -> ``BENCH_serve.json`` (seed vs fused real-decode tokens/s,
+  TTFT, per-token dispatch overhead, end-to-end queue-to-completion P50).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -24,14 +26,16 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSONS = {
     "predictor": os.path.join(_ROOT, "BENCH_predictor.json"),
     "sim": os.path.join(_ROOT, "BENCH_sim.json"),
+    "serve": os.path.join(_ROOT, "BENCH_serve.json"),
 }
 
 
 def main() -> None:
-    from benchmarks import (fig3_rho_sweep, predictor_latency, sim_bench,
-                            table1_service_stats, table2_dataset_stats,
-                            table4_ablation, table5_ranking, table6_cross,
-                            table7_baselines, table8_burst, table9_tau)
+    from benchmarks import (fig3_rho_sweep, predictor_latency, serve_bench,
+                            sim_bench, table1_service_stats,
+                            table2_dataset_stats, table4_ablation,
+                            table5_ranking, table6_cross, table7_baselines,
+                            table8_burst, table9_tau)
 
     suites = {
         "table1": table1_service_stats.run,
@@ -45,6 +49,7 @@ def main() -> None:
         "fig3": fig3_rho_sweep.run,
         "predictor": predictor_latency.run,
         "sim": sim_bench.run,
+        "serve": serve_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

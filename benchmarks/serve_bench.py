@@ -1,0 +1,168 @@
+"""Serve benchmark: seed per-token loop vs fused on-device decode, plus the
+first end-to-end number in the repo that exercises predictor -> SJF queue ->
+real decode in one path (writes ``BENCH_serve.json``).
+
+Three measurements on a reduced smollm backbone (CPU container):
+
+* **decode microbench** — tokens/s, TTFT and per-token latency for the seed
+  per-token Python loop (``RealEngine.generate_reference``: one jit dispatch
+  + host argmax + token re-upload per step) vs the fused segmented loop
+  (``RealEngine.generate``).  Per-token *dispatch overhead* is each path's
+  per-token latency minus the device compute floor, where the floor is the
+  per-token latency of a single max-length segment (one dispatch for the
+  whole generation — pure ``lax.while_loop`` decode).
+* **bitwise equivalence** — the fused token sequence must equal the oracle's.
+* **end-to-end serving** — a 16-request burst (longs arriving first: the
+  paper's HoL-blocking setup) through ``ClairvoyantServer`` backed by
+  ``RealEngine``, FCFS vs SJF, batched admission via ``submit_many``;
+  reports queue-to-completion P50 by class in real wall-clock seconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+MAX_LEN = 160
+SEGMENT = 16
+N_NEW = 96
+PROMPT_LEN = 24
+REPEAT = 7
+
+
+def _per_tok_us(out) -> float:
+    return (out["service_s"] - out["ttft_s"]) / max(1, len(out["tokens"]) - 1) * 1e6
+
+
+def _best(fn, repeat=REPEAT):
+    """Best-of-N by wall time; returns the fastest repeat's output so its
+    internal ttft/service timings match the reported number."""
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        o = fn()
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, out = dt, o
+    return out, best
+
+
+def _decode_microbench(result: dict) -> None:
+    from repro.configs import get_config
+    from repro.serving.engine import RealEngine
+
+    cfg = get_config("smollm-360m").reduced()
+    eng = RealEngine(cfg, max_len=MAX_LEN, segment_len=SEGMENT)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, cfg.vocab_size, PROMPT_LEN)
+
+    # compile everything outside the timed region
+    eng.generate_reference(ids, max_new_tokens=N_NEW)
+    eng.generate(ids, max_new_tokens=N_NEW)
+    eng.generate(ids, max_new_tokens=N_NEW, segment_len=N_NEW)
+
+    seed, _ = _best(lambda: eng.generate_reference(ids, max_new_tokens=N_NEW))
+    fused, _ = _best(lambda: eng.generate(ids, max_new_tokens=N_NEW))
+    oneshot, _ = _best(
+        lambda: eng.generate(ids, max_new_tokens=N_NEW, segment_len=N_NEW))
+
+    floor = _per_tok_us(oneshot)           # device compute, 1 dispatch total
+    per_seed, per_fused = _per_tok_us(seed), _per_tok_us(fused)
+    ov_seed = max(per_seed - floor, 0.0)
+    ov_fused = max(per_fused - floor, 1e-3)
+
+    result.update({
+        "equivalent_tokens": seed["tokens"] == fused["tokens"],
+        "tok_per_s_seed": len(seed["tokens"]) / seed["service_s"],
+        "tok_per_s_fused": len(fused["tokens"]) / fused["service_s"],
+        "ttft_ms_seed": seed["ttft_s"] * 1e3,
+        "ttft_ms_fused": fused["ttft_s"] * 1e3,
+        "per_tok_us_seed": per_seed,
+        "per_tok_us_fused": per_fused,
+        "per_tok_us_compute_floor": floor,
+        "dispatch_overhead_us_seed": ov_seed,
+        "dispatch_overhead_us_fused": ov_fused,
+        "dispatch_overhead_reduction_x": ov_seed / ov_fused,
+    })
+    emit("serve_decode_seed", per_seed,
+         f"{result['tok_per_s_seed']:.0f} tok/s ttft {seed['ttft_s']*1e3:.2f} ms")
+    emit("serve_decode_fused", per_fused,
+         f"{result['tok_per_s_fused']:.0f} tok/s ttft {fused['ttft_s']*1e3:.2f} ms "
+         f"segment={SEGMENT} equivalent={result['equivalent_tokens']}")
+    emit("serve_dispatch_overhead", ov_fused,
+         f"seed {ov_seed:.0f} us/tok -> fused {ov_fused:.0f} us/tok "
+         f"({result['dispatch_overhead_reduction_x']:.1f}x reduction, "
+         f"floor {floor:.0f} us/tok)")
+
+
+def _end_to_end(result: dict) -> None:
+    from repro.configs import get_config
+    from repro.core.gbdt import GBDTParams
+    from repro.core.predictor import Predictor
+    from repro.data.corpus import sample_dataset
+    from repro.serving.engine import RealEngine
+    from repro.serving.openai_api import CompletionRequest
+    from repro.serving.server import ClairvoyantServer
+
+    ds = sample_dataset("sharegpt", n=2400, seed=42, balanced=True)
+    predictor = Predictor.train(ds.prompts, ds.lengths,
+                                GBDTParams(num_rounds=60))
+
+    pool = sample_dataset("sharegpt", n=4000, seed=1)
+    shorts = [i for i in range(len(pool)) if pool.lengths[i] < 120][:10]
+    longs = [i for i in range(len(pool)) if pool.lengths[i] >= 1000][:6]
+    cfg = get_config("smollm-360m").reduced()
+
+    # one engine for both policies (identical params -> shared compiles);
+    # compile every prefill bucket + the decode segment before the measured
+    # drains, so P50s reflect queueing + decode, not jit.
+    eng = RealEngine(cfg, max_len=MAX_LEN, segment_len=SEGMENT, seed=0)
+    for b in eng.buckets:
+        eng.generate(np.arange(b) % cfg.vocab_size, max_new_tokens=2)
+
+    e2e = {}
+    for policy in ("fcfs", "sjf"):
+        eng.busy_until, eng.served = 0.0, 0
+        server = ClairvoyantServer(
+            policy=policy, tau=None,
+            predictor=predictor if policy == "sjf" else None, engines=[eng])
+        # adversarial burst: the long requests hit the queue first (HoL).
+        order = longs + shorts
+        reqs = [CompletionRequest(prompt=pool.prompts[i]) for i in order]
+        server.submit_many(
+            reqs,
+            arrivals=[j * 1e-4 for j in range(len(order))],
+            true_output_tokens=[64 if i in longs else 8 for i in order],
+            klasses=["long" if i in longs else "short" for i in order])
+        t0 = time.perf_counter()
+        server.drain(max_new_tokens=64)
+        wall = time.perf_counter() - t0
+        e2e[policy] = {
+            "short_p50_ms": server.percentile(50, "short") * 1e3,
+            "long_p50_ms": server.percentile(50, "long") * 1e3,
+            "wall_s": wall,
+        }
+    red = 100 * (1 - e2e["sjf"]["short_p50_ms"] / e2e["fcfs"]["short_p50_ms"])
+    e2e["short_p50_reduction_pct"] = red
+    result["e2e"] = {k: ({kk: round(vv, 3) for kk, vv in v.items()}
+                         if isinstance(v, dict) else round(v, 2))
+                     for k, v in e2e.items()}
+    emit("serve_e2e_short_p50", e2e["sjf"]["short_p50_ms"] * 1e3,
+         f"fcfs {e2e['fcfs']['short_p50_ms']:.1f} ms -> "
+         f"sjf {e2e['sjf']['short_p50_ms']:.1f} ms ({red:.0f}% reduction), "
+         f"real fused decode, n=16 burst")
+
+
+def run() -> dict:
+    result: dict = {"max_len": MAX_LEN, "segment_len": SEGMENT,
+                    "max_new_tokens": N_NEW}
+    _decode_microbench(result)
+    _end_to_end(result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -67,11 +67,13 @@ def main():
         server = ClairvoyantServer(policy=policy, tau=None, **server_args)
         ds2 = sample_dataset("sharegpt", n=100, seed=2)
         rng = np.random.default_rng(3)
-        for i in range(100):
-            klass = ("short", "medium", "long")[int(ds2.classes[i])]
-            server.submit(CompletionRequest(prompt=ds2.prompts[i]),
-                          arrival=float(rng.uniform(0, 0.05)),
-                          true_output_tokens=int(ds2.lengths[i]), klass=klass)
+        # batched admission: one predictor call for the whole burst
+        server.submit_many(
+            [CompletionRequest(prompt=p) for p in ds2.prompts],
+            arrivals=rng.uniform(0, 0.05, 100),
+            true_output_tokens=[int(l) for l in ds2.lengths],
+            klasses=[("short", "medium", "long")[int(c)]
+                     for c in ds2.classes])
         server.drain()
         results[policy] = server.percentile(50, "short")
         print(f"{policy}: short P50 sojourn {results[policy]:.1f}s")

@@ -1,13 +1,21 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 tests + the perf microbenchmarks.
 #
-#   scripts/ci.sh            # full tier-1 + predictor/sim benches (write
-#                            # BENCH_predictor.json / BENCH_sim.json)
+#   scripts/ci.sh            # full tier-1 + predictor/sim/serve benches
+#                            # (write BENCH_predictor.json / BENCH_sim.json /
+#                            # BENCH_serve.json)
 #   SKIP_BENCH=1 scripts/ci.sh   # tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== repo hygiene: no tracked bytecode =="
+if git ls-files | grep -E '(^|/)__pycache__/|\.py[co]$' ; then
+    echo "ERROR: compiled bytecode is tracked (see list above);"
+    echo "       git rm --cached it and rely on .gitignore"
+    exit 1
+fi
 
 echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
@@ -21,4 +29,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run sim
     echo "== BENCH_sim.json =="
     cat BENCH_sim.json
+    echo "== serving benchmark (fused decode + end-to-end) =="
+    python -m benchmarks.run serve
+    echo "== BENCH_serve.json =="
+    cat BENCH_serve.json
 fi

@@ -3,7 +3,11 @@
 Decode is memory-bound: the whole KV cache streams HBM->VMEM once per token.
 The kernel tiles the cache sequence axis; each (batch, head) program streams
 KV blocks through VMEM carrying the online-softmax state, masking slots
-beyond the current fill level ``t``.  All G query heads of a KV group share
+beyond the current fill level ``t``.  ``t`` is the *absolute* fill level of
+the ring-buffer cache (models/attention.py writes step t at slot ``t % S``):
+while t < S the predicate ``slot <= t`` masks the unwritten suffix, and once
+the ring wraps it is all-true — every slot then holds one of the S most
+recent tokens, so the same kernel serves both regimes.  All G query heads of a KV group share
 the same K/V block fetch (q is laid out (B, KV, G, hd) so the group rides in
 one block) — on real hardware this is the G-fold HBM-bandwidth saving that
 makes GQA decode fast; the grid never re-reads a KV block.
@@ -61,7 +65,8 @@ def _decode_kernel(t_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def decode_attention_kernel(q, k, v, t, *, block_kv: int = 256,
                             interpret: bool = True):
     """q: (B, KV, G, hd) one query token, grouped; k, v: (B, KV, S, hd);
-    t: scalar int32 fill level (slots <= t attend).  Returns (B, KV, G, hd).
+    t: scalar int32 absolute fill level (slots <= t attend; all slots once
+    the ring has wrapped, t >= S).  Returns (B, KV, G, hd).
     """
     B, KV, G, hd = q.shape
     S = k.shape[2]

@@ -78,11 +78,13 @@ def main(argv=None):
     else:
         arrivals = rng.uniform(0, 0.05, args.requests)  # burst (<=50 ms)
 
-    for i in range(args.requests):
-        klass = CLASS_NAMES[int(ds.classes[i])]
-        server.submit(CompletionRequest(prompt=ds.prompts[i]),
-                      arrival=float(arrivals[i]),
-                      true_output_tokens=int(ds.lengths[i]), klass=klass)
+    # batched admission: ONE feature-extraction + GBDT call for the burst
+    server.submit_many(
+        [CompletionRequest(prompt=ds.prompts[i])
+         for i in range(args.requests)],
+        arrivals=[float(a) for a in arrivals],
+        true_output_tokens=[int(l) for l in ds.lengths],
+        klasses=[CLASS_NAMES[int(c)] for c in ds.classes])
     server.drain()
 
     print(f"policy={args.policy} replicas={args.replicas} "

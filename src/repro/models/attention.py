@@ -161,10 +161,14 @@ def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
 
 
 def decode_attention(q, cache_k, cache_v, t):
-    """Single-position attention over a KV cache.
+    """Single-position attention over a (ring-buffer) KV cache.
 
-    q: (B, 1, H, hd); cache_k/v: (B, S, KV, hd); t: scalar — positions <= t
-    are attended (the current token's KV has been written at slot t).
+    q: (B, 1, H, hd); cache_k/v: (B, S, KV, hd); t: scalar absolute fill
+    level — slots <= t are attended (the current token's KV has been written
+    at slot t % S).  While t < S the mask is the usual prefix mask; once the
+    ring wraps (t >= S) every slot holds one of the S most recent tokens and
+    ``arange(S) <= t`` is all-true, so the same predicate serves both
+    regimes — no separate "wrapped" code path.
 
     With PERF["decode_cast_f32"]=False, the cache is consumed in its native
     dtype with f32 accumulation inside the einsum — the f32 cache copies
@@ -198,7 +202,11 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
 
     mode "train": full causal attention, no cache returned.
     mode "prefill": causal attention; returns {"k","v","t"} cache.
-    mode "decode": x is (B,1,D); reads/writes cache at slot cache["t"].
+    mode "decode": x is (B,1,D); the cache is a ring buffer of S slots —
+    the new KV is written at slot ``t % S`` (t = absolute fill level, RoPE
+    stays absolute) so generation past the cache capacity wraps onto the
+    oldest slots instead of forcing a larger allocation; while t < S this
+    is exactly the old append-at-t behavior.
     """
     B = x.shape[0]
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
@@ -212,11 +220,13 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
         if mode == "prefill":
             new_cache = {"k": k, "v": v, "t": jnp.asarray(S, jnp.int32)}
     else:  # decode
-        t = cache["t"]  # scalar int32: index of the slot to write
+        t = cache["t"]  # scalar int32: absolute fill level (write slot t % S)
+        S = cache["k"].shape[1]
         positions = jnp.full((1,), t, jnp.int32)
         q, k, v = _project_qkv(cfg, p, h, positions)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), t, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), t, axis=1)
+        slot = jax.lax.rem(t, jnp.int32(S))
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
         cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
         out = decode_attention(q, ck, cv, t)

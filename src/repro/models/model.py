@@ -174,18 +174,36 @@ class LM:
         return ce + AUX_LOSS_WEIGHT * aux
 
     # -- serving -------------------------------------------------------------
-    def prefill(self, params, batch, pad_to: Optional[int] = None):
+    def prefill(self, params, batch, pad_to: Optional[int] = None,
+                prompt_len=None):
         """Full-prompt forward building the decode cache.
 
         Returns (last_logits (B,V), caches).  Attention KV caches are padded
         to ``pad_to`` slots if given.
+
+        ``prompt_len`` (optional dynamic scalar) enables *bucketed* prefill:
+        the token batch may be right-padded to a bucket length; logits are
+        gathered at position ``prompt_len - 1`` and the attention fill level
+        ``t`` is reset to ``prompt_len`` so decode overwrites the pad slots
+        in order.  Because prefill attention is causal and pads sit at the
+        end, positions < prompt_len never attend a pad slot, and decode masks
+        slots > t — pad KV is dead until overwritten.  Only valid for padded
+        inputs on architectures whose per-position state is causal-local
+        (pure attention stacks); SSM/xLSTM recurrences would fold pad tokens
+        into their state, so callers pass exact-length inputs there.
         """
         cfg = self.cfg
         x = self._embed_in(params, batch)
         img = batch.get("image_embeds")
         x, caches, _ = tf.run_stack(cfg, params["blocks"], x, mode="prefill",
                                     image_embeds=img, remat=False)
-        logits = self._head(params, x[:, -1:, :])[:, 0]
+        if prompt_len is None:
+            last = x[:, -1:, :]
+        else:
+            idx = jnp.asarray(prompt_len, jnp.int32) - 1
+            last = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+            caches = _set_fill(cfg, caches, jnp.asarray(prompt_len, jnp.int32))
+        logits = self._head(params, last)[:, 0]
         if pad_to is not None:
             caches = _pad_kv(cfg, caches, pad_to)
         return logits, caches
@@ -209,7 +227,15 @@ class LM:
     # -- cache construction ---------------------------------------------------
     def init_cache(self, batch_size: int, max_len: int, t0: int = 0):
         """Zero caches (stacked over repeats) for decode-from-scratch or as
-        dry-run input specs.  ``t0`` sets the current fill level."""
+        dry-run input specs.  ``t0`` sets the current fill level.
+
+        Attention caches are *ring buffers* of ``max_len`` slots: decode
+        writes the step-``t`` KV at slot ``t % max_len`` and attends slots
+        ``<= t`` (all of them once wrapped), so a request is never
+        reallocated a larger cache when generation approaches the buffer
+        end — capacity bounds the attention window, not the output length.
+        ``t`` is the absolute fill level (RoPE positions stay absolute).
+        """
         cfg = self.cfg
         dt = dtype_of(cfg)
         rep = cfg.pattern_repeats
@@ -282,6 +308,17 @@ class LM:
                 a = (None, "batch", "heads", "head_dim")
                 axes.append({"c": a, "n": a, "h": a, "m": a})
         return tuple(axes)
+
+
+def _set_fill(cfg, caches, t):
+    """Reset every attention cache's fill level to ``t`` (dynamic scalar)."""
+    out = []
+    for kind, c in zip(cfg.block_pattern, caches):
+        if kind in (ATTN, ATTN_MOE):
+            c = dict(c)
+            c["t"] = jnp.full_like(c["t"], t)
+        out.append(c)
+    return tuple(out)
 
 
 def _pad_kv(cfg, caches, pad_to: int):

@@ -2,24 +2,46 @@
 
 Two execution modes share one interface:
 
-* ``RealEngine`` — jitted prefill + greedy decode of an actual LM (used by
-  the examples and integration tests with reduced configs on CPU; on TPU the
-  same class serves full configs with the Pallas decode kernels swapped in
-  via kernels/ops.py);
+* ``RealEngine`` — jitted prefill + fused on-device greedy decode of an
+  actual LM (used by the examples, the serve benchmark and integration tests
+  with reduced configs on CPU; on TPU the same class serves full configs
+  with the Pallas decode kernels swapped in via kernels/ops.py);
 * ``SimEngine`` — virtual-clock engine using a ServiceTimeModel (used by the
   queueing benchmarks, where thousands of requests are served).
 
 Both are strictly serial: one request in flight per replica — the regime the
 paper targets (§2.3).  Disconnect semantics per §3.4: cancellation while
-queued removes the heap entry (lazy); cancellation mid-generation drains the
-response to free the dispatch slot.
+queued removes the heap entry (lazy); cancellation mid-generation stops the
+fused loop at the next segment boundary (``request_cancel``), draining the
+response to free the dispatch slot within ``segment_len`` tokens.
+
+``RealEngine`` generation path (PR 3):
+
+* **Bucketed prefill** — prompts are right-padded to a small geometric set
+  of lengths (powers of two up to ``max_len``; see
+  ``generate.geometric_buckets``), so a mixed-length admission stream
+  triggers O(log max_len) jit compiles instead of one per distinct prompt
+  length.  The true ``prompt_len`` rides into the jitted prefill as a
+  dynamic scalar: logits are gathered at ``prompt_len - 1`` and the cache
+  fill level is reset to ``prompt_len`` (models/model.py).  Padded prefill
+  is only bit-safe for causal-local stacks, so bucketing engages when the
+  block pattern is pure attention and falls back to exact lengths (the seed
+  behavior) otherwise.
+* **Ring-buffer KV cache** — caches hold ``max_len`` slots; decode writes
+  step ``t`` at slot ``t % max_len`` (models/attention.py), so capacity is
+  an attention-window bound, never a per-request reallocation.
+* **Fused decode** — ``generate`` drives ``serving.generate.FusedDecoder``:
+  segments of ``segment_len`` tokens run in one jitted ``lax.while_loop``
+  with the EOS/length stop on device and the caches donated in place; the
+  host syncs once per segment.  The seed per-token Python loop is retained
+  as ``generate_reference`` — the bitwise token-sequence equivalence oracle
+  (tests/test_generate.py), matching the PR 1/PR 2 oracle pattern.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -45,42 +67,125 @@ class SimEngine:
         return ttft, service
 
 
+# Padded (bucketed) prefill is only used when every block's per-position
+# state is causal-local; SSM/xLSTM recurrences fold pad tokens into their
+# state and MoE capacity routing lets pad tokens evict real ones.
+_BUCKET_SAFE_KINDS = ("attn",)
+
+
 class RealEngine:
     """Actual LM decode on device (reduced configs on this CPU container)."""
 
     def __init__(self, cfg, params=None, replica_id: int = 0, seed: int = 0,
-                 max_len: int = 256):
+                 max_len: int = 256, segment_len: int = 16):
         import jax
         import jax.numpy as jnp
         from repro.models.model import LM
+        from repro.serving.generate import FusedDecoder, geometric_buckets
 
         self.cfg = cfg
         self.lm = LM(cfg)
         self.replica_id = replica_id
         self.max_len = max_len
+        self.segment_len = segment_len
         self.params = params if params is not None \
             else self.lm.init(jax.random.key(seed))
         self.busy_until = 0.0
         self.served = 0
+        self._cancel = False
 
-        self._prefill = jax.jit(lambda p, b: self.lm.prefill(p, b,
-                                                             pad_to=max_len))
-        self._decode = jax.jit(self.lm.decode_step)
+        self._bucketing = all(k in _BUCKET_SAFE_KINDS
+                              for k in cfg.block_pattern)
+        self.buckets = geometric_buckets(max_len) if self._bucketing else ()
+        # One jit; retraces once per bucket shape (prompt_len is dynamic).
+        self._prefill = jax.jit(
+            lambda p, toks, plen: self.lm.prefill(
+                p, {"tokens": toks}, pad_to=max_len, prompt_len=plen))
+        self._decode = jax.jit(self.lm.decode_step)       # oracle path
+        self._decoders = {segment_len: FusedDecoder(self.lm, max_len,
+                                                    segment_len)}
 
+    # ---------------------------------------------------------------- admin
+    def request_cancel(self) -> None:
+        """§3.4 mid-generation disconnect: the fused loop observes this flag
+        at the next segment boundary and drains."""
+        self._cancel = True
+
+    def _decoder(self, segment_len: int):
+        dec = self._decoders.get(segment_len)
+        if dec is None:
+            from repro.serving.generate import FusedDecoder
+            dec = FusedDecoder(self.lm, self.max_len, segment_len)
+            self._decoders[segment_len] = dec
+        return dec
+
+    # -------------------------------------------------------------- prefill
+    def _run_prefill(self, prompt_ids: np.ndarray):
+        """Bucket-pad + prefill.  Returns (last_logits, caches, prompt_len)."""
+        import jax.numpy as jnp
+        from repro.serving.generate import bucket_for
+        ids = np.asarray(prompt_ids, np.int32).reshape(-1)
+        plen = len(ids)
+        if plen < 1:
+            raise ValueError("empty prompt: prefill needs >= 1 token "
+                             "(dynamic_slice would silently clamp to 0)")
+        if self._bucketing:
+            bucket = bucket_for(plen, self.buckets)
+        else:
+            bucket = plen                     # exact length (seed behavior)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = ids
+        logits, caches = self._prefill(self.params, jnp.asarray(toks),
+                                       jnp.asarray(plen, jnp.int32))
+        return logits, caches, plen
+
+    # ------------------------------------------------------------- generate
     def generate(self, prompt_ids: np.ndarray, max_new_tokens: int = 32,
-                 eos_id: Optional[int] = None) -> dict:
-        """Greedy decode.  prompt_ids: (S,) ints.  Returns timing + tokens."""
+                 eos_id: Optional[int] = None, cancel_cb=None,
+                 segment_len: Optional[int] = None) -> dict:
+        """Fused greedy decode.  prompt_ids: (S,) ints.
+
+        Returns {"tokens", "ttft_s", "service_s", "cancelled", "segments"}.
+        ``cancel_cb`` (optional nullary) is polled with the engine's own
+        cancel flag between scan segments.
+        """
+        self._cancel = False
+        t0 = time.monotonic()
+        logits, caches, plen = self._run_prefill(prompt_ids)
+        tok = int(np.argmax(np.asarray(logits)[0]))
+        ttft = time.monotonic() - t0
+
+        def cancelled():
+            return self._cancel or (cancel_cb is not None and cancel_cb())
+
+        dec = self._decoder(segment_len or self.segment_len)
+        out = dec.decode(self.params, caches, tok, plen, max_new_tokens,
+                         eos_id=eos_id, cancel_check=cancelled)
+        self.served += 1
+        self._cancel = False
+        return {"tokens": out["tokens"], "ttft_s": ttft,
+                "service_s": time.monotonic() - t0,
+                "cancelled": out["cancelled"], "segments": out["segments"]}
+
+    def generate_reference(self, prompt_ids: np.ndarray,
+                           max_new_tokens: int = 32,
+                           eos_id: Optional[int] = None) -> dict:
+        """Seed per-token Python loop (one host sync + dispatch per token).
+
+        Kept in-tree as the equivalence oracle for the fused loop: same
+        prefill, same stop-condition order, so token sequences must match
+        bitwise (tests/test_generate.py).
+        """
         import jax.numpy as jnp
         t0 = time.monotonic()
-        batch = {"tokens": jnp.asarray(prompt_ids, jnp.int32)[None]}
-        logits, caches = self._prefill(self.params, batch)
+        logits, caches, plen = self._run_prefill(prompt_ids)
         tok = int(np.argmax(np.asarray(logits)[0]))
         ttft = time.monotonic() - t0
         out = [tok]
         for _ in range(max_new_tokens - 1):
             if eos_id is not None and tok == eos_id:
                 break
-            if len(prompt_ids) + len(out) >= self.max_len:
+            if plen + len(out) >= self.max_len:
                 break
             logits, caches = self._decode(
                 self.params, caches, {"tokens": jnp.full((1, 1), tok, jnp.int32)})

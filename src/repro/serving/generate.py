@@ -1,0 +1,154 @@
+"""Fused on-device greedy generation: segmented ``lax.while_loop`` decode.
+
+The seed decode loop (kept as ``RealEngine.generate_reference``) runs one
+jitted ``decode_step`` per token and syncs to host every step — ``np.argmax``
+on the logits plus a re-upload of the sampled token — so per-token cost on
+small models is dispatch latency, not compute.  :class:`FusedDecoder`
+replaces it with a *segmented* device loop:
+
+* one jitted call runs up to ``segment_len`` decode steps in a
+  ``lax.while_loop`` whose carry holds the current token, the KV caches and
+  the emitted-token buffer — tokens never leave the device inside a segment;
+* the EOS / ``max_len`` / ``max_new`` stop condition is evaluated on device
+  in the loop predicate, mirroring the oracle's Python ``break``s exactly
+  (same check order, so token sequences are bitwise-comparable);
+* the KV caches are **donated** into the segment call
+  (``donate_argnums``), so on backends with donation support the ring
+  buffers update in place instead of being copied once per call;
+* the host syncs once per segment to read the emitted tokens and check the
+  engine's cancel flag (§3.4 drain semantics: a disconnect observed between
+  segments stops generation at the segment boundary, freeing the serial
+  dispatch slot within ``segment_len`` tokens).
+
+Dispatch overhead is therefore amortized to ``1/segment_len`` of the seed
+loop's; ``benchmarks/serve_bench.py`` measures the ratio and writes it to
+``BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Older CPU jaxlibs ignore donation with a warning; the fused loop is still
+# correct (the copy just reappears).  Suppressed around the segment call
+# only — not globally — so applications keep the signal for their own jits.
+_DONATION_WARNING = "Some donated buffers were not usable"
+
+
+class FusedDecoder:
+    """Device-resident segmented greedy decoder for one ``LM``.
+
+    One instance per (model, max_len, segment_len); the segment function is
+    compiled once per cache shape (i.e. per cache capacity x batch size).
+    """
+
+    def __init__(self, lm, max_len: int, segment_len: int = 16):
+        assert segment_len >= 1
+        self.lm = lm
+        self.max_len = max_len
+        self.segment_len = segment_len
+        self._segment = jax.jit(self._segment_impl, donate_argnums=(1,))
+
+    def _segment_impl(self, params, caches, tok, produced, prompt_len,
+                      max_new, eos):
+        """Run up to ``segment_len`` decode steps on device.
+
+        tok: () int32 last emitted token; produced: () int32 tokens emitted
+        so far (including the prefill token); eos: () int32 (-1 = disabled).
+        Returns (buf (K,) int32 with -1 padding, tok, produced, caches,
+        stopped) — ``stopped`` True when the generation-level stop condition
+        holds, i.e. the host should not launch another segment.
+        """
+        K = self.segment_len
+        max_len = self.max_len
+        buf0 = jnp.full((K,), -1, jnp.int32)
+
+        def live(tok, produced):
+            # The oracle's break conditions, in order: EOS, cache/window
+            # budget, request budget.
+            return ((tok != eos)
+                    & (prompt_len + produced < max_len)
+                    & (produced < max_new))
+
+        def cond(c):
+            i, tok, produced, _, _ = c
+            return (i < K) & live(tok, produced)
+
+        def body(c):
+            i, tok, produced, caches, buf = c
+            logits, caches = self.lm.decode_step(
+                params, caches, {"tokens": tok.reshape(1, 1)})
+            tok = jnp.argmax(logits[0]).astype(jnp.int32)
+            buf = jax.lax.dynamic_update_slice(buf, tok[None], (i,))
+            return i + 1, tok, produced + 1, caches, buf
+
+        _, tok, produced, caches, buf = jax.lax.while_loop(
+            cond, body,
+            (jnp.zeros((), jnp.int32), tok, produced, caches, buf0))
+        return buf, tok, produced, caches, ~live(tok, produced)
+
+    def decode(self, params, caches, first_token: int, prompt_len: int,
+               max_new_tokens: int, eos_id: Optional[int] = None,
+               cancel_check=None) -> dict:
+        """Greedy-decode from a prefilled cache.
+
+        ``first_token`` is the prefill argmax (already emitted).  Returns
+        {"tokens": [first_token, ...], "cancelled": bool, "segments": int,
+        "caches": final cache pytree}.
+        """
+        out = [int(first_token)]
+        tok = jnp.asarray(first_token, jnp.int32)
+        produced = jnp.asarray(1, jnp.int32)
+        plen = jnp.asarray(prompt_len, jnp.int32)
+        max_new = jnp.asarray(max_new_tokens, jnp.int32)
+        eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
+        cancelled = False
+        segments = 0
+        # The first segment's predicate replays the oracle's post-prefill
+        # checks, so a request that is already complete runs zero steps.
+        while True:
+            if cancel_check is not None and cancel_check():
+                cancelled = True
+                break
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=_DONATION_WARNING)
+                buf, tok, produced, caches, stopped = self._segment(
+                    params, caches, tok, produced, plen, max_new, eos)
+            segments += 1
+            n_new = int(produced) - len(out)     # one host sync per segment
+            buf_np = np.asarray(buf)
+            out.extend(int(x) for x in buf_np[:n_new])
+            if bool(stopped):
+                break
+        return {"tokens": out, "cancelled": cancelled, "segments": segments,
+                "caches": caches}
+
+
+def geometric_buckets(max_len: int, floor: int = 16) -> tuple:
+    """Prefill padding buckets: powers of two from ``floor`` up to and
+    including ``max_len`` — a mixed-length admission stream compiles
+    O(log(max_len)) prefill programs instead of one per distinct length."""
+    buckets = []
+    b = floor
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return tuple(buckets)
+
+
+def bucket_for(n: int, buckets) -> int:
+    """Smallest bucket >= n; lengths beyond the last bucket prefill at
+    exact length (the seed behavior — the decoder can't extend past
+    ``max_len`` anyway, so rounding such a prompt up to a bigger pow2
+    would only buy a compile of a cache shape that is never decoded)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return n

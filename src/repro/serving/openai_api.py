@@ -37,6 +37,7 @@ class CompletionResponse:
     promoted: bool = False              # starvation-guard promotion
     replica: int = 0
     p_long: float = 0.0
+    klass: str = ""                     # ground-truth class, if known
 
     @property
     def sojourn_s(self) -> float:

@@ -116,6 +116,67 @@ def test_real_engine_generates():
     assert out["ttft_s"] > 0 and out["service_s"] >= out["ttft_s"]
 
 
+def test_submit_many_matches_submit(predictor):
+    """Batched admission (one proba_batch call) routes and scores exactly
+    like per-request submit."""
+    reqs = _mixed_requests()
+    a = ClairvoyantServer(policy="sjf", predictor=predictor)
+    b = ClairvoyantServer(policy="sjf", predictor=predictor)
+    for i, (prompt, toks, klass) in enumerate(reqs):
+        a.submit(CompletionRequest(prompt=prompt), arrival=i * 1e-3,
+                 true_output_tokens=toks, klass=klass)
+    b.submit_many([CompletionRequest(prompt=p) for p, _, _ in reqs],
+                  arrivals=[i * 1e-3 for i in range(len(reqs))],
+                  true_output_tokens=[t for _, t, _ in reqs],
+                  klasses=[k for _, _, k in reqs])
+    ra, rb = a.drain(), b.drain()
+    assert [r.p_long for r in ra] == pytest.approx([r.p_long for r in rb])
+    assert [r.sojourn_s for r in ra] == pytest.approx(
+        [r.sojourn_s for r in rb])
+    assert [r.klass for r in rb] == [r.klass for r in ra]
+
+
+def test_server_drains_real_engine(predictor):
+    """End-to-end: predictor -> SJF queue -> fused real decode.  Shorts
+    dispatch before longs and every response carries real measured time."""
+    # like the n=8 dispatch test: pick candidates the predictor separates
+    pool = _mixed_requests(n_short=8, n_long=8)
+    scores = predictor.p_long_batch([c[0] for c in pool])
+    ranked = sorted(zip(pool, scores), key=lambda cs: cs[1])
+    shorts = [c for c, _ in ranked if c[2] == "short"][:2]
+    longs = [c for c, _ in reversed(ranked) if c[2] == "long"][:2]
+    cands = shorts + longs
+    cfg = get_config("smollm-360m").reduced()
+    eng = RealEngine(cfg, max_len=96, segment_len=8)
+    # compile prefill buckets + decode segment outside the measured drain
+    for plen in (8, 24, 64):
+        eng.generate(np.arange(plen) % cfg.vocab_size, max_new_tokens=9)
+    server = ClairvoyantServer(policy="sjf", predictor=predictor,
+                               engines=[eng])
+    server.submit_many(
+        [CompletionRequest(prompt=p) for p, _, _ in cands],
+        true_output_tokens=[8 if k == "short" else 32
+                            for _, _, k in cands],
+        klasses=[k for _, _, k in cands])
+    resp = server.drain(max_new_tokens=32)
+    assert len(resp) == 4 and eng.served == 4 + 3   # 3 warm-up calls
+    assert all(r.tokens_generated > 0 and r.service_s > 0 for r in resp)
+    finish = {"short": [], "long": []}
+    for r in resp:
+        finish[r.klass].append(r.queue_wait_s + r.service_s)
+    assert max(finish["short"]) < min(finish["long"])
+
+
+def test_server_cancel_midflight_flags_engine():
+    cfg = get_config("smollm-360m").reduced()
+    eng = RealEngine(cfg, max_len=64)
+    server = ClairvoyantServer(policy="fcfs", engines=[eng])
+    server._decoding[0] = 42          # request 42 currently decoding
+    assert server.cancel(42)
+    assert eng._cancel, "mid-flight cancel must flag the fused loop"
+    assert not server.cancel(43)
+
+
 def test_service_time_model_monotone():
     cfg = get_config("gemma3-4b-edge")
     m = ServiceTimeModel.from_arch(cfg, chips=1)
