@@ -9,7 +9,9 @@ tracked across PRs:
 * ``sim`` -> ``BENCH_sim.json`` (one-shot sweep vs per-event reference
   wall clock on a table9-sized grid, trace-equivalence verdict);
 * ``serve`` -> ``BENCH_serve.json`` (seed vs fused real-decode tokens/s,
-  TTFT, per-token dispatch overhead, end-to-end queue-to-completion P50).
+  TTFT, per-token dispatch overhead, end-to-end queue-to-completion P50);
+* ``policies`` -> ``BENCH_policies.json`` (short/long P50+P99 for every
+  registered scheduling policy under Poisson rho=0.74 and 100-req burst).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -27,12 +29,13 @@ BENCH_JSONS = {
     "predictor": os.path.join(_ROOT, "BENCH_predictor.json"),
     "sim": os.path.join(_ROOT, "BENCH_sim.json"),
     "serve": os.path.join(_ROOT, "BENCH_serve.json"),
+    "policies": os.path.join(_ROOT, "BENCH_policies.json"),
 }
 
 
 def main() -> None:
-    from benchmarks import (fig3_rho_sweep, predictor_latency, serve_bench,
-                            sim_bench, table1_service_stats,
+    from benchmarks import (fig3_rho_sweep, policies_bench, predictor_latency,
+                            serve_bench, sim_bench, table1_service_stats,
                             table2_dataset_stats, table4_ablation,
                             table5_ranking, table6_cross, table7_baselines,
                             table8_burst, table9_tau)
@@ -50,6 +53,7 @@ def main() -> None:
         "predictor": predictor_latency.run,
         "sim": sim_bench.run,
         "serve": serve_bench.run,
+        "policies": policies_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

@@ -17,6 +17,13 @@ if git ls-files | grep -E '(^|/)__pycache__/|\.py[co]$' ; then
     exit 1
 fi
 
+echo "== assert-stripped import check (python -O) =="
+# asserts vanish under -O: policy/engine validation must rely on real
+# exceptions, so the hot modules have to import and resolve cleanly
+python -O -c "import repro.core.sim_fast, repro.core.policy; \
+repro.core.policy.get_policy('sjf'); \
+import repro.core.sweep, repro.core.scheduler"
+
 echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
 
@@ -33,4 +40,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run serve
     echo "== BENCH_serve.json =="
     cat BENCH_serve.json
+    echo "== scheduling-policy sweep benchmark =="
+    python -m benchmarks.run policies
+    echo "== BENCH_policies.json =="
+    cat BENCH_policies.json
 fi

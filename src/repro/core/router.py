@@ -30,9 +30,15 @@ class ReplicaState:
 
 
 class PredictiveRouter:
-    """JSPW router over N replica admission queues."""
+    """JSPW router over N replica admission queues.
 
-    def __init__(self, n_replicas: int, policy: str = "sjf",
+    ``policy`` is a registry name or :class:`repro.core.policy.Policy`
+    instance; each replica queue resolves it through the policy layer, so
+    the fleet can run any registered policy (including preemptive ones on
+    backends that support eviction).
+    """
+
+    def __init__(self, n_replicas: int, policy="sjf",
                  tau: Optional[float] = None,
                  service_estimate=(2.0, 10.0, 30.0)):
         """service_estimate: expected service seconds per (short, med, long)."""
@@ -46,12 +52,16 @@ class PredictiveRouter:
         return float(np.dot(np.asarray(proba, float), self.service_estimate))
 
     def route(self, req: Request, proba: Optional[np.ndarray] = None,
-              now: float = 0.0) -> int:
-        est = (self.predicted_service(proba) if proba is not None
-               else float(self.service_estimate.mean()))
+              now: float = 0.0, exclude: Optional[int] = None,
+              est: Optional[float] = None) -> int:
+        """``est`` overrides the service estimate when the caller already
+        knows it (hedging/failover re-routes of scored requests)."""
+        if est is None:
+            est = (self.predicted_service(proba) if proba is not None
+                   else float(self.service_estimate.mean()))
         best, best_cost = None, float("inf")
         for r in self.replicas:
-            if not r.healthy:
+            if not r.healthy or r.replica_id == exclude:
                 continue
             cost = max(r.busy_until - now, 0.0) + r.predicted_backlog + est
             if cost < best_cost:
@@ -64,6 +74,39 @@ class PredictiveRouter:
         best.predicted_backlog += est
         self.stats["routed"] += 1
         return best.replica_id
+
+    def hedge_overdue(self, now: float, deadline: float) -> List[Request]:
+        """Hedged dispatch: re-route requests that missed their queue-wait
+        deadline on a straggling replica.
+
+        Any queued request whose wait exceeds ``deadline`` is cancelled
+        from its queue and re-routed to the least-loaded *other* replica
+        (straggler mitigation on the serving path).  Each request is
+        hedged at most once (``meta["hedged"]``), so repeated sweeps
+        cannot bounce a request between replicas forever.
+        """
+        if len([r for r in self.replicas if r.healthy]) < 2:
+            return []
+        moved: List[Request] = []
+        for r in self.replicas:
+            if not r.healthy:
+                continue
+            overdue = [req for req in r.queue.waiting()
+                       if (now - req.arrival) > deadline
+                       and not req.meta.get("hedged")]
+            for req in overdue:
+                r.queue.remove(req.req_id)
+                est = req.meta.get("predicted_service") or None
+                if est:
+                    r.predicted_backlog = max(0.0,
+                                              r.predicted_backlog - est)
+                req.meta["hedged"] = True
+                # carry the known estimate: re-routing must not replace a
+                # scored request's prediction with the class-agnostic mean
+                self.route(req, now=now, exclude=r.replica_id, est=est)
+                self.stats["hedged"] += 1
+                moved.append(req)
+        return moved
 
     def on_dispatch(self, replica_id: int, req: Request, now: float,
                     service_estimate: Optional[float] = None) -> None:

@@ -11,9 +11,13 @@ The queue is an **indexed struct-of-arrays binary min-heap**
   skipped at pop time, and when they outnumber live entries the heap
   compacts in one vectorized pass — amortized O(1) per tombstone, never a
   per-element re-heapify;
-* **policy pluggability** — FCFS / SJF(predicted) / SJF(oracle) are the same
-  queue with different priority keys, which is how the benchmark ablations
-  flip between the paper's conditions.
+* **policy pluggability** — the priority key comes from a first-class
+  :class:`repro.core.policy.Policy` (FCFS / SJF / oracle / SRPT / quantile /
+  MLFQ / fair share are the same queue with different keys), which is how
+  the benchmark ablations flip between conditions.  Preemptive policies
+  additionally use :meth:`peek` (best queued key without dispatching) and
+  :meth:`push_requeue` (re-admission of an evicted request with its
+  policy-computed requeue key).
 
 Medium requests get no discrete treatment: the continuous P(Long) score is
 the key, producing the smooth ordering gradient described in the paper.
@@ -33,7 +37,10 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-POLICIES = ("fcfs", "sjf", "sjf_oracle")
+from repro.core.policy import SEED_POLICIES, get_policy
+
+#: Seed policy names (compat alias; the registry holds the full set).
+POLICIES = SEED_POLICIES
 
 
 @dataclass
@@ -55,11 +62,16 @@ class Request:
 
     @property
     def wait(self) -> float:
-        return (self.start - self.arrival) if self.start is not None else None
+        """Queue wait; NaN (not None) before dispatch so aggregation and
+        formatting never hit a ``NoneType``."""
+        return (self.start - self.arrival) if self.start is not None \
+            else float("nan")
 
     @property
     def sojourn(self) -> float:
-        return (self.finish - self.arrival) if self.finish is not None else None
+        """Queue-to-completion time; NaN before completion."""
+        return (self.finish - self.arrival) if self.finish is not None \
+            else float("nan")
 
 
 class MinHeap:
@@ -254,6 +266,17 @@ class ArrayHeap:
             return key, seq, item_id
         raise IndexError("pop from empty heap")
 
+    def peek(self):
+        """Min live ``(key, seq, id)`` WITHOUT removing it, or None.
+        Dead roots encountered on the way are physically dropped (they
+        were already logically deleted), so peek is amortized O(1)."""
+        while self._n and self._dead[0]:
+            self._remove_at(0)
+            self._ndead -= 1
+        if not self._n:
+            return None
+        return float(self._key[0]), int(self._seq[0]), int(self._id[0])
+
     def invariant_ok(self) -> bool:
         ok = all(not self._less(i, (i - 1) >> 1) for i in range(1, self._n))
         pos_ok = all(int(self._id[s]) == i and s < self._n
@@ -264,31 +287,62 @@ class ArrayHeap:
 class SJFQueue:
     """Admission queue implementing the paper's dispatch rule."""
 
-    def __init__(self, policy: str = "sjf", tau: Optional[float] = None):
-        assert policy in POLICIES, policy
-        self.policy = policy
-        self.tau = tau
+    def __init__(self, policy="sjf", tau: Optional[float] = None):
+        # accepts a registry name or a Policy instance; stateful policies
+        # (fair share) get a per-queue clone
+        self.policy_obj = get_policy(policy).fresh()
+        self.policy = self.policy_obj.name
+        self.tau = self.policy_obj.aging.effective_tau(tau)
         self._heap = ArrayHeap()
         self._fifo: deque = deque()       # arrival order for starvation guard
         self._seq = itertools.count()
         self._live: dict[int, Request] = {}
-        self.stats = {"promotions": 0, "cancellations": 0, "dispatched": 0}
+        self.stats = {"promotions": 0, "cancellations": 0, "dispatched": 0,
+                      "preemptions": 0}
 
     def __len__(self):
         return len(self._live)
 
     def _key(self, req: Request) -> float:
-        if self.policy == "fcfs":
-            return req.arrival
-        if self.policy == "sjf_oracle":
-            return req.true_service
-        return req.p_long
+        return self.policy_obj.key(req)
 
     def push(self, req: Request) -> None:
         seq = next(self._seq)
+        key = self._key(req)
+        # preemptive consumers derive requeue keys from the admission key
+        # and read the current key back for eligibility scans
+        req.meta["policy_key0"] = key
+        req.meta["queue_key"] = key
         self._live[req.req_id] = req
-        self._heap.push(self._key(req), seq, req.req_id)
+        self._heap.push(key, seq, req.req_id)
         self._fifo.append(req)
+
+    def push_requeue(self, req: Request, key: float) -> None:
+        """Re-admit a preempted request with an explicit (policy-computed)
+        requeue key.  It keeps its original arrival, so the starvation
+        guard still sees its true wait; the new heap seq makes re-entries
+        FIFO among equal keys."""
+        seq = next(self._seq)
+        req.meta["queue_key"] = key
+        self._live[req.req_id] = req
+        self._heap.push(key, seq, req.req_id)
+        # re-insert at its arrival rank (a stale FIFO entry may survive from
+        # the original push; drop it so the guard sees the request once).
+        # The deque is already near-sorted by arrival, so Timsort makes
+        # this effectively O(n) per eviction, not O(n log n).
+        self._fifo = deque(sorted(
+            [r for r in self._fifo if r.req_id != req.req_id] + [req],
+            key=lambda r: (r.arrival, r.req_id)))
+        self.stats["preemptions"] += 1
+
+    def peek(self) -> Optional[tuple]:
+        """Best queued ``(key, Request)`` without dispatching (preemption
+        checks); skips cancellation tombstones."""
+        top = self._heap.peek()
+        if top is None:
+            return None
+        key, _, req_id = top
+        return key, self._live[req_id]
 
     def cancel(self, req_id: int) -> bool:
         """Client disconnect while queued: O(1) lazy heap deletion."""
@@ -299,6 +353,14 @@ class SJFQueue:
         self._heap.kill(req_id)
         self.stats["cancellations"] += 1
         return True
+
+    def remove(self, req_id: int) -> Optional[Request]:
+        """Take a live request out WITHOUT marking it cancelled — used when
+        re-routing (hedged dispatch, failover) rather than disconnecting."""
+        req = self._live.pop(req_id, None)
+        if req is not None:
+            self._heap.kill(req_id)
+        return req
 
     def _prune_fifo(self) -> None:
         # drop cancelled or already-dispatched entries from the front
@@ -326,14 +388,26 @@ class SJFQueue:
             victim.promoted = True
             self.stats["promotions"] += 1
             self.stats["dispatched"] += 1
+            self.policy_obj.note_dispatch(victim.meta.get("queue_key", 0.0))
             return victim
         if len(self._heap):
-            _, _, req_id = self._heap.pop()
+            key, _, req_id = self._heap.pop()
             req = self._live.pop(req_id)
             self.stats["dispatched"] += 1
+            self.policy_obj.note_dispatch(key)
             return req
         return None
 
     def oldest_wait(self, now: float) -> float:
         self._prune_fifo()
         return (now - self._fifo[0].arrival) if self._fifo else 0.0
+
+    def waiting(self) -> list:
+        """Snapshot of the live queued requests (arrival order)."""
+        return sorted(self._live.values(),
+                      key=lambda r: (r.arrival, r.req_id))
+
+    def live(self):
+        """Unsorted view of the live queued requests (O(1); for hot-path
+        scans that only need a min, not an ordering)."""
+        return self._live.values()

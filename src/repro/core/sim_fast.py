@@ -17,7 +17,17 @@ stack around struct-of-arrays data:
   FFI round trip;
 * when no C compiler exists, a fallback runs the same per-event loop over
   plain floats with stdlib ``heapq`` (C-speed sifts) — slower than the
-  native engine but still well ahead of the object/tuple-heap reference.
+  native engine but still well ahead of the object/tuple-heap reference;
+* :func:`simulate_grid_preempt` — the *preemptive* counterpart for
+  policies with eviction semantics (``core.policy`` MODE_SRPT /
+  MODE_QUANTUM): arrivals can evict the running request and re-enqueue
+  its remaining service, quantum expiry demotes (MLFQ).  Also a C loop
+  with a bitwise-identical heapq fallback.
+
+Priority keys come from the policy layer (``core.policy``): every
+registered policy — seed fcfs/sjf/sjf_oracle plus srpt, sjf_quantile,
+mlfq, fair_share — supplies its key in array form via
+:func:`dispatch_key` / ``Policy.key_array``.
 
 Both engines are trace-equivalent to the reference loop — same float64
 clock accumulation, same ``(key, seq)`` tie-breaking, same strict
@@ -49,6 +59,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import _native
+from repro.core.policy import (LEVEL_STRIDE, MODE_NONE, MODE_QUANTUM,
+                               MODE_SRPT, Policy, get_policy)
 from repro.core.scheduler import POLICIES, Request
 
 KLASSES = ("", "short", "medium", "long")
@@ -162,15 +174,19 @@ class RequestBatch:
                                klass=klass)
 
 
-def dispatch_key(policy: str, arrival: np.ndarray, p_long: np.ndarray,
-                 true_service: np.ndarray) -> np.ndarray:
-    """The SJFQueue priority key of each request, as an array."""
-    assert policy in POLICIES, policy
-    if policy == "fcfs":
-        return arrival
-    if policy == "sjf_oracle":
-        return true_service
-    return p_long
+def dispatch_key(policy, arrival: np.ndarray, p_long: np.ndarray,
+                 true_service: np.ndarray, tenant=None,
+                 tenants: Sequence[str] = ("default",)) -> np.ndarray:
+    """The queue priority key of each request, as an array.
+
+    ``policy`` is a registry name or a :class:`~repro.core.policy.Policy`;
+    unknown names raise ``ValueError`` listing the registered policies
+    (``get_policy``) — an exception, not an assert, so the check survives
+    ``python -O``.  Rows must be arrival-sorted (stateful keys such as
+    fair share accumulate in arrival order).
+    """
+    return get_policy(policy).key_array(arrival, p_long, true_service,
+                                        tenant=tenant, tenants=tenants)
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +302,214 @@ def simulate_arrays(arrival, service, key, tau: Optional[float],
 
 
 # ---------------------------------------------------------------------------
+# Preemptive engine (policy.MODE_SRPT / MODE_QUANTUM).
+#
+# Service is sliced at *events*: an arrival whose key strictly beats the
+# running request's current key evicts it (the remaining service is
+# re-enqueued with the policy's requeue key), and in quantum mode a job
+# that exhausts its level-0 budget is demoted (key + LEVEL_STRIDE) and
+# re-enqueued.  The starvation guard applies at every dispatch decision,
+# exactly like the non-preemptive engines.  ``start`` records the FIRST
+# dispatch; ``finish`` the completion.
+# ---------------------------------------------------------------------------
+
+def _simulate_preempt_python(arrival, service, key, tau, mode, quanta):
+    """One preemptive cell over plain floats + stdlib heapq.  The C engine
+    (``_native.des_preempt_run_many``) runs the identical event sequence
+    with identical float64 arithmetic — results match bitwise."""
+    import heapq
+    n = arrival.shape[0]
+    INF = float("inf")
+    arr = arrival.tolist()
+    svc = service.tolist()
+    k0 = key.tolist()
+    curk = list(k0)
+    budget = quanta.tolist() if (mode == MODE_QUANTUM and quanta is not None) \
+        else [INF] * n
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    promoted = np.zeros(n, bool)
+    started = [False] * n
+    state = [0] * n           # 0 waiting, 1 queued, 2 running, 3 done
+    used = [0.0] * n          # service received so far
+    last_seq = [-1] * n
+    heap: list = []
+    guard = tau is not None
+    seqc = 0
+    t = 0.0
+    i_arr = 0
+    oldest = 0
+    nq = 0                    # live queued entries
+    ndone = 0
+    promos = 0
+    preempts = 0
+    run = -1
+
+    def push(j):
+        nonlocal seqc, nq
+        heapq.heappush(heap, (curk[j], seqc, j))
+        last_seq[j] = seqc
+        seqc += 1
+        nq += 1
+
+    def pop_valid():
+        nonlocal nq
+        while True:
+            _, s, j = heapq.heappop(heap)
+            if state[j] == 1 and s == last_seq[j]:
+                nq -= 1
+                return j
+
+    def peek_valid_key():
+        while heap:
+            k, s, j = heap[0]
+            if state[j] == 1 and s == last_seq[j]:
+                return k
+            heapq.heappop(heap)
+        return None
+
+    while ndone < n:
+        if run < 0:
+            if nq == 0 and t < arr[i_arr]:
+                t = arr[i_arr]                    # idle: jump to next arrival
+            while i_arr < n and arr[i_arr] <= t:
+                state[i_arr] = 1
+                push(i_arr)
+                i_arr += 1
+            while state[oldest] == 3:
+                oldest += 1
+            if guard and state[oldest] == 1 and (t - arr[oldest]) > tau:
+                j = oldest                        # starvation promotion past
+                promoted[j] = True                # the heap (entry -> stale)
+                promos += 1
+                nq -= 1
+            else:
+                j = pop_valid()
+            state[j] = 2
+            run = j
+            if not started[j]:
+                started[j] = True
+                start[j] = t
+        rem = svc[run] - used[run]
+        t_fin = t + rem
+        t_q = t + (budget[run] - used[run]) if budget[run] < INF else INF
+        t_arr = arr[i_arr] if i_arr < n else INF
+        if t_fin <= t_arr and t_fin <= t_q:
+            t = t_fin                             # completion
+            used[run] = svc[run]
+            finish[run] = t
+            state[run] = 3
+            ndone += 1
+            run = -1
+        elif t_q <= t_arr:
+            used[run] += t_q - t                  # quantum expiry: demote
+            t = t_q
+            budget[run] = INF
+            curk[run] = curk[run] + LEVEL_STRIDE
+            state[run] = 1
+            push(run)
+            run = -1
+        else:
+            used[run] += t_arr - t                # arrival event(s)
+            t = t_arr
+            while i_arr < n and arr[i_arr] <= t:
+                state[i_arr] = 1
+                push(i_arr)
+                i_arr += 1
+            bk = peek_valid_key()
+            # SRPT remaining floored at 0 (policy.Policy.running_key): a
+            # job past its predicted total keeps the minimal key instead
+            # of going negative (unpreemptable + queue-jumping on requeue)
+            rk = max(k0[run] - used[run], 0.0) if mode == MODE_SRPT \
+                else curk[run]
+            if bk is not None and bk < rk:
+                if mode == MODE_SRPT:
+                    curk[run] = rk
+                state[run] = 1                    # evict the running request
+                push(run)
+                preempts += 1
+                j = pop_valid()
+                state[j] = 2
+                run = j
+                if not started[j]:
+                    started[j] = True
+                    start[j] = t
+    return start, finish, promoted, promos, preempts
+
+
+def simulate_grid_preempt(arrival, service, key, tau, mode, quanta=None,
+                          engine: str = "auto"):
+    """G independent *preemptive* simulations in one call.
+
+    Same layout as :func:`simulate_grid` plus ``mode`` (length-G ints:
+    ``policy.MODE_SRPT`` / ``MODE_QUANTUM``) and ``quanta`` ((G, n)
+    level-0 service budgets; ignored for SRPT rows).  Returns
+    ``(start, finish, promoted, promotions, preemptions)``.
+    """
+    arrival = np.ascontiguousarray(arrival, np.float64)
+    service = np.ascontiguousarray(service, np.float64)
+    key = np.ascontiguousarray(key, np.float64)
+    G, n = arrival.shape
+    tau_arr = np.array([np.nan if t is None else float(t) for t in tau],
+                       np.float64)
+    mode_arr = np.ascontiguousarray(mode, np.int8)
+    if quanta is None:
+        quanta = np.full((G, n), np.inf)
+    quanta = np.ascontiguousarray(quanta, np.float64)
+    if tau_arr.shape != (G,) or mode_arr.shape != (G,):
+        raise ValueError(f"tau and mode must have length {G}")
+    start = np.empty((G, n))
+    finish = np.empty((G, n))
+    promoted = np.zeros((G, n), bool)
+    promotions = np.zeros(G, np.int64)
+    preemptions = np.zeros(G, np.int64)
+    if n == 0:
+        return start, finish, promoted, promotions, preemptions
+    if engine not in ("auto", "native", "python"):
+        raise ValueError(f"unknown engine {engine!r}")
+    fn = _native.native_des_preempt() if engine in ("auto", "native") else None
+    if engine == "native" and fn is None:
+        raise RuntimeError("native preemptive DES engine unavailable")
+    if fn is not None:
+        import ctypes
+        cap = 4 * n                       # pushes <= arrivals+preempts+demotes
+        hkey = np.empty(cap, np.float64)
+        hseq = np.empty(cap, np.int64)
+        hidx = np.empty(cap, np.int32)
+        used = np.empty(n, np.float64)
+        curk = np.empty(n, np.float64)
+        budget = np.empty(n, np.float64)
+        lastseq = np.empty(n, np.int64)
+        st = np.empty(n, np.uint8)
+        promoted_u8 = np.zeros((G, n), np.uint8)
+        pd = ctypes.c_double
+        fn(_native.as_ptr(arrival, pd), _native.as_ptr(service, pd),
+           _native.as_ptr(key, pd), _native.as_ptr(tau_arr, pd),
+           _native.as_ptr(quanta, pd),
+           _native.as_ptr(mode_arr, ctypes.c_int8), G, n,
+           _native.as_ptr(start, pd), _native.as_ptr(finish, pd),
+           _native.as_ptr(promoted_u8, ctypes.c_uint8),
+           _native.as_ptr(promotions, ctypes.c_int64),
+           _native.as_ptr(preemptions, ctypes.c_int64),
+           _native.as_ptr(hkey, pd), _native.as_ptr(hseq, ctypes.c_int64),
+           _native.as_ptr(hidx, ctypes.c_int32),
+           _native.as_ptr(used, pd), _native.as_ptr(curk, pd),
+           _native.as_ptr(budget, pd),
+           _native.as_ptr(lastseq, ctypes.c_int64),
+           _native.as_ptr(st, ctypes.c_uint8))
+        return start, finish, promoted_u8.astype(bool), promotions, \
+            preemptions
+    for g in range(G):
+        tg = None if np.isnan(tau_arr[g]) else float(tau_arr[g])
+        start[g], finish[g], promoted[g], promos, pre = \
+            _simulate_preempt_python(arrival[g], service[g], key[g], tg,
+                                     int(mode_arr[g]), quanta[g])
+        promotions[g] = promos
+        preemptions[g] = pre
+    return start, finish, promoted, promotions, preemptions
+
+
+# ---------------------------------------------------------------------------
 # Batch-level front end
 # ---------------------------------------------------------------------------
 
@@ -294,11 +518,12 @@ class BatchSimResult:
     """Per-request outcomes aligned with the input batch's row order."""
 
     batch: RequestBatch
-    start: np.ndarray          # (n,) float64
+    start: np.ndarray          # (n,) float64 (first dispatch, preemptive)
     finish: np.ndarray         # (n,) float64
     promoted: np.ndarray       # (n,) bool
     promotions: int
     makespan: float
+    preemptions: int = 0       # preemptive policies only
 
     def _vals(self, klass: Optional[str], attr: str) -> np.ndarray:
         if attr == "sojourn":
@@ -322,16 +547,35 @@ class BatchSimResult:
         return float(v.mean()) if len(v) else float("nan")
 
 
-def simulate_batch(batch: RequestBatch, policy: str = "sjf",
+def simulate_batch(batch: RequestBatch, policy="sjf",
                    tau: Optional[float] = None,
                    engine: str = "auto") -> BatchSimResult:
-    """Run the serial-server DES over a :class:`RequestBatch`."""
+    """Run the serial-server DES over a :class:`RequestBatch`.
+
+    ``policy`` is a registry name or :class:`~repro.core.policy.Policy`;
+    preemptive policies route through :func:`simulate_grid_preempt`,
+    key-based ones through the (bitwise seed-equivalent) non-preemptive
+    engines.
+    """
+    pol = get_policy(policy)
+    tau = pol.aging.effective_tau(tau)
     perm = np.lexsort((batch.req_id, batch.arrival))
     arrival = batch.arrival[perm]
     service = batch.true_service[perm]
-    key = dispatch_key(policy, arrival, batch.p_long[perm], service)
-    start_s, finish_s, promoted_s, promotions = simulate_arrays(
-        arrival, service, key, tau, engine=engine)
+    key = pol.key_array(arrival, batch.p_long[perm], service,
+                        tenant=batch.tenant[perm], tenants=batch.tenants)
+    preemptions = 0
+    if pol.preemptive:
+        quanta = pol.quantum_array(arrival, batch.p_long[perm], service)
+        start_s, finish_s, promoted_s, promos, pre = simulate_grid_preempt(
+            arrival[None], service[None], key[None], (tau,),
+            (pol.mode,), None if quanta is None else quanta[None],
+            engine=engine)
+        start_s, finish_s, promoted_s = start_s[0], finish_s[0], promoted_s[0]
+        promotions, preemptions = int(promos[0]), int(pre[0])
+    else:
+        start_s, finish_s, promoted_s, promotions = simulate_arrays(
+            arrival, service, key, tau, engine=engine)
     n = len(batch)
     start = np.empty(n)
     finish = np.empty(n)
@@ -341,4 +585,5 @@ def simulate_batch(batch: RequestBatch, policy: str = "sjf",
     promoted[perm] = promoted_s
     return BatchSimResult(batch=batch, start=start, finish=finish,
                           promoted=promoted, promotions=promotions,
-                          makespan=float(finish.max()) if n else 0.0)
+                          makespan=float(finish.max()) if n else 0.0,
+                          preemptions=preemptions)

@@ -18,6 +18,13 @@ dispatch trace matches the host engines bitwise; under default float32
 the dispatch *order* still matches whenever clock rounding cannot flip a
 comparison, and times agree to float32 tolerance (see
 tests/test_simulation.py).
+
+This path consumes pre-computed priority-key arrays, so every
+*key-based* policy in ``core.policy`` (fcfs / sjf / sjf_oracle /
+sjf_quantile / fair_share) runs here unchanged; *preemptive* policies
+(srpt / mlfq) need mid-service re-enqueue events, which this fixed-step
+scan does not model — ``core.sweep`` routes their rows to the host
+preemptive engine (``sim_fast.simulate_grid_preempt``) instead.
 """
 
 from __future__ import annotations

@@ -32,9 +32,11 @@ class SimResult:
     makespan: float
 
     def _vals(self, klass: Optional[str], attr: str) -> np.ndarray:
-        return np.array([getattr(r, attr) for r in self.requests
-                         if (klass is None or r.klass == klass)
-                         and getattr(r, attr) is not None])
+        # wait/sojourn are NaN (not None) before dispatch/completion
+        vals = [getattr(r, attr) for r in self.requests
+                if klass is None or r.klass == klass]
+        return np.array([v for v in vals
+                         if v is not None and not math.isnan(v)])
 
     def percentile(self, q: float, klass: Optional[str] = None,
                    attr: str = "sojourn") -> float:
@@ -46,9 +48,17 @@ class SimResult:
         return float(v.mean()) if len(v) else float("nan")
 
 
-def simulate_reference(requests: Sequence[Request], policy: str = "sjf",
+def simulate_reference(requests: Sequence[Request], policy="sjf",
                        tau: Optional[float] = None) -> SimResult:
-    """Seed per-event loop (the trace-equivalence oracle; slow)."""
+    """Seed per-event loop (the trace-equivalence oracle; slow).
+
+    Accepts any *non-preemptive* registered policy (the oracle serves each
+    dispatched request to completion); preemptive policies are rejected.
+    """
+    from repro.core.policy import get_policy
+    if get_policy(policy).preemptive:
+        raise ValueError("simulate_reference is non-preemptive; use "
+                         "simulate() for preemptive policies")
     reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
     q = SJFQueue(policy=policy, tau=tau)
     t = 0.0
@@ -71,32 +81,30 @@ def simulate_reference(requests: Sequence[Request], policy: str = "sjf",
                      makespan=t)
 
 
-def simulate(requests: Sequence[Request], policy: str = "sjf",
+def simulate(requests: Sequence[Request], policy="sjf",
              tau: Optional[float] = None, engine: str = "auto") -> SimResult:
     """Run the serial-server DES.  ``requests`` carry arrival/p_long/service.
 
-    Same contract as the seed loop (start/finish/promoted written onto the
-    passed Requests, dispatch-ordered result list), but executed on the
-    vectorized array engine — trace-equivalent bitwise.
+    ``policy`` is a registry name or Policy instance.  For key-based
+    policies this keeps the seed loop's contract (start/finish/promoted
+    written onto the passed Requests, dispatch-ordered result list) and is
+    trace-equivalent bitwise; preemptive policies (srpt/mlfq) run on the
+    preemptive engine, where ``start`` is the FIRST dispatch time.
     """
-    from repro.core.sim_fast import dispatch_key, simulate_arrays
+    from repro.core.sim_fast import RequestBatch, simulate_batch
     reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
     n = len(reqs)
     if n == 0:
         return SimResult(requests=[], promotions=0, makespan=0.0)
-    arrival = np.array([r.arrival for r in reqs], np.float64)
-    service = np.array([r.true_service for r in reqs], np.float64)
-    p_long = np.array([r.p_long for r in reqs], np.float64)
-    key = dispatch_key(policy, arrival, p_long, service)
-    start, finish, promoted, promotions = simulate_arrays(
-        arrival, service, key, tau, engine=engine)
+    res = simulate_batch(RequestBatch.from_requests(reqs), policy=policy,
+                         tau=tau, engine=engine)
     for i, r in enumerate(reqs):
-        r.start = float(start[i])
-        r.finish = float(finish[i])
-        r.promoted = bool(promoted[i])
-    done = [reqs[i] for i in np.argsort(start, kind="stable")]
-    return SimResult(requests=done, promotions=promotions,
-                     makespan=float(finish.max()))
+        r.start = float(res.start[i])
+        r.finish = float(res.finish[i])
+        r.promoted = bool(res.promoted[i])
+    done = [reqs[i] for i in np.argsort(res.start, kind="stable")]
+    return SimResult(requests=done, promotions=res.promotions,
+                     makespan=res.makespan)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,12 @@ benchmarks did via deepcopy).  Backends: ``auto`` (compiled C engine,
 stdlib-heapq fallback) and ``jax`` (vmapped scan, ``core.sim_jax``) for
 running the per-cell axis on an accelerator.
 
+Conditions are policy specs: registry names ("fcfs", "srpt", ...) or
+``core.policy.Policy`` instances for custom parameters.  Preemptive
+policies (srpt / mlfq) are routed row-wise to the preemptive host engine
+(``sim_fast.simulate_grid_preempt``); key-based rows run on the requested
+backend, so one grid can mix both.
+
 ``run_grid`` is the non-DES counterpart used by the accuracy-table
 benchmarks (model x feature-group, model x baseline): one call evaluates
 a cartesian grid of cells and returns the keyed results.
@@ -32,12 +38,18 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.sim_fast import RequestBatch, dispatch_key, simulate_grid
+from repro.core.policy import Policy, get_policy
+from repro.core.sim_fast import (RequestBatch, simulate_grid,
+                                 simulate_grid_preempt)
 
-Condition = Tuple[str, Optional[float]]          # (policy, tau)
+#: A sweep condition: (policy spec, tau).  The policy spec is a registry
+#: name ("fcfs", "sjf", "srpt", ...) or a Policy instance (for custom
+#: parameters, e.g. ``QuantileSJF(z=2.0)``); SweepResult indexes
+#: conditions by the resolved policy name.
+Condition = Tuple[object, Optional[float]]       # (policy spec, tau)
 
-METRICS = ("short_p50", "short_p95", "long_p50", "long_p95",
-           "mean_sojourn", "mean_wait", "promotions", "makespan")
+METRICS = ("short_p50", "short_p95", "short_p99", "long_p50", "long_p95",
+           "long_p99", "mean_sojourn", "mean_wait", "promotions", "makespan")
 
 
 @dataclass
@@ -63,10 +75,12 @@ def _percentile_metrics(start: np.ndarray, finish: np.ndarray,
     sojourn = finish - arrival
     wait = start - arrival
     s, l = sojourn[short_mask], sojourn[long_mask]
-    return (float(np.percentile(s, 50)) if s.size else float("nan"),
-            float(np.percentile(s, 95)) if s.size else float("nan"),
-            float(np.percentile(l, 50)) if l.size else float("nan"),
-            float(np.percentile(l, 95)) if l.size else float("nan"),
+
+    def pct(v, q):
+        return float(np.percentile(v, q)) if v.size else float("nan")
+
+    return (pct(s, 50), pct(s, 95), pct(s, 99),
+            pct(l, 50), pct(l, 95), pct(l, 99),
             float(sojourn.mean()), float(wait.mean()),
             float(promotions), float(finish.max()))
 
@@ -85,33 +99,63 @@ def sweep_batches(batches: Sequence[RequestBatch],
     C, B = len(conditions), len(batches)
     n = len(batches[0])
     assert all(len(b) == n for b in batches), "batches must be same length"
+    policies = [get_policy(p) for p, _ in conditions]
 
     # sort each batch once; reuse the sorted arrays for every condition
     sorted_cols = []
     for b in batches:
         perm = np.lexsort((b.req_id, b.arrival))
         sorted_cols.append((b.arrival[perm], b.true_service[perm],
-                            b.p_long[perm], b.klass[perm]))
+                            b.p_long[perm], b.klass[perm], b.tenant[perm],
+                            b.tenants))
 
     arrival = np.empty((C * B, n))
     service = np.empty((C * B, n))
     key = np.empty((C * B, n))
+    quanta = np.full((C * B, n), np.inf)
     taus: List[Optional[float]] = []
-    for c, (policy, tau) in enumerate(conditions):
-        for g, (arr, svc, pl, _) in enumerate(sorted_cols):
+    modes = np.zeros(C * B, np.int8)
+    for c, ((_, tau), pol) in enumerate(zip(conditions, policies)):
+        for g, (arr, svc, pl, _, tc, tn) in enumerate(sorted_cols):
             row = c * B + g
             arrival[row] = arr
             service[row] = svc
-            key[row] = dispatch_key(policy, arr, pl, svc)
-            taus.append(tau)
+            key[row] = pol.key_array(arr, pl, svc, tenant=tc, tenants=tn)
+            taus.append(pol.aging.effective_tau(tau))
+            modes[row] = pol.mode
+            if pol.preemptive:
+                q = pol.quantum_array(arr, pl, svc)
+                if q is not None:
+                    quanta[row] = q
 
-    if backend == "jax":
-        from repro.core.sim_jax import simulate_grid_jax
-        start, finish, promoted, promotions = simulate_grid_jax(
-            arrival, service, key, taus)
-    else:
-        start, finish, promoted, promotions = simulate_grid(
-            arrival, service, key, taus, engine=backend)
+    # preemptive rows run on the host preemptive engine; key-based rows on
+    # the requested backend (the vmapped jax path is non-preemptive)
+    pre = modes != 0
+    start = np.empty((C * B, n))
+    finish = np.empty((C * B, n))
+    promoted = np.zeros((C * B, n), bool)
+    promotions = np.zeros(C * B, np.int64)
+    if (~pre).any():
+        rows = np.flatnonzero(~pre)
+        taus_np = [taus[r] for r in rows]
+        if backend == "jax":
+            from repro.core.sim_jax import simulate_grid_jax
+            s, f, pr, pm = simulate_grid_jax(
+                arrival[rows], service[rows], key[rows], taus_np)
+        else:
+            s, f, pr, pm = simulate_grid(
+                arrival[rows], service[rows], key[rows], taus_np,
+                engine=backend)
+        start[rows], finish[rows], promoted[rows] = s, f, pr
+        promotions[rows] = pm
+    if pre.any():
+        rows = np.flatnonzero(pre)
+        s, f, pr, pm, _ = simulate_grid_preempt(
+            arrival[rows], service[rows], key[rows],
+            [taus[r] for r in rows], modes[rows], quanta[rows],
+            engine="auto" if backend == "jax" else backend)
+        start[rows], finish[rows], promoted[rows] = s, f, pr
+        promotions[rows] = pm
 
     from repro.core.sim_fast import _KLASS_CODE
     out = {m: np.empty((C, B)) for m in METRICS}
@@ -126,7 +170,7 @@ def sweep_batches(batches: Sequence[RequestBatch],
             for m, v in zip(METRICS, vals):
                 out[m][c, g] = v
     if return_arrays:
-        klass = np.tile(np.stack([kc for _, _, _, kc in sorted_cols]),
+        klass = np.tile(np.stack([cols[3] for cols in sorted_cols]),
                         (C, 1))
         return out, (arrival, klass, start, finish, promoted)
     return out
@@ -141,7 +185,8 @@ def sweep_poisson(conditions: Sequence[Condition], rhos: Sequence[float],
     ``rho = lam * E[S]`` fixes the arrival rate per rho; one workload per
     (rho, seed) is shared across all conditions.
     """
-    conditions = tuple((p, t) for p, t in conditions)
+    specs = tuple((p, t) for p, t in conditions)
+    conditions = tuple((get_policy(p).name, t) for p, t in specs)
     rhos = tuple(float(r) for r in rhos)
     seeds = tuple(int(s) for s in seeds)
     es = mix_long * long.mean + (1.0 - mix_long) * short.mean
@@ -152,7 +197,7 @@ def sweep_poisson(conditions: Sequence[Condition], rhos: Sequence[float],
             rng = np.random.default_rng(seed)
             batches.append(RequestBatch.poisson(rng, n, lam, short, long,
                                                 mix_long=mix_long))
-    flat = sweep_batches(batches, conditions, backend=backend)
+    flat = sweep_batches(batches, specs, backend=backend)
     C, R, S = len(conditions), len(rhos), len(seeds)
     return SweepResult(conditions=conditions, rhos=rhos, seeds=seeds,
                        metrics={m: v.reshape(C, R, S)
@@ -164,12 +209,13 @@ def sweep_burst(conditions: Sequence[Condition], seeds: Sequence[int],
                 window: float = 0.05,
                 backend: str = "auto") -> SweepResult:
     """The §5.5 burst grid: all requests arrive within ``window``."""
-    conditions = tuple((p, t) for p, t in conditions)
+    specs = tuple((p, t) for p, t in conditions)
+    conditions = tuple((get_policy(p).name, t) for p, t in specs)
     seeds = tuple(int(s) for s in seeds)
     batches = [RequestBatch.burst(np.random.default_rng(s), n_short, n_long,
                                   short, long, window=window)
                for s in seeds]
-    flat = sweep_batches(batches, conditions, backend=backend)
+    flat = sweep_batches(batches, specs, backend=backend)
     C, S = len(conditions), len(seeds)
     return SweepResult(conditions=conditions, rhos=(float("nan"),),
                        seeds=seeds,

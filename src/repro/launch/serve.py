@@ -34,9 +34,10 @@ def build_predictor(dataset: str = "sharegpt", rounds: int = 120,
 
 
 def main(argv=None):
+    from repro.core.policy import registered_names
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="sjf",
-                    choices=["fcfs", "sjf", "sjf_oracle"])
+                    choices=sorted(registered_names()))
     ap.add_argument("--requests", type=int, default=100)
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--arch", default="gemma3-4b-edge",
@@ -54,7 +55,9 @@ def main(argv=None):
     model = ServiceTimeModel.from_arch(cfg, chips=args.chips)
     rng = np.random.default_rng(args.seed)
 
-    predictor = build_predictor(args.dataset) if args.policy == "sjf" else None
+    from repro.core.policy import get_policy
+    predictor = build_predictor(args.dataset) \
+        if get_policy(args.policy).uses_predictor else None
 
     # tau = 3 x mu_short, measured under mixed queueing conditions (§3.4)
     short_dist = ServiceDist(model.service(64, 60),

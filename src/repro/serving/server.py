@@ -3,8 +3,14 @@
 This is the paper's Figure 2 as framework code.  ``ClairvoyantServer``
 fronts N replica engines; each replica is a serial backend with its own
 SJFQueue (+ starvation guard).  The multi-replica case routes by predicted
-work (core/router.py, beyond paper).  Policies: "fcfs" | "sjf" |
-"sjf_oracle" — the benchmark ablation is one constructor argument.
+work (core/router.py, beyond paper).  The scheduling policy is a
+first-class ``core.policy.Policy`` (registry name or instance): the seed
+"fcfs" / "sjf" / "sjf_oracle" plus preemptive SRPT, quantile-aware SJF,
+MLFQ and per-tenant fair share — the benchmark ablation is one
+constructor argument.  Preemptive policies evict the running request at
+the next fused-decode segment boundary (real engines: cancel + resume by
+re-prefilling prompt + generated prefix; sim engines: the preemptive DES
+in virtual time).
 
 Two backends share the queueing layer:
 
@@ -33,6 +39,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.policy import get_policy
 from repro.core.predictor import Predictor
 from repro.core.router import PredictiveRouter
 from repro.core.scheduler import Request, SJFQueue
@@ -43,13 +50,15 @@ from repro.data.tokenizer import HashTokenizer, approx_token_len
 
 
 class ClairvoyantServer:
-    def __init__(self, *, policy: str = "sjf", tau: Optional[float] = None,
+    def __init__(self, *, policy="sjf", tau: Optional[float] = None,
                  n_replicas: int = 1,
                  predictor: Optional[Predictor] = None,
                  service_model: Optional[ServiceTimeModel] = None,
                  engines: Optional[Sequence] = None,
                  seed: int = 0):
-        self.policy = policy
+        # policy: registry name or Policy instance (core/policy.py)
+        self.policy_obj = get_policy(policy)
+        self.policy = self.policy_obj.name
         self.predictor = predictor
         self.rng = np.random.default_rng(seed)
         self.service_model = service_model or ServiceTimeModel(
@@ -63,6 +72,7 @@ class ClairvoyantServer:
         self.router = PredictiveRouter(n_replicas, policy=policy, tau=tau)
         self._inflight: Dict[int, CompletionRequest] = {}
         self._decoding: Dict[int, int] = {}     # replica_id -> request_id
+        self._disconnected: set = set()         # mid-flight client cancels
         self._oracle_tokens: Dict[int, int] = {}
         self._tokenizer: Optional[HashTokenizer] = None
         self.responses: List[CompletionResponse] = []
@@ -75,7 +85,7 @@ class ClairvoyantServer:
         truth (known to the simulator, NOT the scheduler unless policy is
         sjf_oracle)."""
         proba = None
-        if self.predictor is not None and self.policy == "sjf":
+        if self.predictor is not None and self.policy_obj.uses_predictor:
             proba = self.predictor.proba_batch([req.prompt])[0]
         return self._admit(req, proba, arrival, true_output_tokens, klass)
 
@@ -92,7 +102,8 @@ class ClairvoyantServer:
         """
         n = len(reqs)
         probas = None
-        if self.predictor is not None and self.policy == "sjf" and n:
+        if self.predictor is not None and self.policy_obj.uses_predictor \
+                and n:
             probas = self.predictor.proba_batch([r.prompt for r in reqs])
         return [
             self._admit(
@@ -134,6 +145,10 @@ class ClairvoyantServer:
             if rid == request_id:
                 eng = self.engines[replica_id]
                 if hasattr(eng, "request_cancel"):
+                    # distinguishes a disconnect from a preemption eviction:
+                    # the drain loop drops disconnected requests instead of
+                    # re-enqueueing them
+                    self._disconnected.add(request_id)
                     eng.request_cancel()
                     return True
         return False
@@ -153,6 +168,9 @@ class ClairvoyantServer:
         return self.responses
 
     def _drain_sim(self, rep, eng) -> None:
+        if self.policy_obj.preemptive:
+            self._drain_sim_preemptive(rep, eng)
+            return
         t = eng.busy_until
         while True:
             req = rep.queue.pop(now=t)
@@ -173,38 +191,222 @@ class ClairvoyantServer:
                 promoted=req.promoted, replica=rep.replica_id,
                 p_long=req.p_long, klass=req.klass))
 
-    def _drain_real(self, rep, eng: RealEngine, max_new_tokens: int) -> None:
-        """Serial wall-clock loop: pop -> tokenize -> fused decode."""
-        if self._tokenizer is None:
-            self._tokenizer = HashTokenizer(eng.cfg.vocab_size)
-        t = eng.busy_until
-        while True:
-            req = rep.queue.pop(now=t)
-            if req is None:
-                break
-            t = max(t, req.arrival)
-            n_new = max(1, min(max_new_tokens, req.meta["output_tokens"]))
-            ids = self._tokenizer.encode(req.prompt)[: max(
-                1, eng.max_len - n_new)]
-            self._decoding[rep.replica_id] = req.req_id
-            try:
-                out = eng.generate(ids, max_new_tokens=n_new)
-            finally:
-                self._decoding.pop(rep.replica_id, None)
-            service = out["service_s"]
-            req.start, req.finish = t, t + service
-            t += service
-            eng.busy_until = t
-            self.router.on_dispatch(rep.replica_id, req, t,
+    def _drain_sim_preemptive(self, rep, eng) -> None:
+        """Virtual-time drain under a preemptive policy: the replica's
+        whole backlog runs through the preemptive DES engine (arrival
+        events slice service; evicted work is re-enqueued with the
+        policy's requeue key), then responses are emitted in finish
+        order.  ``queue_wait_s`` is time to FIRST dispatch."""
+        from repro.core.sim_fast import RequestBatch, simulate_batch
+        reqs = rep.queue.waiting()
+        for r in reqs:                       # drain the queue bookkeeping
+            rep.queue.remove(r.req_id)
+            rep.queue.stats["dispatched"] += 1
+        if not reqs:
+            return
+        batch = RequestBatch.from_requests(reqs)
+        # the engine may still be busy from a previous drain: nothing can
+        # start before busy_until, so clamp the simulated arrivals (waits
+        # are still reported against the TRUE arrival, like _drain_sim)
+        batch.arrival = np.maximum(batch.arrival, eng.busy_until)
+        res = simulate_batch(batch, policy=self.policy_obj,
+                             tau=rep.queue.tau)
+        rep.queue.stats["promotions"] += res.promotions
+        rep.queue.stats["preemptions"] += res.preemptions
+        order = np.argsort(res.finish, kind="stable")
+        for i in order:
+            req = reqs[i]
+            req.start = float(res.start[i])
+            req.finish = float(res.finish[i])
+            req.promoted = bool(res.promoted[i])
+            service = req.true_service
+            ttft = (eng.model.overhead_s + req.meta["prompt_tokens"]
+                    / eng.model.prefill_tok_per_s)
+            eng.busy_until = max(eng.busy_until, req.finish)
+            eng.served += 1
+            self.router.on_dispatch(rep.replica_id, req, req.finish,
                                     service_estimate=service)
             self.responses.append(CompletionResponse(
                 request_id=req.req_id, text="",
-                tokens_generated=len(out["tokens"]),
+                tokens_generated=req.meta["output_tokens"],
                 queue_wait_s=req.start - req.arrival,
-                service_s=service,
-                ttft_s=req.start - req.arrival + out["ttft_s"],
+                # time in service INCLUDING eviction gaps, so sojourn_s
+                # (wait + service) equals finish - arrival exactly
+                service_s=req.finish - req.start,
+                ttft_s=req.start - req.arrival + ttft,
                 promoted=req.promoted, replica=rep.replica_id,
                 p_long=req.p_long, klass=req.klass))
+
+    def _drain_real(self, rep, eng: RealEngine, max_new_tokens: int) -> None:
+        """Serial wall-clock loop: pop -> tokenize -> fused decode.
+
+        Under a preemptive policy, a queued request whose key strictly
+        beats the running one (or, for MLFQ, a running request that
+        exhausts its quantum) stops the fused loop at the next segment
+        boundary (§3.4 cancellation); the evicted request re-enters the
+        queue with its policy requeue key and the tokens generated so
+        far, and later resumes by re-prefilling prompt + generated prefix
+        (cheap re-prefill: greedy decode makes the resumed sequence
+        bitwise-identical to an uninterrupted one).
+        """
+        import time as _time
+        from repro.core.policy import MODE_SRPT
+        if self._tokenizer is None:
+            self._tokenizer = HashTokenizer(eng.cfg.vocab_size)
+        pol = self.policy_obj
+        t = eng.busy_until
+        while True:
+            if pol.preemptive:
+                req, t = self._pop_arrival_aware(rep, t)
+            else:
+                req = rep.queue.pop(now=t)
+            if req is None:
+                break
+            t = max(t, req.arrival)
+            n_total = max(1, min(max_new_tokens, req.meta["output_tokens"]))
+            resume = req.meta.get("resume_tokens", [])
+            n_new = max(1, n_total - len(resume))
+            prompt_ids = self._tokenizer.encode(req.prompt)[: max(
+                1, eng.max_len - n_total)]
+            ids = np.concatenate([np.asarray(prompt_ids, np.int64),
+                                  np.asarray(resume, np.int64)]) \
+                if resume else prompt_ids
+            used = req.meta.get("used_s", 0.0)
+            key0 = req.meta.get("policy_key0", 0.0)
+            level = req.meta.get("mlfq_level", 0)
+            evict_reason = []
+            cancel_cb = None
+            if pol.preemptive:
+                wall0 = _time.monotonic()
+                # SRPT decays from the ADMISSION key by total service
+                # received; level policies carry their current queue key.
+                # used/elapsed are wall seconds against model-calibrated
+                # keys — an approximation unless the policy's short/long
+                # moments are calibrated to this engine.
+                base_key = key0 if pol.mode == MODE_SRPT \
+                    else req.meta.get("queue_key", key0)
+
+                def cancel_cb():
+                    elapsed = _time.monotonic() - wall0
+                    best = self._best_eligible(rep, t + elapsed)
+                    if best is None:
+                        return False
+                    quantum = pol.quantum(req.p_long)
+                    if (quantum is not None and level == 0
+                            and used + elapsed > quantum):
+                        evict_reason.append("quantum")
+                        return True
+                    run_key = pol.running_key(base_key, used + elapsed)
+                    if pol.should_preempt(run_key, best[0]):
+                        evict_reason.append("preempt")
+                        return True
+                    return False
+
+            if req.start is None:
+                req.start = t                 # first dispatch
+            self._decoding[rep.replica_id] = req.req_id
+            try:
+                out = eng.generate(ids, max_new_tokens=n_new,
+                                   cancel_cb=cancel_cb)
+            finally:
+                self._decoding.pop(rep.replica_id, None)
+            service = out["service_s"]
+            tokens = list(resume) + list(out["tokens"])
+            req.meta.setdefault("ttft_s", out["ttft_s"])
+            t += service
+            eng.busy_until = t
+            if out.get("cancelled"):
+                if req.req_id in self._disconnected:
+                    self._disconnected.discard(req.req_id)
+                    self._inflight.pop(req.req_id, None)
+                    continue                  # client disconnect: drop
+                if len(tokens) >= n_total:
+                    pass                      # done at the boundary anyway
+                else:
+                    # preemption / demotion: re-enqueue the remaining work
+                    self._requeue_evicted(rep, req, tokens, used + service,
+                                          key0, level, evict_reason)
+                    continue
+            total_service = used + service
+            req.finish = t
+            self.router.on_dispatch(rep.replica_id, req, t,
+                                    service_estimate=total_service)
+            self.responses.append(CompletionResponse(
+                request_id=req.req_id, text="",
+                tokens_generated=len(tokens),
+                queue_wait_s=req.start - req.arrival,
+                service_s=total_service,
+                ttft_s=req.start - req.arrival + req.meta["ttft_s"],
+                promoted=req.promoted, replica=rep.replica_id,
+                p_long=req.p_long, klass=req.klass))
+
+    def _pop_arrival_aware(self, rep, t: float):
+        """Dispatch decision for preemptive real drains: only requests that
+        have (virtually) arrived by ``t`` compete — otherwise the best key
+        would always dispatch first and nothing could ever preempt.  Jumps
+        the clock to the next arrival when the queue is momentarily empty.
+        Applies the starvation guard, then the policy key.  One unsorted
+        O(n) scan per dispatch."""
+        live = rep.queue.live()
+        if not live:
+            return None, t
+        if all(r.arrival > t for r in live):
+            t = min(r.arrival for r in live)
+        oldest = best = None
+        for r in live:
+            if r.arrival > t:
+                continue
+            if oldest is None or (r.arrival, r.req_id) \
+                    < (oldest.arrival, oldest.req_id):
+                oldest = r
+            if best is None or (r.meta["queue_key"], r.req_id) \
+                    < (best.meta["queue_key"], best.req_id):
+                best = r
+        tau = rep.queue.tau
+        if tau is not None and (t - oldest.arrival) > tau:
+            req = oldest
+            req.promoted = True
+            rep.queue.stats["promotions"] += 1
+        else:
+            req = best
+        rep.queue.remove(req.req_id)
+        rep.queue.stats["dispatched"] += 1
+        rep.queue.policy_obj.note_dispatch(req.meta.get("queue_key", 0.0))
+        return req, t
+
+    def _best_eligible(self, rep, now: float):
+        """Best (key, Request) among queued requests arrived by ``now``.
+        Fast path: the heap head is the global best — if it has arrived,
+        it is the answer in O(1); otherwise fall back to one unsorted
+        scan (polled every fused-decode segment, so no sorting here)."""
+        top = rep.queue.peek()
+        if top is not None and top[1].arrival <= now:
+            return top
+        best = None
+        for r in rep.queue.live():
+            if r.arrival <= now:
+                k = r.meta["queue_key"]
+                if best is None or k < best[0]:
+                    best = (k, r)
+        return best
+
+    def _requeue_evicted(self, rep, req, tokens, used_s, key0, level,
+                         evict_reason) -> None:
+        """Re-enqueue a preempted/demoted request with its resume state,
+        using the policy's requeue hooks (custom Policy subclasses can
+        override them)."""
+        from repro.core.policy import MODE_SRPT
+        pol = self.policy_obj
+        req.meta["resume_tokens"] = tokens
+        req.meta["used_s"] = used_s
+        cur_key = req.meta.get("queue_key", key0)
+        if evict_reason and evict_reason[0] == "quantum":
+            req.meta["mlfq_level"] = level + 1
+            new_key = pol.requeue_key(cur_key, used_s)     # demotion
+        else:
+            base = key0 if pol.mode == MODE_SRPT else cur_key
+            new_key = pol.running_key(base, used_s)        # plain eviction
+        rep.queue.push_requeue(req, new_key)
 
     # ---------------------------------------------------------------- stats
     def percentile(self, q: float, klass: Optional[str] = None,

@@ -1,0 +1,123 @@
+"""PredictiveRouter tests: JSPW vs JSQ placement, failover re-enqueue,
+and the hedged-dispatch deadline path."""
+
+import numpy as np
+import pytest
+
+from repro.core.router import PredictiveRouter
+from repro.core.scheduler import Request
+
+
+def _req(i, arrival=0.0, p_long=0.5):
+    return Request(req_id=i, arrival=arrival, p_long=p_long)
+
+
+# probas whose expected service under (2, 10, 30) is tiny vs huge
+P_SHORT = np.array([1.0, 0.0, 0.0])       # E[S] = 2
+P_LONG = np.array([0.0, 0.0, 1.0])        # E[S] = 30
+
+
+def test_jspw_places_by_predicted_work_not_queue_length():
+    """Replica 0 holds three predicted-short requests (6s of work),
+    replica 1 one predicted-long (30s).  JSPW sends the next request to
+    the replica with LESS predicted work despite its LONGER queue."""
+    router = PredictiveRouter(n_replicas=2)
+    for i in range(3):
+        router.replicas[0].queue.push(_req(i))
+        router.replicas[0].predicted_backlog += router.predicted_service(
+            P_SHORT)
+    router.replicas[1].queue.push(_req(3))
+    router.replicas[1].predicted_backlog += router.predicted_service(P_LONG)
+    assert len(router.replicas[0].queue) > len(router.replicas[1].queue)
+    chosen = router.route(_req(4), proba=P_SHORT)
+    assert chosen == 0, "JSPW must follow predicted work, not queue length"
+
+
+def test_jsq_fallback_without_predictor_balances_counts():
+    """No proba -> every request carries the same mean estimate, so the
+    cost degenerates to backlog count x constant: join-shortest-queue."""
+    router = PredictiveRouter(n_replicas=3)
+    for i in range(9):
+        router.route(_req(i))                 # no proba: JSQ behavior
+    sizes = sorted(router.queue_lengths().values())
+    assert sizes == [3, 3, 3]
+    est = float(router.service_estimate.mean())
+    for r in router.replicas:
+        assert r.predicted_backlog == pytest.approx(3 * est)
+
+
+def test_failover_reroutes_drained_requests():
+    router = PredictiveRouter(n_replicas=2)
+    for i in range(8):
+        router.route(_req(i))
+    victim = 0
+    n_victim = router.queue_lengths()[victim]
+    drained = router.fail_replica(victim)
+    assert len(drained) == n_victim
+    assert all(r.meta["failed_over"] for r in drained)
+    assert router.stats["failed_over"] == n_victim
+    assert router.queue_lengths()[victim] == 0
+    assert router.queue_lengths()[1] == 8
+    assert not router.replicas[victim].healthy
+    # requests drained out of a failed replica are NOT client cancellations
+    assert all(not r.cancelled for r in drained)
+    # losing the last healthy replica leaves its backlog unroutable
+    with pytest.raises(RuntimeError):
+        router.fail_replica(1)
+    with pytest.raises(RuntimeError):
+        router.route(_req(99))
+
+
+def test_hedge_overdue_moves_requests_past_deadline_once():
+    router = PredictiveRouter(n_replicas=2)
+    # replica 0 is the straggler: stuck busy, old requests queued on it
+    old = [_req(i, arrival=0.0) for i in range(2)]
+    fresh = _req(2, arrival=9.9)
+    for r in old + [fresh]:
+        router.replicas[0].queue.push(r)
+        r.meta["predicted_service"] = 2.0
+        router.replicas[0].predicted_backlog += 2.0
+    moved = router.hedge_overdue(now=10.0, deadline=5.0)
+    assert {r.req_id for r in moved} == {0, 1}
+    assert router.stats["hedged"] == 2
+    # moved to the OTHER replica, not cancelled, marked hedged
+    assert router.queue_lengths() == {0: 1, 1: 2}
+    assert all(r.meta["hedged"] and not r.cancelled for r in moved)
+    # the straggler's predicted backlog was released
+    assert router.replicas[0].predicted_backlog == pytest.approx(2.0)
+    # the under-deadline request stayed put
+    assert fresh.req_id in {r.req_id for r in
+                            router.replicas[0].queue.waiting()}
+    # later, the fresh request crosses the deadline too — but the already
+    # hedged ones never bounce back and forth
+    moved2 = router.hedge_overdue(now=20.0, deadline=5.0)
+    assert {r.req_id for r in moved2} == {fresh.req_id}
+    assert router.hedge_overdue(now=30.0, deadline=5.0) == []
+    assert router.stats["hedged"] == 3
+
+
+def test_hedge_noop_with_single_replica():
+    router = PredictiveRouter(n_replicas=1)
+    router.route(_req(0, arrival=0.0))
+    assert router.hedge_overdue(now=100.0, deadline=1.0) == []
+    assert router.stats["hedged"] == 0
+
+
+def test_on_dispatch_releases_backlog():
+    router = PredictiveRouter(n_replicas=1)
+    req = _req(0)
+    router.route(req, proba=P_LONG)
+    est = router.predicted_service(P_LONG)
+    assert router.replicas[0].predicted_backlog == pytest.approx(est)
+    got = router.replicas[0].queue.pop(now=0.0)
+    router.on_dispatch(0, got, now=0.0)
+    assert router.replicas[0].predicted_backlog == 0.0
+    assert router.replicas[0].busy_until == pytest.approx(est)
+
+
+def test_router_accepts_policy_instances():
+    from repro.core.policy import PredictedSRPT
+    router = PredictiveRouter(n_replicas=2, policy=PredictedSRPT())
+    assert all(r.queue.policy == "srpt" for r in router.replicas)
+    router.route(_req(0))
+    assert router.stats["routed"] == 1
