@@ -1,0 +1,204 @@
+"""Batching benchmark: lane-scaling throughput, s(c) calibration, and the
+batch-degree DES grid (writes ``BENCH_batching.json``).
+
+Three measurements on the reduced smollm backbone (CPU container):
+
+* **lane scaling** — aggregate decode tokens/s through
+  ``BatchedRealEngine`` at c in {1, 2, 4, 8} lanes, all lanes saturated
+  (c equal-length requests, no back-fill), against the c=1 serial fused
+  path (``RealEngine.generate``).  The acceptance bar: c=4 aggregate
+  >= 2x the serial fused path.
+* **s(c) calibration** — the per-lane slowdown the c-server DES needs:
+  ``s(c) = wall_c / wall_1`` for a fixed per-lane token count (each
+  lane's tokens take s(c) x longer when c lanes share the backend);
+  aggregate speedup is ``c / s(c)``.
+* **batch-degree grid** — ``core.sweep.sweep_lane_batches``: FCFS vs SJF
+  vs SRPT x c in {1, 2, 4, 8} x KV budget on the paper's rho = 0.74
+  Poisson workload with NOISY predictor scores (~0.87 ranking accuracy,
+  like BENCH_policies), using the s(c) measured above.  This quantifies
+  the ROADMAP question: how much of the paper's short-P50 win does plain
+  batching recover with no scheduling at all, and how much does
+  predictive admission still add on top.
+
+    PYTHONPATH=src python -m benchmarks.run batching
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+MAX_LEN = 192         # long decodes: steady-state lanes, not fill overhead
+SEGMENT = 16          # the serve-path default; same segment on both sides
+N_NEW = 160
+PROMPT_LEN = 16
+LANES = (1, 2, 4, 8)
+REPEAT = 5
+
+
+def _measure_lanes(result: dict):
+    from repro.configs import get_config
+    from repro.serving.engine import BatchedRealEngine, RealEngine
+
+    cfg = get_config("smollm-360m").reduced()
+    serial = RealEngine(cfg, max_len=MAX_LEN, segment_len=SEGMENT, seed=0)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, cfg.vocab_size, PROMPT_LEN)
+
+    serial.generate(ids, max_new_tokens=N_NEW)          # compile
+    engines = {}
+    for c in LANES:
+        engines[c] = BatchedRealEngine(cfg, params=serial.params,
+                                       max_len=MAX_LEN, segment_len=SEGMENT,
+                                       n_lanes=c)
+        engines[c].generate_batch([ids] * c, max_new_tokens=4)   # compile
+
+    # interleave serial/lane rounds so host-load drift (this is a shared,
+    # cpu-share-throttled container) hits every engine equally; best-of
+    walls = {c: float("inf") for c in LANES}
+    walls["serial"] = float("inf")
+    for _ in range(REPEAT):
+        t0 = time.perf_counter()
+        serial.generate(ids, max_new_tokens=N_NEW)
+        walls["serial"] = min(walls["serial"], time.perf_counter() - t0)
+        for c in LANES:
+            t0 = time.perf_counter()
+            engines[c].generate_batch([ids] * c, max_new_tokens=N_NEW)
+            walls[c] = min(walls[c], time.perf_counter() - t0)
+
+    serial_tok_s = N_NEW / walls["serial"]
+    result["tok_per_s_serial_fused"] = serial_tok_s
+    emit("batching_serial_fused", walls["serial"] / N_NEW * 1e6,
+         f"{serial_tok_s:.0f} tok/s (c=1 fused path)")
+    slowdown = []
+    for c in LANES:
+        # per-lane stretch: each lane's fixed token count takes s(c) x
+        # longer than on the 1-lane engine (>= 1; sub-1 readings are the
+        # 1-lane run's fixed costs, clamped for the DES)
+        s_c = max(walls[c] / walls[1], 1.0)
+        slowdown.append(s_c)
+        agg = c * N_NEW / walls[c]
+        result[f"tok_per_s_lanes_c{c}"] = agg
+        result[f"slowdown_s{c}"] = s_c
+        emit(f"batching_lanes_c{c}", walls[c] / (c * N_NEW) * 1e6,
+             f"{agg:.0f} tok/s aggregate, s({c})={s_c:.2f}, "
+             f"speedup c/s(c)={c / s_c:.2f}x")
+    # dense s(k) for every k <= max lanes (the DES re-scales at every
+    # busy-count change, not just the measured ones): linear interpolation
+    # over the measured lane counts
+    dense = np.interp(np.arange(1, max(LANES) + 1), LANES, slowdown)
+    slowdown = [float(x) for x in np.maximum(dense, 1.0)]
+    result["slowdown"] = [round(s, 4) for s in slowdown]
+    result["agg_speedup_c4_vs_serial"] = \
+        result["tok_per_s_lanes_c4"] / serial_tok_s
+    result["meets_2x_at_c4"] = bool(result["agg_speedup_c4_vs_serial"] >= 2.0)
+    emit("batching_c4_vs_serial",
+         walls[4] / (4 * N_NEW) * 1e6,
+         f"c=4 aggregate {result['tok_per_s_lanes_c4']:.0f} tok/s = "
+         f"{result['agg_speedup_c4_vs_serial']:.2f}x the c=1 fused path "
+         f"(bar: >= 2x)")
+    return slowdown
+
+
+def _grid(result: dict, slowdown, n: int = 1000, seeds: int = 5):
+    from repro.core.sim_fast import RequestBatch
+    from repro.core.simulation import _spread_for_accuracy
+    from repro.core.sweep import sweep_lane_batches
+    from repro.serving.service_time import (PAPER_4090_LONG,
+                                            PAPER_4090_SHORT)
+
+    short, long = PAPER_4090_SHORT, PAPER_4090_LONG
+    es = 0.5 * (short.mean + long.mean)
+    tau = 3.0 * short.mean
+    spread = _spread_for_accuracy(0.87)
+    # memory-token budgets: None = lane-limited; 600 tokens ~ one long
+    # request's KV residency (60 tok/s x ~8.9 s) plus a short's, so the
+    # finite budget bites exactly when several longs want lanes at once
+    budgets = (None, 600.0)
+    # two load points: the paper's rho = 0.74 (c=1-feasible — batching
+    # alone drains the queue) and a capacity-matched overload row,
+    # rho2 = 0.74 x 4/s(4): deep overload for one lane, but at c=4 the
+    # EFFECTIVE utilization is back at the paper's operating point — the
+    # load regime batching newly opens, where admission matters again.
+    # The guard runs at the paper's tau in the steady-state row; in the
+    # overload row every wait exceeds any fixed tau, so an armed guard
+    # collapses all policies to FCFS (the Table-8 burst effect) — it is
+    # disabled there, as in the burst replication.
+    rho2 = round(0.74 * 4.0 / slowdown[3], 2)
+    rhos = (0.74, rho2)
+    taus = {0.74: tau, rho2: None}
+    grid = {}
+    for rho in rhos:
+        conditions = [("fcfs", taus[rho]), ("sjf", taus[rho]),
+                      ("srpt", taus[rho])]
+        batches = []
+        for s in range(seeds):
+            rng = np.random.default_rng(s)
+            b = RequestBatch.poisson(rng, n, rho / es, short, long)
+            base = np.where(b.p_long > 0.5, 0.75, 0.25)
+            b.p_long = np.clip(rng.normal(base, spread), 0.0, 1.0)
+            batches.append(b)
+        t0 = time.perf_counter()
+        flat = sweep_lane_batches(batches, conditions, LANES,
+                                  budgets=budgets, slowdown=slowdown)
+        dt = time.perf_counter() - t0
+        cells = len(conditions) * len(LANES) * len(budgets) * seeds
+        emit(f"batching_grid_rho{rho}", dt / cells * 1e6,
+             f"{cells} DES cells (3 policies x {len(LANES)} lane counts x "
+             f"{len(budgets)} budgets x {seeds} seeds, n={n}) in {dt:.2f}s")
+        for ci, (pol, _) in enumerate(conditions):
+            for li, c in enumerate(LANES):
+                for bi, budget in enumerate(budgets):
+                    label = f"rho{rho}_{pol}_c{c}" + \
+                        ("" if budget is None else f"_kv{int(budget)}")
+                    grid[label] = {
+                        m: round(float(flat[m][ci, li, bi].mean()), 3)
+                        for m in ("short_p50", "short_p99", "long_p50",
+                                  "long_p99", "mean_sojourn")}
+    result["grid"] = grid
+    result["grid_axes"] = {"policies": [p for p, _ in conditions],
+                           "lanes": list(LANES), "rhos": list(rhos),
+                           "budgets_tokens": [b for b in budgets],
+                           "tau": tau, "n": n, "seeds": seeds,
+                           "ranking_accuracy": 0.87,
+                           "slowdown": [round(s, 4) for s in slowdown]}
+
+    # the decomposition headline, per load point: how much of the
+    # scheduling win batching recovers alone, and what admission adds
+    for rho in rhos:
+        f1 = grid[f"rho{rho}_fcfs_c1"]["short_p50"]
+        s1 = grid[f"rho{rho}_sjf_c1"]["short_p50"]
+        f4 = grid[f"rho{rho}_fcfs_c4"]["short_p50"]
+        s4 = grid[f"rho{rho}_sjf_c4"]["short_p50"]
+        r4 = grid[f"rho{rho}_srpt_c4"]["short_p50"]
+        key = f"rho{rho}"
+        result[f"{key}_short_p50"] = {"fcfs_c1": f1, "sjf_c1": s1,
+                                      "fcfs_c4": f4, "sjf_c4": s4,
+                                      "srpt_c4": r4}
+        result[f"{key}_sjf_win_pct_c1"] = round(100 * (1 - s1 / f1), 1)
+        result[f"{key}_sjf_win_pct_on_top_of_c4"] = \
+            round(100 * (1 - s4 / f4), 1)
+        result[f"{key}_srpt_win_pct_on_top_of_c4"] = \
+            round(100 * (1 - r4 / f4), 1)
+        emit(f"batching_decomposition_rho{rho}", 0.0,
+             f"short P50 fcfs@c1 {f1:.1f}s sjf@c1 {s1:.1f}s "
+             f"(sjf win {result[f'{key}_sjf_win_pct_c1']:.0f}%) | "
+             f"fcfs@c4 {f4:.1f}s sjf@c4 {s4:.1f}s srpt@c4 {r4:.1f}s "
+             f"(admission on top of batching: sjf "
+             f"{result[f'{key}_sjf_win_pct_on_top_of_c4']:.0f}%, srpt "
+             f"{result[f'{key}_srpt_win_pct_on_top_of_c4']:.0f}%)")
+
+
+def run() -> dict:
+    result: dict = {"max_len": MAX_LEN, "segment_len": SEGMENT,
+                    "max_new_tokens": N_NEW, "lanes": list(LANES)}
+    slowdown = _measure_lanes(result)
+    _grid(result, slowdown)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,10 @@ tracked across PRs:
 * ``serve`` -> ``BENCH_serve.json`` (seed vs fused real-decode tokens/s,
   TTFT, per-token dispatch overhead, end-to-end queue-to-completion P50);
 * ``policies`` -> ``BENCH_policies.json`` (short/long P50+P99 for every
-  registered scheduling policy under Poisson rho=0.74 and 100-req burst).
+  registered scheduling policy under Poisson rho=0.74 and 100-req burst);
+* ``batching`` -> ``BENCH_batching.json`` (lane-scaling tok/s through the
+  micro-batched engine, the s(c) slowdown calibration, and the
+  policy x lane-count x KV-budget DES grid).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -30,15 +33,16 @@ BENCH_JSONS = {
     "sim": os.path.join(_ROOT, "BENCH_sim.json"),
     "serve": os.path.join(_ROOT, "BENCH_serve.json"),
     "policies": os.path.join(_ROOT, "BENCH_policies.json"),
+    "batching": os.path.join(_ROOT, "BENCH_batching.json"),
 }
 
 
 def main() -> None:
-    from benchmarks import (fig3_rho_sweep, policies_bench, predictor_latency,
-                            serve_bench, sim_bench, table1_service_stats,
-                            table2_dataset_stats, table4_ablation,
-                            table5_ranking, table6_cross, table7_baselines,
-                            table8_burst, table9_tau)
+    from benchmarks import (batching_bench, fig3_rho_sweep, policies_bench,
+                            predictor_latency, serve_bench, sim_bench,
+                            table1_service_stats, table2_dataset_stats,
+                            table4_ablation, table5_ranking, table6_cross,
+                            table7_baselines, table8_burst, table9_tau)
 
     suites = {
         "table1": table1_service_stats.run,
@@ -54,6 +58,7 @@ def main() -> None:
         "sim": sim_bench.run,
         "serve": serve_bench.run,
         "policies": policies_bench.run,
+        "batching": batching_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

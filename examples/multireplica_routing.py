@@ -1,28 +1,36 @@
-"""Beyond-paper: predictive routing across replicas + failover.
+"""Beyond-paper: predictive routing across replicas with the PR-4 policy
+registry — preemptive SRPT placement, per-tenant fair share, hedged
+re-routing of overdue requests, and failover.
 
     PYTHONPATH=src python examples/multireplica_routing.py
 
 The same P(Long) signal the paper uses for queue ORDERING also improves
-PLACEMENT: join-shortest-predicted-work (JSPW) vs blind round-robin across 4
-serial replicas, plus a mid-run replica failure with requeue.
+PLACEMENT (join-shortest-predicted-work vs blind round-robin across 4
+serial replicas).  Policies are first-class registry values
+(``repro.core.policy``): the demo flips between the paper's ``sjf``, the
+preemptive ``srpt`` and two-tenant ``fair_share`` by passing a policy
+spec — no per-policy code paths.
 """
 
 import numpy as np
 
 from repro.core.gbdt import GBDTParams
+from repro.core.policy import WeightedFairShare, get_policy
 from repro.core.predictor import Predictor
 from repro.data.corpus import sample_dataset
 from repro.serving.openai_api import CompletionRequest
 from repro.serving.server import ClairvoyantServer
 
 
-def run(policy: str, use_predictor_for_routing: bool, pred, n=200, seed=0):
-    server = ClairvoyantServer(policy=policy, tau=None, n_replicas=4,
-                               predictor=pred if policy == "sjf" else None,
-                               seed=seed)
-    if not use_predictor_for_routing:
-        # blind baseline: round-robin placement, no backlog awareness
-        def rr_route(req, proba=None, now=0.0):
+def run(policy, pred, n=200, seed=0, jspw=True, tenants=None):
+    """One 4-replica drain under a policy spec (registry name or Policy
+    instance); ``jspw=False`` swaps in blind round-robin placement."""
+    pol = get_policy(policy)
+    server = ClairvoyantServer(policy=pol, tau=None, n_replicas=4,
+                               predictor=pred if pol.uses_predictor
+                               else None, seed=seed)
+    if not jspw:
+        def rr_route(req, proba=None, now=0.0, **kw):
             rep = server.router.replicas[req.req_id % 4]
             rep.queue.push(req)
             return rep.replica_id
@@ -32,7 +40,8 @@ def run(policy: str, use_predictor_for_routing: bool, pred, n=200, seed=0):
     arrivals = np.sort(rng.uniform(0, 5.0, n))
     for i in range(n):
         klass = ("short", "medium", "long")[int(ds.classes[i])]
-        server.submit(CompletionRequest(prompt=ds.prompts[i]),
+        tenant = tenants[i % len(tenants)] if tenants else "default"
+        server.submit(CompletionRequest(prompt=ds.prompts[i], tenant=tenant),
                       arrival=float(arrivals[i]),
                       true_output_tokens=int(ds.lengths[i]), klass=klass)
     server.drain()
@@ -44,14 +53,53 @@ def main():
     pred = Predictor.train(train.prompts, train.lengths,
                            GBDTParams(num_rounds=80))
 
-    blind = run("sjf", use_predictor_for_routing=False, pred=pred)
-    jspw = run("sjf", use_predictor_for_routing=True, pred=pred)
-    print("4 replicas, 200 mixed requests:")
-    for name, s in (("round-robin", blind), ("JSPW", jspw)):
-        print(f"  {name:11s}: short P50 {s.percentile(50,'short'):7.2f}s "
-              f"P95 {s.percentile(95,'short'):7.2f}s | "
-              f"long P95 {s.percentile(95,'long'):7.2f}s | "
-              f"makespan {max(r.queue_wait_s + r.service_s for r in s.responses):6.1f}s")
+    # --- policy registry sweep over the same 4-replica fleet ---------------
+    print("4 replicas, 200 mixed requests (JSPW placement):")
+    rr = run("sjf", pred, jspw=False)
+    rows = [("sjf round-robin", rr)]
+    for policy in ("sjf", "srpt", "sjf_quantile"):
+        rows.append((policy + " JSPW", run(policy, pred)))
+    for name, s in rows:
+        print(f"  {name:16s}: short P50 {s.percentile(50, 'short'):7.2f}s "
+              f"P95 {s.percentile(95, 'short'):7.2f}s | "
+              f"long P95 {s.percentile(95, 'long'):7.2f}s")
+
+    # --- per-tenant fair share: a flooding tenant only delays itself ------
+    fs = WeightedFairShare(weights=(("light", 1.0), ("heavy", 1.0)))
+    # 7 of 8 requests belong to "heavy"; fair share keeps "light" flowing
+    tenants = ["heavy"] * 7 + ["light"]
+    fair = run(fs, pred, tenants=tenants)
+    plain = run("fcfs", pred, tenants=tenants)
+    for name, s in (("fcfs", plain), ("fair_share", fair)):
+        waits = {}
+        for r in s.responses:
+            req = s._inflight.get(r.request_id)
+            waits.setdefault(req.tenant if req else "?", []).append(
+                r.queue_wait_s)
+        light = float(np.mean(waits.get("light", [0.0])))
+        heavy = float(np.mean(waits.get("heavy", [0.0])))
+        print(f"  {name:11s}: light-tenant mean wait {light:6.2f}s "
+              f"vs heavy {heavy:6.2f}s")
+
+    # --- hedge_overdue: re-route requests that missed their deadline ------
+    server = ClairvoyantServer(policy="sjf", tau=None, n_replicas=4,
+                               predictor=pred, seed=5)
+    ds = sample_dataset("sharegpt", n=80, seed=6)
+    for i in range(80):
+        klass = ("short", "medium", "long")[int(ds.classes[i])]
+        # 10 stale requests queued at t=0 (a straggling replica held them);
+        # the rest arrived recently and are within deadline
+        arrival = 0.0 if i < 10 else 25.0
+        server.submit(CompletionRequest(prompt=ds.prompts[i]),
+                      arrival=arrival,
+                      true_output_tokens=int(ds.lengths[i]), klass=klass)
+    moved = server.router.hedge_overdue(now=30.0, deadline=20.0)
+    print(f"hedged dispatch: {len(moved)} of 80 queued requests exceeded "
+          f"the 20 s queue-wait deadline at t=30 and were re-routed to the "
+          f"least-loaded other replica "
+          f"(hedged={server.router.stats['hedged']})")
+    server.drain()
+    print(f"  drained {len(server.responses)} of 80 after hedging")
 
     # --- failover: kill a replica with a loaded queue ----------------------
     server = ClairvoyantServer(policy="sjf", tau=None, n_replicas=4,

@@ -1,10 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 tests + the perf microbenchmarks.
 #
-#   scripts/ci.sh            # full tier-1 + predictor/sim/serve benches
-#                            # (write BENCH_predictor.json / BENCH_sim.json /
-#                            # BENCH_serve.json)
-#   SKIP_BENCH=1 scripts/ci.sh   # tests only
+#   scripts/ci.sh            # full tier-1 + example smoke runs + the
+#                            # predictor/sim/serve/policies/batching benches
+#                            # (write the BENCH_*.json records)
+#   SKIP_BENCH=1 scripts/ci.sh   # tests + example smoke runs only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,10 +22,14 @@ echo "== assert-stripped import check (python -O) =="
 # exceptions, so the hot modules have to import and resolve cleanly
 python -O -c "import repro.core.sim_fast, repro.core.policy; \
 repro.core.policy.get_policy('sjf'); \
-import repro.core.sweep, repro.core.scheduler"
+import repro.core.sweep, repro.core.scheduler, repro.serving.batching"
 
 echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
+
+echo "== example smoke runs (multi-replica routing, batched serve) =="
+python examples/multireplica_routing.py
+python examples/batched_serve.py
 
 if [ -z "${SKIP_BENCH:-}" ]; then
     echo "== predictor microbenchmark =="
@@ -44,4 +48,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run policies
     echo "== BENCH_policies.json =="
     cat BENCH_policies.json
+    echo "== micro-batching benchmark (lane scaling + c-server grid) =="
+    python -m benchmarks.run batching
+    echo "== BENCH_batching.json =="
+    cat BENCH_batching.json
 fi

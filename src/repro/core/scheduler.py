@@ -398,6 +398,26 @@ class SJFQueue:
             return req
         return None
 
+    def pop_many(self, k: int, now: float) -> list:
+        """Pop up to ``k`` requests for lane back-fill, applying the full
+        dispatch rule — starvation check included — *between* pops.
+
+        A naive batched back-fill (take the heap's top-k in one go) gets
+        the ordering wrong whenever the guard matters: popping the best
+        key can leave the FIFO-oldest waiter over tau, in which case the
+        SECOND slot must go to the promoted waiter even though its key
+        sorts last.  Each pop here re-evaluates the guard at ``now``, so
+        ``pop_many(k, now)`` is exactly ``[pop(now) for _ in range(k)]``
+        (tests/test_scheduler.py has the regression test against the
+        naive top-k order)."""
+        out = []
+        for _ in range(int(k)):
+            req = self.pop(now=now)
+            if req is None:
+                break
+            out.append(req)
+        return out
+
     def oldest_wait(self, now: float) -> float:
         self._prune_fifo()
         return (now - self._fifo[0].arrival) if self._fifo else 0.0

@@ -22,7 +22,13 @@ stack around struct-of-arrays data:
   policies with eviction semantics (``core.policy`` MODE_SRPT /
   MODE_QUANTUM): arrivals can evict the running request and re-enqueue
   its remaining service, quantum expiry demotes (MLFQ).  Also a C loop
-  with a bitwise-identical heapq fallback.
+  with a bitwise-identical heapq fallback;
+* :func:`simulate_grid_servers` / :func:`simulate_batch_servers` — the
+  *c-server* engine (PR 5): bounded-concurrency decode lanes with a
+  per-lane slowdown s(c), a memory-token admission budget and srpt lane
+  eviction — the virtual-time mirror of ``serving/batching.py``.  At
+  c=1 with unit slowdown it is bitwise trace-equivalent to the serial
+  engines (both non-preemptive and srpt rows).
 
 Priority keys come from the policy layer (``core.policy``): every
 registered policy — seed fcfs/sjf/sjf_oracle plus srpt, sjf_quantile,
@@ -510,6 +516,287 @@ def simulate_grid_preempt(arrival, service, key, tau, mode, quanta=None,
 
 
 # ---------------------------------------------------------------------------
+# c-server engine (bounded-concurrency decode lanes, serving/batching.py's
+# simulation mirror).
+#
+# The server has ``c`` lanes and a memory-token budget.  Admission follows
+# the same dispatch rule as the serial engines — starvation guard, then the
+# policy key — applied whenever a lane is free; the queue head is admitted
+# only if its memory demand fits the remaining budget (strict order: a
+# blocked head is never bypassed).  Lanes in service progress at a
+# concurrency-dependent rate: with k busy lanes each lane's service is
+# stretched by ``slowdown[k-1]`` (s(1) = 1; batched decode is not free —
+# calibrate s(c) from the real engine, benchmarks/batching_bench.py), so
+# remaining work is re-scaled whenever the busy count changes.
+#
+# Modes: MODE_NONE (key policies) and MODE_SRPT (an arrival whose key
+# strictly beats the *worst* running lane's current remaining-key evicts
+# that lane; eviction releases its memory reservation — resume re-prefills,
+# the PR-4 machinery).  MODE_QUANTUM is rejected: per-lane quantum
+# accounting under rate re-scaling is future work.
+#
+# Bitwise contract at c=1 with slowdown (1.0,): MODE_NONE rows reproduce
+# ``_simulate_arrays_python`` (and therefore ``simulate_reference``) traces
+# exactly — work advances only when the busy count changes, so a request
+# admitted at ``t`` finishes at ``t + service*1.0`` with identical float
+# ops; MODE_SRPT rows reproduce ``_simulate_preempt_python`` — work
+# advances at every event, matching its incremental ``used += dt``
+# accumulation (tests/test_batching.py fuzzes both).
+# ---------------------------------------------------------------------------
+
+def _simulate_cserver_python(arrival, service, key, tau, c, slowdown,
+                             mem, mem_budget, mode):
+    import heapq
+    n = arrival.shape[0]
+    INF = float("inf")
+    arr = arrival.tolist()
+    svc = service.tolist()
+    k0 = key.tolist()
+    curk = list(k0)
+    s = list(slowdown)
+    if len(s) < c:
+        raise ValueError(f"slowdown needs >= {c} entries, got {len(s)}")
+    srpt = mode == MODE_SRPT
+    if mode not in (MODE_NONE, MODE_SRPT):
+        raise ValueError("c-server engine supports key-based and srpt "
+                         "policies only (quantum/MLFQ accounting under "
+                         "rate re-scaling is not implemented)")
+    memd = mem.tolist() if mem is not None else None
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    promoted = np.zeros(n, bool)
+    started = [False] * n
+    state = [0] * n            # 0 waiting, 1 queued, 2 running, 3 done
+    used = [0.0] * n           # unscaled service received
+    last_seq = [-1] * n
+    heap: list = []
+    guard = tau is not None
+    seqc = 0
+    t = 0.0
+    last_t = 0.0               # time ``used`` was last advanced
+    i_arr = 0
+    oldest = 0
+    running: list = []
+    nq = 0
+    ndone = 0
+    promos = 0
+    preempts = 0
+    used_mem = 0.0
+
+    def push(j):
+        nonlocal seqc, nq
+        heapq.heappush(heap, (curk[j], seqc, j))
+        last_seq[j] = seqc
+        seqc += 1
+        nq += 1
+
+    def heap_best():
+        while heap:
+            kk, sq, j = heap[0]
+            if state[j] == 1 and sq == last_seq[j]:
+                return kk, j
+            heapq.heappop(heap)
+        return None
+
+    def pop_valid():
+        nonlocal nq
+        while True:
+            _, sq, j = heapq.heappop(heap)
+            if state[j] == 1 and sq == last_seq[j]:
+                nq -= 1
+                return j
+
+    def advance(t_new):
+        """Credit service progress up to ``t_new`` at the current busy
+        count.  Called at every k change; additionally at every event in
+        srpt mode (whose preemption key needs up-to-date ``used``)."""
+        nonlocal last_t
+        kcur = len(running)
+        if kcur and t_new > last_t:
+            d = (t_new - last_t) / s[kcur - 1]
+            for j in running:
+                used[j] += d
+        last_t = t_new
+
+    def next_completion():
+        kcur = len(running)
+        if not kcur:
+            return INF, -1
+        best_j, best_rem = -1, INF
+        for j in running:
+            r = svc[j] - used[j]
+            if r < best_rem:
+                best_rem, best_j = r, j
+        return last_t + best_rem * s[kcur - 1], best_j
+
+    def run_key(j):
+        return max(k0[j] - used[j], 0.0) if srpt else curk[j]
+
+    def fits(j):
+        if memd is None:
+            return True
+        # idle override: all reservations are held by running lanes, so an
+        # empty server admits even an over-budget head (it must run
+        # eventually; memory pressure may serialize but never deadlock)
+        return used_mem + memd[j] <= mem_budget or not running
+
+    def dispatch(j, promo):
+        nonlocal promos, used_mem
+        advance(t)
+        if promo:
+            promoted[j] = True
+            promos += 1
+        state[j] = 2
+        running.append(j)
+        if memd is not None:
+            used_mem += memd[j]
+        if not started[j]:
+            started[j] = True
+            start[j] = t
+
+    def admit_loop():
+        nonlocal oldest, nq
+        while len(running) < c and nq > 0:
+            while state[oldest] == 3:
+                oldest += 1
+            o = oldest             # FIFO-oldest *queued* (skip running)
+            while state[o] != 1:
+                o += 1
+            if guard and (t - arr[o]) > tau:
+                j, promo = o, True
+            else:
+                j, promo = heap_best()[1], False
+            if not fits(j):
+                return             # memory-blocked head: no bypass
+            if promo:
+                nq -= 1            # heap entry goes stale via state change
+            else:
+                j = pop_valid()
+            dispatch(j, promo)
+
+    while ndone < n:
+        if not running and nq == 0:
+            a = arr[i_arr]
+            if t < a:
+                t = a
+                last_t = t
+        t_fin, j_fin = next_completion()
+        t_arr = arr[i_arr] if i_arr < n else INF
+        if t_fin <= t_arr:                        # completion event
+            t = t_fin
+            advance(t)
+            running.remove(j_fin)
+            used[j_fin] = svc[j_fin]
+            finish[j_fin] = t
+            state[j_fin] = 3
+            ndone += 1
+            if memd is not None:
+                # clear float residue once nothing holds a reservation
+                used_mem = max(0.0, used_mem - memd[j_fin]) if running \
+                    else 0.0
+            while i_arr < n and arr[i_arr] <= t:
+                state[i_arr] = 1
+                push(i_arr)
+                i_arr += 1
+            admit_loop()
+        else:                                     # arrival event(s)
+            if t_arr > t:          # after an idle jump t may already be past
+                t = t_arr          # the next arrival; never rewind the clock
+            if srpt:
+                advance(t)
+            while i_arr < n and arr[i_arr] <= t:
+                state[i_arr] = 1
+                push(i_arr)
+                i_arr += 1
+            if len(running) < c:
+                admit_loop()
+            elif srpt:
+                best = heap_best()
+                if best is not None:
+                    victim = max(running, key=lambda j: (run_key(j), j))
+                    vk = run_key(victim)
+                    # eviction frees the victim's reservation (resume
+                    # re-prefills); the candidate must fit what remains
+                    fits_after = memd is None or (
+                        used_mem - memd[victim] + memd[best[1]]
+                        <= mem_budget) or used_mem - memd[victim] <= 0.0
+                    if best[0] < vk and fits_after:
+                        advance(t)
+                        running.remove(victim)
+                        if memd is not None:
+                            used_mem = max(0.0,
+                                           used_mem - memd[victim])
+                        curk[victim] = vk
+                        state[victim] = 1
+                        push(victim)
+                        preempts += 1
+                        j = pop_valid()
+                        dispatch(j, False)
+    return start, finish, promoted, promos, preempts
+
+
+def simulate_grid_servers(arrival, service, key, tau, n_servers: int,
+                          slowdown=None, mem=None, mem_budget=None,
+                          mode=None):
+    """G independent c-server simulations in one call.
+
+    Layout follows :func:`simulate_grid` — ``arrival``/``service``/``key``
+    (G, n) float64, rows arrival-sorted; ``tau`` length-G (None = guard
+    off) — plus:
+
+    * ``n_servers``: lane count c (shared across rows);
+    * ``slowdown``: per-lane service stretch ``s[k-1]`` at k busy lanes
+      (default all 1.0 — ideal scaling);
+    * ``mem`` (G, n) + ``mem_budget``: per-request memory-token demand
+      and the shared budget (None = unconstrained);
+    * ``mode``: length-G ints, ``MODE_NONE`` or ``MODE_SRPT`` per row.
+
+    Returns ``(start, finish, promoted, promotions, preemptions)``.
+    At c=1 with unit slowdown, MODE_NONE rows are bitwise equal to
+    :func:`simulate_grid` and MODE_SRPT rows to
+    :func:`simulate_grid_preempt`.
+    """
+    arrival = np.ascontiguousarray(arrival, np.float64)
+    service = np.ascontiguousarray(service, np.float64)
+    key = np.ascontiguousarray(key, np.float64)
+    G, n = arrival.shape
+    c = int(n_servers)
+    if c < 1:
+        raise ValueError(f"need >= 1 server, got {n_servers}")
+    slowdown = tuple(float(x) for x in slowdown) if slowdown is not None \
+        else (1.0,) * c
+    if any(x <= 0 for x in slowdown):
+        raise ValueError(f"slowdown factors must be positive: {slowdown}")
+    tau_arr = np.array([np.nan if x is None else float(x) for x in tau],
+                       np.float64)
+    mode_arr = np.zeros(G, np.int8) if mode is None \
+        else np.ascontiguousarray(mode, np.int8)
+    if tau_arr.shape != (G,) or mode_arr.shape != (G,):
+        raise ValueError(f"tau and mode must have length {G}")
+    if mem is not None:
+        mem = np.ascontiguousarray(mem, np.float64)
+        if mem_budget is None:
+            raise ValueError("mem given without mem_budget")
+    start = np.empty((G, n))
+    finish = np.empty((G, n))
+    promoted = np.zeros((G, n), bool)
+    promotions = np.zeros(G, np.int64)
+    preemptions = np.zeros(G, np.int64)
+    if n == 0:
+        return start, finish, promoted, promotions, preemptions
+    for g in range(G):
+        tg = None if np.isnan(tau_arr[g]) else float(tau_arr[g])
+        start[g], finish[g], promoted[g], promos, pre = \
+            _simulate_cserver_python(
+                arrival[g], service[g], key[g], tg, c, slowdown,
+                None if mem is None else mem[g], mem_budget,
+                int(mode_arr[g]))
+        promotions[g] = promos
+        preemptions[g] = pre
+    return start, finish, promoted, promotions, preemptions
+
+
+# ---------------------------------------------------------------------------
 # Batch-level front end
 # ---------------------------------------------------------------------------
 
@@ -587,3 +874,45 @@ def simulate_batch(batch: RequestBatch, policy="sjf",
                           promoted=promoted, promotions=promotions,
                           makespan=float(finish.max()) if n else 0.0,
                           preemptions=preemptions)
+
+
+def simulate_batch_servers(batch: RequestBatch, policy="sjf",
+                           tau: Optional[float] = None, n_servers: int = 1,
+                           slowdown=None, mem_tokens=None,
+                           mem_budget=None) -> BatchSimResult:
+    """Run the *c-server* DES over a :class:`RequestBatch`.
+
+    ``n_servers`` decode lanes with per-lane slowdown ``slowdown[k-1]``
+    at k busy lanes and an optional memory-token budget
+    (``mem_tokens`` per request, aligned with the batch's row order).
+    Key-based policies and srpt are supported; at ``n_servers=1`` with
+    unit slowdown the trace is bitwise-equal to :func:`simulate_batch`.
+    """
+    pol = get_policy(policy)
+    if pol.mode not in (MODE_NONE, MODE_SRPT):
+        raise ValueError(f"policy {pol.name!r}: the c-server engine "
+                         "supports key-based and srpt policies only")
+    tau = pol.aging.effective_tau(tau)
+    perm = np.lexsort((batch.req_id, batch.arrival))
+    arrival = batch.arrival[perm]
+    service = batch.true_service[perm]
+    key = pol.key_array(arrival, batch.p_long[perm], service,
+                        tenant=batch.tenant[perm], tenants=batch.tenants)
+    mem = None
+    if mem_tokens is not None:
+        mem = np.asarray(mem_tokens, np.float64)[perm][None]
+    start_s, finish_s, promoted_s, promos, pre = simulate_grid_servers(
+        arrival[None], service[None], key[None], (tau,), n_servers,
+        slowdown=slowdown, mem=mem, mem_budget=mem_budget,
+        mode=(pol.mode,))
+    n = len(batch)
+    start = np.empty(n)
+    finish = np.empty(n)
+    promoted = np.empty(n, bool)
+    start[perm] = start_s[0]
+    finish[perm] = finish_s[0]
+    promoted[perm] = promoted_s[0]
+    return BatchSimResult(batch=batch, start=start, finish=finish,
+                          promoted=promoted, promotions=int(promos[0]),
+                          makespan=float(finish.max()) if n else 0.0,
+                          preemptions=int(pre[0]))

@@ -107,6 +107,39 @@ def simulate(requests: Sequence[Request], policy="sjf",
                      makespan=res.makespan)
 
 
+def simulate_servers(requests: Sequence[Request], policy="sjf",
+                     tau: Optional[float] = None, n_servers: int = 1,
+                     slowdown=None, mem_tokens=None,
+                     mem_budget=None) -> SimResult:
+    """Run the *c-server* DES: ``n_servers`` concurrent decode lanes with
+    a per-lane slowdown ``slowdown[k-1]`` at k busy lanes and an optional
+    memory-token budget — the bounded-concurrency micro-batching regime
+    (serving/batching.py) in virtual time.
+
+    ``mem_tokens`` is aligned with the arrival-sorted request order (the
+    same ``(arrival, req_id)`` sort every engine applies).  Key-based
+    policies and srpt are supported; the reference simulator stays c=1 —
+    at ``n_servers=1`` with unit slowdown this is bitwise trace-equal to
+    :func:`simulate` (and the reference) for key policies.
+    """
+    from repro.core.sim_fast import RequestBatch, simulate_batch_servers
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    n = len(reqs)
+    if n == 0:
+        return SimResult(requests=[], promotions=0, makespan=0.0)
+    res = simulate_batch_servers(
+        RequestBatch.from_requests(reqs), policy=policy, tau=tau,
+        n_servers=n_servers, slowdown=slowdown, mem_tokens=mem_tokens,
+        mem_budget=mem_budget)
+    for i, r in enumerate(reqs):
+        r.start = float(res.start[i])
+        r.finish = float(res.finish[i])
+        r.promoted = bool(res.promoted[i])
+    done = [reqs[i] for i in np.argsort(res.start, kind="stable")]
+    return SimResult(requests=done, promotions=res.promotions,
+                     makespan=res.makespan)
+
+
 # ---------------------------------------------------------------------------
 # Workload generators
 # ---------------------------------------------------------------------------

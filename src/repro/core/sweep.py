@@ -25,6 +25,12 @@ policies (srpt / mlfq) are routed row-wise to the preemptive host engine
 (``sim_fast.simulate_grid_preempt``); key-based rows run on the requested
 backend, so one grid can mix both.
 
+``sweep_lanes`` / ``sweep_lane_batches`` add the batch-degree axis
+(PR 5): policy x decode-lane count x KV-memory budget through the
+c-server engine (``sim_fast.simulate_grid_servers``) with a calibrated
+per-lane slowdown — the grid that decomposes how much of the scheduling
+win bounded-concurrency batching recovers by itself.
+
 ``run_grid`` is the non-DES counterpart used by the accuracy-table
 benchmarks (model x feature-group, model x baseline): one call evaluates
 a cartesian grid of cells and returns the keyed results.
@@ -40,7 +46,8 @@ import numpy as np
 
 from repro.core.policy import Policy, get_policy
 from repro.core.sim_fast import (RequestBatch, simulate_grid,
-                                 simulate_grid_preempt)
+                                 simulate_grid_preempt,
+                                 simulate_grid_servers)
 
 #: A sweep condition: (policy spec, tau).  The policy spec is a registry
 #: name ("fcfs", "sjf", "srpt", ...) or a Policy instance (for custom
@@ -221,6 +228,130 @@ def sweep_burst(conditions: Sequence[Condition], seeds: Sequence[int],
                        seeds=seeds,
                        metrics={m: v.reshape(C, 1, S)
                                 for m, v in flat.items()})
+
+
+@dataclass
+class LaneSweepResult:
+    """Metric arrays over a conditions x lanes x budgets x seeds grid."""
+
+    conditions: Tuple[Condition, ...]
+    lanes: Tuple[int, ...]
+    budgets: Tuple[Optional[float], ...]
+    seeds: Tuple[int, ...]
+    metrics: Dict[str, np.ndarray]               # each (C, L, B, S)
+
+    def metric(self, name: str) -> np.ndarray:
+        return self.metrics[name]
+
+
+def sweep_lanes(conditions: Sequence[Condition], lanes: Sequence[int],
+                seeds: Sequence[int], n: int, rho: float, short, long,
+                mix_long: float = 0.5, slowdown=None,
+                budgets: Sequence[Optional[float]] = (None,),
+                mem_tokens_per_s: float = 60.0) -> LaneSweepResult:
+    """The batch-degree grid: policy x lane-count x KV-budget x seed,
+    answering "how much of the scheduling win does batching recover, and
+    what does predictive admission still add on top" in one call.
+
+    * ``lanes``: decode-lane counts c (c=1 rows are bitwise-equal to the
+      serial engine for key policies, so the existing sweeps anchor the
+      grid);
+    * ``slowdown``: per-lane service stretch ``s[k-1]`` at k busy lanes,
+      covering at least ``max(lanes)`` entries (calibrate from the real
+      engine — ``benchmarks/batching_bench.py`` measures it); default
+      ideal scaling;
+    * ``budgets``: KV-memory budgets in *memory tokens* (None =
+      lane-limited only).  A request's demand is its KV residency proxy
+      ``true_service x mem_tokens_per_s`` (service seconds x decode
+      rate ~ output tokens pinned in cache).
+
+    One workload per seed at the given ``rho`` is shared across every
+    (condition, c, budget) cell — paired comparisons, like
+    :func:`sweep_poisson`.  Conditions may mix key-based policies and
+    srpt; quantum policies (mlfq) are rejected by the c-server engine.
+    """
+    specs = tuple((p, t) for p, t in conditions)
+    named = tuple((get_policy(p).name, t) for p, t in specs)
+    lanes = tuple(int(c) for c in lanes)
+    budgets = tuple(budgets)
+    seeds = tuple(int(s) for s in seeds)
+    es = mix_long * long.mean + (1.0 - mix_long) * short.mean
+    lam = rho / es
+    batches = [RequestBatch.poisson(np.random.default_rng(s), n, lam,
+                                    short, long, mix_long=mix_long)
+               for s in seeds]
+    out = sweep_lane_batches(batches, specs, lanes, budgets=budgets,
+                             slowdown=slowdown,
+                             mem_tokens_per_s=mem_tokens_per_s)
+    return LaneSweepResult(conditions=named, lanes=lanes, budgets=budgets,
+                           seeds=seeds, metrics=out)
+
+
+def sweep_lane_batches(batches: Sequence[RequestBatch],
+                       conditions: Sequence[Condition],
+                       lanes: Sequence[int],
+                       budgets: Sequence[Optional[float]] = (None,),
+                       slowdown=None,
+                       mem_tokens_per_s: float = 60.0) -> Dict[str, np.ndarray]:
+    """Batch-level core of :func:`sweep_lanes` (the analogue of
+    :func:`sweep_batches`): callers that prepare their own workloads —
+    e.g. to inject noisy predictor scores — pass them directly.
+
+    Returns ``{metric: (C, L, B, G) ndarray}`` over conditions x lanes x
+    budgets x batches.
+    """
+    policies = [get_policy(p) for p, _ in conditions]
+    lanes = tuple(int(c) for c in lanes)
+    budgets = tuple(budgets)
+    if slowdown is None:
+        slowdown = (1.0,) * max(lanes)
+    slowdown = tuple(float(x) for x in slowdown)
+    C, G = len(conditions), len(batches)
+    n = len(batches[0])
+    assert all(len(b) == n for b in batches), "batches must be same length"
+
+    sorted_cols = []
+    for b in batches:
+        perm = np.lexsort((b.req_id, b.arrival))
+        sorted_cols.append((b.arrival[perm], b.true_service[perm],
+                            b.p_long[perm], b.klass[perm], b.tenant[perm],
+                            b.tenants))
+
+    arrival = np.empty((C * G, n))
+    service = np.empty((C * G, n))
+    key = np.empty((C * G, n))
+    mem = np.empty((C * G, n))
+    taus: List[Optional[float]] = []
+    modes = np.zeros(C * G, np.int8)
+    for c_i, ((_, tau), pol) in enumerate(zip(conditions, policies)):
+        for g, (arr, svc, pl, _, tc, tn) in enumerate(sorted_cols):
+            row = c_i * G + g
+            arrival[row] = arr
+            service[row] = svc
+            key[row] = pol.key_array(arr, pl, svc, tenant=tc, tenants=tn)
+            mem[row] = svc * mem_tokens_per_s
+            taus.append(pol.aging.effective_tau(tau))
+            modes[row] = pol.mode
+
+    from repro.core.sim_fast import _KLASS_CODE
+    out = {m: np.empty((C, len(lanes), len(budgets), G)) for m in METRICS}
+    for li, c in enumerate(lanes):
+        for bi, budget in enumerate(budgets):
+            start, finish, _, promotions, _ = simulate_grid_servers(
+                arrival, service, key, taus, c, slowdown=slowdown[:c],
+                mem=None if budget is None else mem,
+                mem_budget=budget, mode=modes)
+            for c_i in range(C):
+                for g in range(G):
+                    row = c_i * G + g
+                    klass = sorted_cols[g][3]
+                    vals = _percentile_metrics(
+                        start[row], finish[row], int(promotions[row]),
+                        arrival[row], klass == _KLASS_CODE["short"],
+                        klass == _KLASS_CODE["long"])
+                    for m, v in zip(METRICS, vals):
+                        out[m][c_i, li, bi, g] = v
+    return out
 
 
 def run_grid(axes: Dict[str, Sequence], fn: Callable) -> Dict[tuple, object]:

@@ -163,12 +163,15 @@ def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
 def decode_attention(q, cache_k, cache_v, t):
     """Single-position attention over a (ring-buffer) KV cache.
 
-    q: (B, 1, H, hd); cache_k/v: (B, S, KV, hd); t: scalar absolute fill
-    level — slots <= t are attended (the current token's KV has been written
-    at slot t % S).  While t < S the mask is the usual prefix mask; once the
-    ring wraps (t >= S) every slot holds one of the S most recent tokens and
-    ``arange(S) <= t`` is all-true, so the same predicate serves both
-    regimes — no separate "wrapped" code path.
+    q: (B, 1, H, hd); cache_k/v: (B, S, KV, hd); t: absolute fill level —
+    a scalar shared by the batch (the serial path) or a (B,) vector of
+    per-sequence levels (the micro-batching decode lanes, which prefill
+    at different prompt lengths).  Slots <= t are attended (the current
+    token's KV has been written at slot t % S).  While t < S the mask is
+    the usual prefix mask; once the ring wraps (t >= S) every slot holds
+    one of the S most recent tokens and ``arange(S) <= t`` is all-true,
+    so the same predicate serves both regimes — no separate "wrapped"
+    code path.
 
     With PERF["decode_cast_f32"]=False, the cache is consumed in its native
     dtype with f32 accumulation inside the einsum — the f32 cache copies
@@ -185,7 +188,8 @@ def decode_attention(q, cache_k, cache_v, t):
         k_in, v_in = cache_k, cache_v
     logits = jnp.einsum("bkgh,bskh->bkgs", qg, k_in,
                         preferred_element_type=jnp.float32) * hd ** -0.5
-    mask = jnp.arange(S)[None, None, None, :] <= t
+    t_b = t if jnp.ndim(t) == 0 else t[:, None, None, None]
+    mask = jnp.arange(S)[None, None, None, :] <= t_b
     logits = jnp.where(mask, logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", w.astype(v_in.dtype), v_in,
@@ -206,7 +210,11 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
     the new KV is written at slot ``t % S`` (t = absolute fill level, RoPE
     stays absolute) so generation past the cache capacity wraps onto the
     oldest slots instead of forcing a larger allocation; while t < S this
-    is exactly the old append-at-t behavior.
+    is exactly the old append-at-t behavior.  ``t`` is a scalar shared by
+    the batch, or a (B,) vector of per-sequence fill levels (decode
+    lanes): each sequence then gets its own RoPE position, ring slot and
+    attention window, so one natively batched step serves lanes that
+    prefilled at different prompt lengths.
     """
     B = x.shape[0]
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
@@ -220,13 +228,25 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
         if mode == "prefill":
             new_cache = {"k": k, "v": v, "t": jnp.asarray(S, jnp.int32)}
     else:  # decode
-        t = cache["t"]  # scalar int32: absolute fill level (write slot t % S)
+        t = cache["t"]  # absolute fill level(s); () shared or (B,) per-seq
         S = cache["k"].shape[1]
-        positions = jnp.full((1,), t, jnp.int32)
+        per_seq = jnp.ndim(t) != 0
+        positions = t[:, None] if per_seq else jnp.full((1,), t, jnp.int32)
         q, k, v = _project_qkv(cfg, p, h, positions)
         slot = jax.lax.rem(t, jnp.int32(S))
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        if per_seq:
+            # per-sequence ring write as a one-hot select: XLA CPU lowers
+            # batched scatters to a slow generic loop, but this select
+            # vectorizes (it streams the cache once, which decode does
+            # anyway for the attention reads)
+            hit = (jnp.arange(S)[None, :] == slot[:, None])[..., None, None]
+            ck = jnp.where(hit, k.astype(cache["k"].dtype)[:, :1], cache["k"])
+            cv = jnp.where(hit, v.astype(cache["v"].dtype)[:, :1], cache["v"])
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
         cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
         out = decode_attention(q, ck, cv, t)

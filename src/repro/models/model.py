@@ -191,6 +191,12 @@ class LM:
         inputs on architectures whose per-position state is causal-local
         (pure attention stacks); SSM/xLSTM recurrences would fold pad tokens
         into their state, so callers pass exact-length inputs there.
+
+        ``prompt_len`` may also be a (B,) vector — mixed-length prompts
+        sharing one padded batch (the micro-batching lane back-fill): each
+        row's logits come from its own last position and the caches carry
+        per-sequence fill levels (``t`` (repeats, B)), the layout the
+        per-lane decode path consumes.
         """
         cfg = self.cfg
         x = self._embed_in(params, batch)
@@ -200,9 +206,13 @@ class LM:
         if prompt_len is None:
             last = x[:, -1:, :]
         else:
-            idx = jnp.asarray(prompt_len, jnp.int32) - 1
-            last = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
-            caches = _set_fill(cfg, caches, jnp.asarray(prompt_len, jnp.int32))
+            pl = jnp.asarray(prompt_len, jnp.int32)
+            if pl.ndim == 0:
+                last = jax.lax.dynamic_slice_in_dim(x, pl - 1, 1, axis=1)
+            else:
+                last = jnp.take_along_axis(x, (pl - 1)[:, None, None],
+                                           axis=1)
+            caches = _set_fill(cfg, caches, pl)
         logits = self._head(params, last)[:, 0]
         if pad_to is not None:
             caches = _pad_kv(cfg, caches, pad_to)
@@ -311,12 +321,19 @@ class LM:
 
 
 def _set_fill(cfg, caches, t):
-    """Reset every attention cache's fill level to ``t`` (dynamic scalar)."""
+    """Reset every attention cache's fill level to ``t``: a dynamic scalar
+    (shared across the batch, the serial path) or a (B,) vector (per-
+    sequence levels — the cache ``t`` becomes (repeats, B), the layout
+    the per-lane decode path consumes)."""
     out = []
     for kind, c in zip(cfg.block_pattern, caches):
         if kind in (ATTN, ATTN_MOE):
             c = dict(c)
-            c["t"] = jnp.full_like(c["t"], t)
+            if jnp.ndim(t) == 0:
+                c["t"] = jnp.full_like(c["t"], t)
+            else:
+                c["t"] = jnp.broadcast_to(t[None, :],
+                                          c["t"].shape + t.shape)
         out.append(c)
     return tuple(out)
 

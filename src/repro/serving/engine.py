@@ -7,12 +7,19 @@ Two execution modes share one interface:
   with reduced configs on CPU; on TPU the same class serves full configs
   with the Pallas decode kernels swapped in via kernels/ops.py);
 * ``SimEngine`` — virtual-clock engine using a ServiceTimeModel (used by the
-  queueing benchmarks, where thousands of requests are served).
+  queueing benchmarks, where thousands of requests are served);
+* ``BatchedRealEngine`` — bounded-concurrency micro-batching over
+  ``RealEngine``'s model: ``n_lanes`` concurrent requests under a
+  KV-memory budget (serving/batching.py), lane-batched segment decode
+  (serving/generate.py ``LaneDecoder``), retire-and-back-fill at segment
+  boundaries.  Per-request greedy tokens stay bitwise-equal to serial
+  runs.
 
-Both are strictly serial: one request in flight per replica — the regime the
-paper targets (§2.3).  Disconnect semantics per §3.4: cancellation while
-queued removes the heap entry (lazy); cancellation mid-generation stops the
-fused loop at the next segment boundary (``request_cancel``), draining the
+The first two are strictly serial: one request in flight per replica — the
+regime the paper targets (§2.3).  Disconnect semantics per §3.4:
+cancellation while queued removes the heap entry (lazy); cancellation
+mid-generation stops the fused loop at the next segment boundary
+(``request_cancel``; per-lane eviction on the batched engine), draining the
 response to free the dispatch slot within ``segment_len`` tokens.
 
 ``RealEngine`` generation path (PR 3):
@@ -139,6 +146,56 @@ class RealEngine:
                                        jnp.asarray(plen, jnp.int32))
         return logits, caches, plen
 
+    def _run_prefill_group(self, ids_list, pad_rows: Optional[int] = None):
+        """One padded prefill for prompts sharing a bucket (lane
+        admission batches).  Returns (last_logits (k, V), caches with
+        per-row fill levels, plens).  Rows are padded exactly as their
+        solo bucketed prefill would be, so per-row results match the
+        serial path; callers group by bucket before calling.
+
+        The batch axis is padded to ``pad_rows`` (dummy single-token
+        rows, sliced off before returning): back-fill group sizes vary
+        per drain, and compiling one prefill program per exact (k,
+        bucket) pair would pay a jit compile mid-drain for every new
+        combination.  The batched engine pads every group to its lane
+        count — ONE program per bucket, like the serial engine — trading
+        <= lanes x of a ~ms prefill for never compiling (~0.7 s) on the
+        serving path.  Default (``pad_rows=None``): the next power of
+        two."""
+        import jax
+        import jax.numpy as jnp
+        from repro.serving.generate import bucket_for
+        ids_list = [np.asarray(i, np.int32).reshape(-1) for i in ids_list]
+        plens = [len(i) for i in ids_list]
+        if min(plens) < 1:
+            raise ValueError("empty prompt in prefill group")
+        if self._bucketing:
+            buckets = {bucket_for(p, self.buckets) for p in plens}
+        else:
+            buckets = set(plens)           # exact lengths (seed behavior)
+        if len(buckets) != 1:
+            raise ValueError(f"prefill group spans buckets {buckets}")
+        bucket = buckets.pop()
+        k = len(ids_list)
+        if pad_rows is not None:
+            if k > pad_rows:
+                raise ValueError(f"group of {k} exceeds pad_rows {pad_rows}")
+            kp = pad_rows
+        else:
+            kp = 1
+            while kp < k:
+                kp *= 2
+        toks = np.zeros((kp, bucket), np.int32)
+        for r, ids in enumerate(ids_list):
+            toks[r, :len(ids)] = ids
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(toks),
+            jnp.asarray(plens + [1] * (kp - k), jnp.int32))
+        if kp != k:
+            logits = logits[:k]
+            caches = jax.tree.map(lambda x: x[:, :k], caches)
+        return logits, caches, plens
+
     # ------------------------------------------------------------- generate
     def generate(self, prompt_ids: np.ndarray, max_new_tokens: int = 32,
                  eos_id: Optional[int] = None, cancel_cb=None,
@@ -167,6 +224,19 @@ class RealEngine:
                 "service_s": time.monotonic() - t0,
                 "cancelled": out["cancelled"], "segments": out["segments"]}
 
+    def generate_batch(self, prompts, max_new_tokens=32,
+                       eos_id: Optional[int] = None) -> list:
+        """Serial fallback so both engine classes share one batch API."""
+        maxes = self._per_request_budgets(prompts, max_new_tokens)
+        return [self.generate(ids, max_new_tokens=m, eos_id=eos_id)
+                for ids, m in zip(prompts, maxes)]
+
+    @staticmethod
+    def _per_request_budgets(prompts, max_new_tokens) -> list:
+        if np.isscalar(max_new_tokens):
+            return [int(max_new_tokens)] * len(prompts)
+        return [int(m) for m in max_new_tokens]
+
     def generate_reference(self, prompt_ids: np.ndarray,
                            max_new_tokens: int = 32,
                            eos_id: Optional[int] = None) -> dict:
@@ -194,3 +264,223 @@ class RealEngine:
         self.served += 1
         return {"tokens": out, "ttft_s": ttft,
                 "service_s": time.monotonic() - t0}
+
+
+class BatchedRealEngine(RealEngine):
+    """Bounded-concurrency real decode: ``n_lanes`` concurrent requests
+    under a KV-memory budget (serving/batching.py).
+
+    Each lane is an independent ring-buffer cache stacked on a leading
+    lane axis; one fused segment steps every live lane together
+    (``serving.generate.LaneDecoder``), and segment boundaries are the
+    join points where finished lanes retire and the manager back-fills
+    from the caller's queue by re-prefilling into the vacant cache slot —
+    continuous micro-batching with static cache shapes (no recompiles as
+    the batch composition changes).
+
+    Equivalence contract: under greedy decode, each request's token
+    sequence is bitwise-equal to an independent ``generate_reference``
+    run — including requests admitted mid-stream by back-fill
+    (tests/test_batching.py).
+
+    Admission is memory-aware and strictly policy-ordered: the next
+    request (in the order the ``source`` yields them) is admitted only
+    when its worst-case KV footprint — ``min(max_len, prompt + max_new)``
+    ring slots at ``kv_bytes_per_token(cfg)`` — fits the budget; a head
+    that does not fit blocks until lanes retire (no smaller request may
+    bypass it).  ``budget_bytes=None`` sizes the budget to exactly
+    ``n_lanes`` full rings, i.e. lane-count-limited.
+    """
+
+    def __init__(self, cfg, params=None, replica_id: int = 0, seed: int = 0,
+                 max_len: int = 256, segment_len: int = 16,
+                 n_lanes: int = 4, budget_bytes: Optional[int] = None):
+        from repro.serving.batching import kv_bytes_per_token
+        from repro.serving.generate import LaneDecoder
+        super().__init__(cfg, params=params, replica_id=replica_id,
+                         seed=seed, max_len=max_len, segment_len=segment_len)
+        self.n_lanes = int(n_lanes)
+        self._bytes_per_token = kv_bytes_per_token(cfg)
+        self.budget_bytes = int(budget_bytes) if budget_bytes is not None \
+            else self.n_lanes * max_len * max(1, self._bytes_per_token)
+        self._lane_decoder = LaneDecoder(self.lm, max_len, self.n_lanes,
+                                         segment_len)
+        self.lane_manager = None       # the most recent run's manager/stats
+
+    # ----------------------------------------------------------- batch API
+    def generate_batch(self, prompts, max_new_tokens=32,
+                       eos_id: Optional[int] = None) -> list:
+        """Decode a request list through the lanes; results in input order.
+
+        ``max_new_tokens`` is a scalar or per-request sequence.  Returns
+        one dict per request: {"tokens", "ttft_s", "service_s",
+        "cancelled", "lane", "evictions"}.
+        """
+        maxes = self._per_request_budgets(prompts, max_new_tokens)
+        n = len(prompts)
+        results: list = [None] * n
+        cursor = {"i": 0}
+
+        def source(k: int) -> list:
+            out = []
+            while k > 0 and cursor["i"] < n:
+                i = cursor["i"]
+                cursor["i"] += 1
+                out.append({"req_id": i, "ids": prompts[i],
+                            "max_new": maxes[i], "meta": {"i": i}})
+                k -= 1
+            return out
+
+        def on_finish(state, res):
+            results[state.meta["i"]] = res
+
+        self.run_lanes(source, on_finish, eos_id=eos_id)
+        return results
+
+    def run_lanes(self, source, on_finish, *, eos_id: Optional[int] = None,
+                  cancel_check=None, now_fn=None) -> None:
+        """Drive the lanes until ``source`` and all lanes drain.
+
+        ``source(k)`` returns up to ``k`` work items (dicts with
+        ``req_id``/``ids``/``max_new`` and optional ``tenant``/``meta``)
+        in dispatch order — the server passes a closure over its policy
+        queue so aging promotions are observed at every back-fill.
+        ``on_finish(LaneState, result)`` fires as each request retires.
+        ``cancel_check(LaneState) -> bool`` is polled at segment
+        boundaries; a cancelled lane is evicted and reported with
+        ``cancelled=True`` (§3.4 drain semantics, per lane).
+        ``now_fn`` supplies admission/finish timestamps (defaults to
+        wall clock; the server injects its virtual clock).
+        """
+        import jax.numpy as jnp
+        from repro.serving.batching import KVBudget, LaneManager
+        now = now_fn if now_fn is not None else time.monotonic
+        mgr = LaneManager(self.n_lanes, KVBudget(self.budget_bytes),
+                          self._bytes_per_token, self.max_len)
+        self.lane_manager = mgr
+        dec = self._lane_decoder
+        C = self.n_lanes
+        caches = dec.init_lanes()
+        # host-authoritative lane arrays; mirrored to device lazily (the
+        # device copies persist across segments and are rebuilt only when
+        # admission/eviction changes the lane composition — "dirty")
+        tok = np.zeros(C, np.int32)
+        produced = np.zeros(C, np.int32)
+        plen = np.ones(C, np.int32)
+        max_new = np.zeros(C, np.int32)
+        active = np.zeros(C, bool)
+        eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
+        dev = {"d": None}               # (tok, produced, plen, max_new, act)
+        pending: list = []              # popped but budget-blocked items
+        drained = {"source": False}
+
+        def fill(backfill: bool = False) -> None:
+            nonlocal caches
+            from repro.serving.generate import bucket_for
+            free = mgr.free_lanes()
+            # phase 1: claim admissible (item, lane) pairs under the
+            # budget, in strict source order (a blocked head blocks all)
+            claims = []
+            while free:
+                want = len(free) - len(pending)
+                if want > 0 and not drained["source"]:
+                    got = source(want)
+                    if len(got) < want:
+                        drained["source"] = True
+                    pending.extend(got)
+                if not pending:
+                    break
+                item = pending[0]
+                ids = np.asarray(item["ids"], np.int64).reshape(-1)
+                if not mgr.can_admit(len(ids), item["max_new"]):
+                    # strict policy order: the head blocks, nothing bypasses
+                    mgr.stats["blocked_on_budget"] += 1
+                    break
+                pending.pop(0)
+                lane = free.pop(0)
+                t_admit = now()
+                st = mgr.admit(lane, req_id=item["req_id"],
+                               prompt_len=len(ids),
+                               max_new=item["max_new"],
+                               tenant=item.get("tenant", "default"),
+                               admit_t=t_admit, meta=item.get("meta"),
+                               backfill=backfill)
+                claims.append((st, lane, ids, item["max_new"]))
+            if not claims:
+                return
+            # phase 2: prefill per bucket group (rows pad exactly as their
+            # solo prefill would, so per-lane results match the serial
+            # path bitwise) — one jit call + one lane insert per group
+            def bucket_of(n):
+                return bucket_for(n, self.buckets) if self._bucketing else n
+            groups: dict = {}
+            for claim in claims:
+                groups.setdefault(bucket_of(len(claim[2])), []).append(claim)
+            for group in groups.values():
+                logits, pcache, plens = self._run_prefill_group(
+                    [ids for _, _, ids, _ in group], pad_rows=self.n_lanes)
+                first = np.argmax(np.asarray(logits), axis=-1)
+                caches = dec.insert_lanes(
+                    caches, [lane for _, lane, _, _ in group], pcache)
+                for r, (st, lane, ids, mx) in enumerate(group):
+                    st.prompt_len = plens[r]
+                    st.ttft_s = now() - st.admit_t
+                    st.tokens = [int(first[r])]
+                    tok[lane] = int(first[r])
+                    plen[lane] = plens[r]
+                    produced[lane] = 1
+                    max_new[lane] = mx
+                    active[lane] = True
+            dev["d"] = None             # lane composition changed
+
+        def finish(state, cancelled: bool) -> None:
+            t_fin = now()
+            self.served += not cancelled
+            on_finish(state, {
+                "tokens": list(state.tokens), "cancelled": cancelled,
+                "ttft_s": state.ttft_s, "admit_t": state.admit_t,
+                "finish_t": t_fin, "service_s": t_fin - state.admit_t,
+                "lane": state.lane, "evictions": state.evictions})
+
+        fill()
+        while active.any():
+            if cancel_check is not None:
+                evicted = False
+                for lane in mgr.busy_lanes():
+                    if cancel_check(mgr.lanes[lane]):
+                        st = mgr.evict(lane)
+                        active[lane] = False
+                        evicted = True
+                        finish(st, cancelled=True)
+                if evicted:
+                    if dev["d"] is not None:
+                        tok = np.array(dev["d"][0])   # refresh host mirror
+                    dev["d"] = None
+                    fill(backfill=True)
+                    if not active.any():
+                        break
+            if dev["d"] is None:
+                dev["d"] = (jnp.asarray(tok), jnp.asarray(produced),
+                            jnp.asarray(plen), jnp.asarray(max_new),
+                            jnp.asarray(active))
+            tok_d, produced_d, plen_d, max_new_d, active_d = dev["d"]
+            new_toks, tok_d, produced_d, caches, stopped, produced = \
+                dec.run_segment(self.params, caches, tok_d, produced_d,
+                                plen_d, max_new_d, eos, active_d,
+                                produced_before=produced)
+            dev["d"] = (tok_d, produced_d, plen_d, max_new_d, active_d)
+            retired = False
+            for lane in mgr.busy_lanes():
+                st = mgr.lanes[lane]
+                st.tokens.extend(new_toks[lane])
+                st.produced = int(produced[lane])
+                if stopped[lane]:
+                    st = mgr.retire(lane)
+                    active[lane] = False
+                    retired = True
+                    finish(st, cancelled=False)
+            if retired:
+                # host tok mirror must be current before fill mutates it
+                tok = np.array(tok_d)
+                dev["d"] = None
+                fill(backfill=True)

@@ -19,7 +19,14 @@ Two backends share the queueing layer:
 * passing ``engines=[RealEngine(...), ...]`` serves each dispatched request
   with an actual fused on-device decode (serving/engine.py) and measured
   wall-clock service times — the end-to-end path the serve benchmark
-  exercises (predictor -> SJF queue -> real decode).
+  exercises (predictor -> SJF queue -> real decode);
+* passing ``engines=[BatchedRealEngine(...)]`` drains the queue through
+  bounded-concurrency decode lanes under a KV-memory budget
+  (``_drain_batched``): back-fill pops via ``SJFQueue.pop_many`` so
+  aging promotions are observed between pops, admission blocks on the
+  budget in strict policy order, and client disconnects evict their
+  lane at the next segment boundary.  Preemptive policies use the
+  serial drain (lane eviction by key is future work).
 
 Admission is batched: ``submit_many`` runs feature extraction + GBDT
 prediction once across an arrival burst (the PR 1 ``proba_batch`` fast
@@ -43,7 +50,7 @@ from repro.core.policy import get_policy
 from repro.core.predictor import Predictor
 from repro.core.router import PredictiveRouter
 from repro.core.scheduler import Request, SJFQueue
-from repro.serving.engine import RealEngine, SimEngine
+from repro.serving.engine import BatchedRealEngine, RealEngine, SimEngine
 from repro.serving.openai_api import CompletionRequest, CompletionResponse
 from repro.serving.service_time import ServiceTimeModel, sample_output_tokens
 from repro.data.tokenizer import HashTokenizer, approx_token_len
@@ -141,6 +148,14 @@ class ClairvoyantServer:
             if rep.queue.cancel(request_id):
                 self._inflight.pop(request_id, None)
                 return True
+        for eng in self.engines:
+            # mid-flight on a batched engine: flag the lane; the drain
+            # loop evicts it at the next segment boundary
+            if isinstance(eng, BatchedRealEngine) \
+                    and eng.lane_manager is not None \
+                    and eng.lane_manager.lane_of(request_id) is not None:
+                self._disconnected.add(request_id)
+                return True
         for replica_id, rid in self._decoding.items():
             if rid == request_id:
                 eng = self.engines[replica_id]
@@ -161,7 +176,10 @@ class ClairvoyantServer:
         and feed the measured wall-clock service time into the same clock.
         """
         for rep, eng in zip(self.router.replicas, self.engines):
-            if isinstance(eng, RealEngine):
+            if isinstance(eng, BatchedRealEngine) \
+                    and not self.policy_obj.preemptive:
+                self._drain_batched(rep, eng, max_new_tokens)
+            elif isinstance(eng, RealEngine):
                 self._drain_real(rep, eng, max_new_tokens)
             else:
                 self._drain_sim(rep, eng)
@@ -263,14 +281,9 @@ class ClairvoyantServer:
             if req is None:
                 break
             t = max(t, req.arrival)
-            n_total = max(1, min(max_new_tokens, req.meta["output_tokens"]))
-            resume = req.meta.get("resume_tokens", [])
+            ids, n_total, resume = self._prepare_ids(req, eng,
+                                                     max_new_tokens)
             n_new = max(1, n_total - len(resume))
-            prompt_ids = self._tokenizer.encode(req.prompt)[: max(
-                1, eng.max_len - n_total)]
-            ids = np.concatenate([np.asarray(prompt_ids, np.int64),
-                                  np.asarray(resume, np.int64)]) \
-                if resume else prompt_ids
             used = req.meta.get("used_s", 0.0)
             key0 = req.meta.get("policy_key0", 0.0)
             level = req.meta.get("mlfq_level", 0)
@@ -339,6 +352,87 @@ class ClairvoyantServer:
                 ttft_s=req.start - req.arrival + req.meta["ttft_s"],
                 promoted=req.promoted, replica=rep.replica_id,
                 p_long=req.p_long, klass=req.klass))
+
+    def _drain_batched(self, rep, eng: BatchedRealEngine,
+                       max_new_tokens: int) -> None:
+        """Micro-batched wall-clock drain: up to ``eng.n_lanes`` requests
+        decode concurrently under the engine's KV budget.
+
+        The queue stays the single source of dispatch order: the engine's
+        lane back-fill pulls through :meth:`SJFQueue.pop_many`, so the
+        starvation guard is re-evaluated between every pop (a promoted
+        waiter takes the next vacant lane even when its key sorts last).
+        Admission is memory-aware — a head whose worst-case KV footprint
+        does not fit the budget blocks back-fill until lanes retire.
+        Client disconnects evict the lane at the next segment boundary
+        (per-lane §3.4 semantics).  Preemptive policies use the serial
+        ``_drain_real`` path (lane eviction by key is future work); the
+        server routes them there before calling this.
+        """
+        import time as _time
+        if self._tokenizer is None:
+            self._tokenizer = HashTokenizer(eng.cfg.vocab_size)
+        t_base = eng.busy_until
+        wall0 = _time.monotonic()
+
+        def now() -> float:
+            return t_base + (_time.monotonic() - wall0)
+
+        def source(k: int):
+            items = []
+            for req in rep.queue.pop_many(k, now=now()):
+                ids, n_total, resume = self._prepare_ids(req, eng,
+                                                         max_new_tokens)
+                items.append({"req_id": req.req_id, "ids": ids,
+                              "max_new": max(1, n_total - len(resume)),
+                              "tenant": req.tenant,
+                              "meta": {"req": req, "resume": list(resume)}})
+            return items
+
+        def cancel_check(state) -> bool:
+            return state.req_id in self._disconnected
+
+        def on_finish(state, out):
+            req = state.meta["req"]
+            if out["cancelled"]:
+                self._disconnected.discard(req.req_id)
+                self._inflight.pop(req.req_id, None)
+                return
+            tokens = state.meta["resume"] + out["tokens"]
+            req.start = max(out["admit_t"], req.arrival)
+            req.finish = max(out["finish_t"], req.start)
+            req.meta.setdefault("ttft_s", out["ttft_s"])
+            self.router.on_dispatch(rep.replica_id, req, req.finish,
+                                    service_estimate=out["service_s"])
+            self.responses.append(CompletionResponse(
+                request_id=req.req_id, text="",
+                tokens_generated=len(tokens),
+                queue_wait_s=req.start - req.arrival,
+                service_s=req.finish - req.start,
+                ttft_s=req.start - req.arrival + req.meta["ttft_s"],
+                promoted=req.promoted, replica=rep.replica_id,
+                p_long=req.p_long, klass=req.klass))
+
+        eng.run_lanes(source, on_finish, cancel_check=cancel_check,
+                      now_fn=now)
+        eng.busy_until = now()
+
+    def _prepare_ids(self, req, eng, max_new_tokens: int):
+        """Token budget + input ids for one dispatch, shared by the serial
+        and batched drains (their truncation must match exactly — the
+        batched engine's bitwise-equivalence contract compares against
+        serial runs of the same inputs).  Returns (ids, n_total, resume):
+        the prompt is clamped so prompt + n_total fits ``eng.max_len``,
+        and a preempted request's generated prefix is re-prefilled after
+        the prompt (the PR-4 resume rule)."""
+        n_total = max(1, min(max_new_tokens, req.meta["output_tokens"]))
+        resume = req.meta.get("resume_tokens", [])
+        prompt_ids = self._tokenizer.encode(req.prompt)[: max(
+            1, eng.max_len - n_total)]
+        ids = np.concatenate([np.asarray(prompt_ids, np.int64),
+                              np.asarray(resume, np.int64)]) \
+            if resume else prompt_ids
+        return ids, n_total, resume
 
     def _pop_arrival_aware(self, rep, t: float):
         """Dispatch decision for preemptive real drains: only requests that

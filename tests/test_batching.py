@@ -1,0 +1,411 @@
+"""KV-budgeted continuous micro-batching (PR 5 tentpole): lane-batched
+real decode equivalence, memory-aware admission, the c-server DES and its
+bitwise c=1 contracts, and the batch-degree sweep grid."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sim_fast import (RequestBatch, simulate_batch,
+                                 simulate_batch_servers)
+from repro.core.simulation import ServiceDist, simulate_servers
+from repro.serving.batching import (KVBudget, LaneManager,
+                                    kv_bytes_per_token)
+from repro.serving.engine import BatchedRealEngine
+
+SHORT = ServiceDist(mean=3.5, std=0.8)
+LONG = ServiceDist(mean=8.9, std=2.0)
+
+
+# ------------------------------------------------------------- KVBudget
+def test_kv_bytes_per_token_counts_attention_layers():
+    cfg = get_config("smollm-360m").reduced()    # 1 attn layer, f32
+    assert kv_bytes_per_token(cfg) == \
+        2 * cfg.num_kv_heads * cfg.head_dim * 4
+    big = get_config("smollm-360m")              # 32 layers, bf16
+    assert kv_bytes_per_token(big) == \
+        2 * 32 * big.num_kv_heads * big.head_dim * 2
+
+
+def test_kv_budget_reserve_release_peak():
+    b = KVBudget(100)
+    b.reserve(60)
+    assert not b.fits(50) and b.fits(40)
+    with pytest.raises(ValueError):
+        b.reserve(50)
+    b.reserve(40)
+    b.release(60)
+    assert b.available_bytes == 60 and b.peak_bytes == 100
+    with pytest.raises(ValueError):
+        KVBudget(0)
+
+
+def test_lane_manager_budget_blocks_admission_in_order():
+    """The head that does not fit blocks; nothing bypasses it."""
+    mgr = LaneManager(4, KVBudget(100), bytes_per_token=1, capacity=64)
+    mgr.admit(0, req_id=1, prompt_len=30, max_new=30)      # 60 bytes
+    assert mgr.footprint(30, 30) == 60
+    assert mgr.footprint(60, 30) == 64                     # capacity-capped
+    assert not mgr.can_admit(30, 30)                       # 60 > 40 left
+    assert mgr.can_admit(10, 10)
+    st = mgr.retire(0)
+    assert st.req_id == 1 and mgr.budget.used_bytes == 0
+    assert mgr.can_admit(200, 200)                         # idle override
+
+
+def test_lane_manager_evict_tracks_resume_state():
+    mgr = LaneManager(2, KVBudget(1000), bytes_per_token=1, capacity=64)
+    st = mgr.admit(1, req_id=7, prompt_len=5, max_new=10, tenant="acme")
+    st.tokens = [3, 1, 4]
+    out = mgr.evict(1)
+    assert out.evictions == 1 and out.tokens == [3, 1, 4]
+    assert out.tenant == "acme"
+    assert mgr.stats["evictions"] == 1 and mgr.stats["retired"] == 0
+    assert mgr.free_lanes() == [0, 1]
+
+
+# ------------------------------------------------- BatchedRealEngine
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("smollm-360m").reduced()
+    return BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=3,
+                             seed=0)
+
+
+def _prompts(engine, sizes, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, engine.cfg.vocab_size, n) for n in sizes]
+
+
+def test_lane_decode_bitwise_equals_reference_with_backfill(engine):
+    """7 requests through 3 lanes: every token sequence must equal an
+    independent seed-loop run — including the 4 admitted mid-stream when
+    earlier lanes retire (the back-fill join points)."""
+    prompts = _prompts(engine, (5, 11, 23, 7, 3, 15, 9))
+    maxes = [10, 25, 6, 18, 4, 12, 9]
+    outs = engine.generate_batch(prompts, max_new_tokens=maxes)
+    for out, ids, m in zip(outs, prompts, maxes):
+        ref = engine.generate_reference(ids, max_new_tokens=m)
+        assert out["tokens"] == ref["tokens"]
+        assert not out["cancelled"]
+    assert engine.lane_manager.stats["backfills"] == 4
+    assert engine.lane_manager.stats["retired"] == 7
+
+
+def test_lane_decode_eos_early_exit(engine):
+    prompts = _prompts(engine, (10, 6, 14), seed=2)
+    ref = engine.generate_reference(prompts[0], max_new_tokens=24)
+    eos = ref["tokens"][5]
+    outs = engine.generate_batch(prompts, max_new_tokens=24, eos_id=eos)
+    for out, ids in zip(outs, prompts):
+        assert out["tokens"] == engine.generate_reference(
+            ids, max_new_tokens=24, eos_id=eos)["tokens"]
+
+
+def test_lane_decode_max_len_truncation(engine):
+    """A lane near the ring budget stops exactly like the oracle while
+    the other lanes keep decoding."""
+    prompts = _prompts(engine, (engine.max_len - 4, 6), seed=3)
+    outs = engine.generate_batch(prompts, max_new_tokens=16)
+    for out, ids in zip(outs, prompts):
+        assert out["tokens"] == engine.generate_reference(
+            ids, max_new_tokens=16)["tokens"]
+    assert len(outs[0]["tokens"]) == 4
+
+
+def test_tight_budget_serializes_but_stays_equivalent(engine):
+    """A budget of ~1.2 lanes forces admission to block on memory; token
+    sequences must still match the serial oracle exactly."""
+    bpt = kv_bytes_per_token(engine.cfg)
+    tight = BatchedRealEngine(engine.cfg, params=engine.params,
+                              max_len=64, segment_len=4, n_lanes=3,
+                              budget_bytes=int(64 * bpt * 1.2))
+    prompts = _prompts(tight, (40, 40, 40, 8), seed=4)
+    outs = tight.generate_batch(prompts, max_new_tokens=20)
+    for out, ids in zip(outs, prompts):
+        assert out["tokens"] == tight.generate_reference(
+            ids, max_new_tokens=20)["tokens"]
+    assert tight.lane_manager.stats["blocked_on_budget"] > 0
+    # the 40-token prompts (footprint 60/64 of budget) never overlapped
+    peak = tight.lane_manager.budget.peak_bytes
+    assert peak <= tight.budget_bytes
+
+
+def test_lane_cancel_evicts_at_segment_boundary(engine):
+    """A per-lane cancel observed between segments evicts only that lane;
+    the survivors decode to completion unchanged."""
+    prompts = _prompts(engine, (9, 13, 5), seed=5)
+    seen = {"segments": 0}
+
+    def cancel_check(state):
+        return state.meta.get("i") == 1 and seen["segments"] >= 2
+
+    results = {}
+
+    def on_finish(state, out):
+        results[state.meta["i"]] = out
+
+    n = len(prompts)
+    cursor = {"i": 0}
+
+    def source(k):
+        out = []
+        while k > 0 and cursor["i"] < n:
+            i = cursor["i"]
+            cursor["i"] += 1
+            out.append({"req_id": i, "ids": prompts[i], "max_new": 30,
+                        "meta": {"i": i}})
+            k -= 1
+        return out
+
+    orig = engine._lane_decoder.run_segment
+
+    def counting(*a, **kw):
+        seen["segments"] += 1
+        return orig(*a, **kw)
+
+    engine._lane_decoder.run_segment = counting
+    try:
+        engine.run_lanes(source, on_finish, cancel_check=cancel_check)
+    finally:
+        engine._lane_decoder.run_segment = orig
+    assert results[1]["cancelled"] and results[1]["evictions"] == 1
+    # cancelled at a boundary: a prefix of the full sequence
+    full = engine.generate_reference(prompts[1], max_new_tokens=30)["tokens"]
+    assert results[1]["tokens"] == full[: len(results[1]["tokens"])]
+    assert 1 <= len(results[1]["tokens"]) < len(full)
+    for i in (0, 2):
+        assert not results[i]["cancelled"]
+        assert results[i]["tokens"] == engine.generate_reference(
+            prompts[i], max_new_tokens=30)["tokens"]
+
+
+# ------------------------------------------------- server batched drain
+def test_server_drain_batched_completes_all():
+    """ClairvoyantServer + BatchedRealEngine: the whole backlog drains
+    through the lanes, every response carries measured wall-clock times,
+    and lane back-fill pulled from the policy queue (pop_many)."""
+    from repro.serving.openai_api import CompletionRequest
+    from repro.serving.server import ClairvoyantServer
+
+    cfg = get_config("smollm-360m").reduced()
+    eng = BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=2,
+                            seed=0)
+    server = ClairvoyantServer(policy="sjf_oracle", tau=None, engines=[eng])
+    words = ["write a short note about topic %d" % i for i in range(6)]
+    server.submit_many(
+        [CompletionRequest(prompt=w) for w in words],
+        true_output_tokens=[6, 20, 9, 14, 5, 11],
+        klasses=["short"] * 6)
+    resp = server.drain(max_new_tokens=20)
+    assert len(resp) == 6
+    assert sorted(r.request_id for r in resp) == \
+        sorted(req.request_id for req in server._inflight.values())
+    for r in resp:
+        assert r.tokens_generated >= 1
+        assert r.service_s > 0 and r.queue_wait_s >= 0
+    assert eng.lane_manager.stats["retired"] == 6
+    assert eng.lane_manager.stats["backfills"] == 4    # 6 reqs, 2 lanes
+    assert eng.busy_until > 0
+
+
+def test_server_drain_batched_oracle_order_under_lanes():
+    """sjf_oracle with 2 lanes: the two shortest requests are admitted
+    into the initial lanes (policy order drives lane admission)."""
+    from repro.serving.openai_api import CompletionRequest
+    from repro.serving.server import ClairvoyantServer
+
+    cfg = get_config("smollm-360m").reduced()
+    eng = BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=2,
+                            seed=0)
+    server = ClairvoyantServer(policy="sjf_oracle", tau=None, engines=[eng])
+    toks = [40, 4, 30, 6]                   # two longs first (HoL setup)
+    ids = server.submit_many(
+        [CompletionRequest(prompt="p %d" % i) for i in range(4)],
+        true_output_tokens=toks,
+        klasses=["long", "short", "long", "short"])
+    assert ids == [0, 0, 0, 0]
+    resp = server.drain(max_new_tokens=40)
+    order = [r.klass for r in sorted(resp, key=lambda r: r.queue_wait_s)]
+    assert order[:2] == ["short", "short"]
+
+
+# ------------------------------------------------------- c-server DES
+def test_cserver_c1_bitwise_equals_serial_engines():
+    """c=1 with unit slowdown: key-policy traces == the non-preemptive
+    engine (and therefore simulate_reference); srpt == the preemptive
+    engine.  Bitwise, across seeds and taus."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        batch = RequestBatch.poisson(rng, 150, 0.12, SHORT, LONG)
+        for pol in ("fcfs", "sjf", "sjf_oracle", "sjf_quantile", "srpt"):
+            for tau in (None, 10.5):
+                a = simulate_batch(batch, policy=pol, tau=tau)
+                b = simulate_batch_servers(batch, policy=pol, tau=tau,
+                                           n_servers=1)
+                assert np.array_equal(a.start, b.start), (seed, pol, tau)
+                assert np.array_equal(a.finish, b.finish), (seed, pol, tau)
+                assert np.array_equal(a.promoted, b.promoted)
+                assert a.promotions == b.promotions
+                assert a.preemptions == b.preemptions
+
+
+def test_cserver_rejects_quantum_policies():
+    batch = RequestBatch.from_arrays([0.0], [1.0])
+    with pytest.raises(ValueError, match="srpt"):
+        simulate_batch_servers(batch, policy="mlfq", n_servers=2)
+
+
+def test_cserver_full_concurrency_is_delay_free():
+    """c >= n with ideal scaling: every request starts at its arrival."""
+    rng = np.random.default_rng(7)
+    batch = RequestBatch.poisson(rng, 60, 0.3, SHORT, LONG)
+    r = simulate_batch_servers(batch, policy="fcfs", n_servers=60)
+    assert np.array_equal(r.start, batch.arrival)
+    np.testing.assert_allclose(r.finish,
+                               batch.arrival + batch.true_service)
+
+
+def test_cserver_slowdown_stretches_concurrent_service():
+    """Two unit jobs at t=0 on 2 lanes with s(2)=2: each progresses at
+    half rate while both run -> both finish at 2.0 (processor sharing
+    arithmetic); with s(2)=1 they finish at 1.0."""
+    batch = RequestBatch.from_arrays([0.0, 0.0], [1.0, 1.0])
+    slow = simulate_batch_servers(batch, policy="fcfs", n_servers=2,
+                                  slowdown=(1.0, 2.0))
+    np.testing.assert_allclose(slow.finish, [2.0, 2.0])
+    ideal = simulate_batch_servers(batch, policy="fcfs", n_servers=2,
+                                   slowdown=(1.0, 1.0))
+    np.testing.assert_allclose(ideal.finish, [1.0, 1.0])
+
+
+def test_cserver_rate_rescales_when_a_lane_retires():
+    """Jobs (1.0, 2.0) at t=0, c=2, s=(1, 2): both run at rate 1/2;
+    job A done at t=2 (1.0 work), job B then runs alone at full rate,
+    finishing its remaining 1.0 at t=3."""
+    batch = RequestBatch.from_arrays([0.0, 0.0], [1.0, 2.0])
+    r = simulate_batch_servers(batch, policy="fcfs", n_servers=2,
+                               slowdown=(1.0, 2.0))
+    np.testing.assert_allclose(r.finish, [2.0, 3.0])
+
+
+def test_cserver_memory_budget_serializes():
+    """Per-request demand == budget: lanes exist but memory admits one at
+    a time -> the trace equals the serial engine's."""
+    rng = np.random.default_rng(9)
+    batch = RequestBatch.poisson(rng, 100, 0.12, SHORT, LONG)
+    a = simulate_batch(batch, policy="sjf", tau=None)
+    b = simulate_batch_servers(batch, policy="sjf", n_servers=4,
+                               mem_tokens=np.full(100, 10.0),
+                               mem_budget=10.0)
+    assert np.array_equal(a.start, b.start)
+    assert np.array_equal(a.finish, b.finish)
+
+
+def test_cserver_memory_budget_bounds_concurrency():
+    """Budget of 2 units with unit demands behaves exactly like c=2."""
+    rng = np.random.default_rng(10)
+    batch = RequestBatch.poisson(rng, 80, 0.25, SHORT, LONG)
+    by_lanes = simulate_batch_servers(batch, policy="sjf", n_servers=2)
+    by_mem = simulate_batch_servers(batch, policy="sjf", n_servers=8,
+                                    mem_tokens=np.ones(80),
+                                    mem_budget=2.0)
+    assert np.array_equal(by_lanes.start, by_mem.start)
+    assert np.array_equal(by_lanes.finish, by_mem.finish)
+
+
+def test_cserver_batching_recovers_sojourn_on_bursts():
+    """More lanes -> shorter mean sojourn on a burst, even under a
+    non-trivial slowdown (aggregate throughput still grows)."""
+    rng = np.random.default_rng(11)
+    batch = RequestBatch.burst(rng, 20, 20, SHORT, LONG)
+    s = (1.0, 1.2, 1.4, 1.6)
+    means = [simulate_batch_servers(batch, policy="sjf", n_servers=c,
+                                    slowdown=s[:c]).mean()
+             for c in (1, 2, 4)]
+    assert means[0] > means[1] > means[2]
+
+
+def test_cserver_srpt_preempts_across_lanes():
+    """c=2 srpt: a short arriving while two longs run evicts the worse
+    lane and finishes first."""
+    batch = RequestBatch.from_arrays(
+        [0.0, 0.0, 1.0], [10.0, 12.0, 1.0], p_long=[1.0, 1.0, 0.0])
+    r = simulate_batch_servers(batch, policy="srpt", n_servers=2)
+    assert r.preemptions == 1
+    assert r.start[2] == 1.0                  # dispatched on arrival
+    assert r.finish[2] == 2.0
+    assert r.finish[2] < r.finish[0] < r.finish[1]
+
+
+def test_simulate_servers_front_end():
+    """The Request-object front end writes back start/finish and matches
+    simulate() at c=1."""
+    from repro.core.simulation import poisson_workload, simulate
+    rng = np.random.default_rng(3)
+    es = 0.5 * SHORT.mean + 0.5 * LONG.mean
+    reqs = poisson_workload(rng, 300, 0.74 / es, SHORT, LONG)
+    a = simulate(list(reqs), policy="sjf", tau=10.5)
+    starts = {r.req_id: r.start for r in a.requests}
+    b = simulate_servers(list(reqs), policy="sjf", tau=10.5, n_servers=1)
+    assert {r.req_id: r.start for r in b.requests} == starts
+    b_mean = b.mean()        # snapshot: the engines mutate the Requests
+    c4 = simulate_servers(list(reqs), policy="sjf", tau=10.5, n_servers=4)
+    assert c4.mean() < b_mean
+
+
+# ------------------------------------------------------- sweep grid
+def test_sweep_lanes_grid_shape_and_anchors():
+    from repro.core.sweep import sweep_lanes
+    res = sweep_lanes(
+        conditions=[("fcfs", None), ("sjf", None), ("srpt", None)],
+        lanes=(1, 2, 4), seeds=range(3), n=300, rho=0.74,
+        short=SHORT, long=LONG, slowdown=(1.0, 1.25, 1.5, 1.75),
+        budgets=(None, 800.0))
+    m = res.metric("short_p50")
+    assert m.shape == (3, 3, 2)[:2] + (2, 3)
+    # c=1 unbudgeted rows must equal the serial sweep engine (anchor)
+    from repro.core.sweep import sweep_poisson
+    anchor = sweep_poisson(
+        conditions=[("fcfs", None), ("sjf", None)],
+        rhos=(0.74,), seeds=range(3), n=300, short=SHORT, long=LONG)
+    np.testing.assert_array_equal(m[:2, 0, 0, :],
+                                  anchor.metric("short_p50")[:, 0, :])
+    # batching helps FCFS: more lanes -> lower seed-mean short P50
+    fcfs = m[0].mean(-1)          # (L, B)
+    assert fcfs[2, 0] < fcfs[0, 0]
+    # a finite KV budget costs throughput vs unbudgeted at high c
+    assert np.isfinite(m).all()
+
+
+def test_sweep_lane_batches_keeps_tenant_keys():
+    """fair_share rows must key per tenant (regression: the lane grid
+    once dropped tenant codes, silently collapsing every request into
+    one tenant): the c=1 row equals simulate_batch on the same
+    two-tenant batch, which differs from the tenant-blind ordering."""
+    from repro.core.sweep import sweep_lane_batches
+    rng = np.random.default_rng(5)
+    batch = RequestBatch.poisson(rng, 120, 0.12, SHORT, LONG)
+    batch.tenant = (np.arange(120) % 3 == 0).astype(np.int32)
+    batch.tenants = ("heavy", "light")
+    flat = sweep_lane_batches([batch], [("fair_share", None)], lanes=(1,))
+    want = simulate_batch(batch, policy="fair_share", tau=None)
+    got = flat["mean_sojourn"][0, 0, 0, 0]
+    assert got == float((want.finish - batch.arrival).mean())
+
+
+def test_sweep_lanes_batching_vs_scheduling_decomposition():
+    """The question the grid answers: plain FCFS batching at c=4 recovers
+    much of SJF's short-P50 win, and predictive admission still adds on
+    top (sjf@c <= fcfs@c for every c, seed-averaged)."""
+    from repro.core.sweep import sweep_lanes
+    res = sweep_lanes(
+        conditions=[("fcfs", None), ("sjf", None)],
+        lanes=(1, 4), seeds=range(3), n=400, rho=0.74,
+        short=SHORT, long=LONG, slowdown=(1.0, 1.2, 1.4, 1.6))
+    p50 = res.metric("short_p50").mean(-1)[:, :, 0]   # (C, L)
+    fcfs1, fcfs4 = p50[0]
+    sjf1, sjf4 = p50[1]
+    assert fcfs4 < fcfs1                  # batching alone helps
+    assert sjf4 <= fcfs4                  # admission still adds on top
+    assert sjf1 < fcfs1

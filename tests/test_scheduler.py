@@ -147,6 +147,49 @@ def test_no_promotion_below_tau():
     assert q.pop(now=6.0).req_id == 1  # SJF order holds
 
 
+def _lane_backfill_queue(tau=5.0):
+    q = SJFQueue(policy="sjf", tau=tau)
+    q.push(_mk(0, arrival=0.0, p_long=0.99))   # oldest, worst key
+    q.push(_mk(1, arrival=4.0, p_long=0.01))
+    q.push(_mk(2, arrival=4.5, p_long=0.02))
+    q.push(_mk(3, arrival=4.6, p_long=0.03))
+    return q
+
+
+def test_pop_many_matches_sequential_pops():
+    """pop_many(k) must equal k sequential pops — the starvation guard is
+    re-evaluated between pops, so a promoted waiter claims the next lane."""
+    a = _lane_backfill_queue()
+    b = _lane_backfill_queue()
+    got = [r.req_id for r in a.pop_many(4, now=6.0)]
+    want = [b.pop(now=6.0).req_id for _ in range(4)]
+    assert got == want
+    # at t=6 the aged long job (wait 6 > tau=5) heads the batch
+    assert got[0] == 0 and a.stats["promotions"] == 1
+
+
+def test_pop_many_observes_promotions_between_pops():
+    """Regression against the naive batched back-fill (heap top-k in one
+    go): with tau=5.5 the guard does NOT fire for the first pop (wait
+    5.0 <= tau) but MUST fire for a later one once only the aged request
+    remains over tau — the naive key order [1, 2, 3, 0] is wrong."""
+    q = _lane_backfill_queue(tau=5.5)
+    naive = sorted([0, 1, 2, 3],
+                   key=lambda i: [0.99, 0.01, 0.02, 0.03][i])
+    got = [r.req_id for r in q.pop_many(4, now=5.0)]
+    assert got == [1, 2, 3, 0] == naive  # tau never crossed at now=5.0
+    q2 = _lane_backfill_queue(tau=5.5)
+    got2 = [r.req_id for r in q2.pop_many(4, now=5.6)]
+    # wait(req 0) = 5.6 > tau at every decision: promoted to the head
+    assert got2 == [0, 1, 2, 3] and q2.stats["promotions"] == 1
+
+
+def test_pop_many_stops_at_empty_queue():
+    q = _lane_backfill_queue()
+    assert len(q.pop_many(10, now=0.0)) == 4
+    assert q.pop_many(3, now=0.0) == []
+
+
 def test_cancellation_is_lazy_and_complete():
     q = SJFQueue(policy="sjf")
     for i in range(5):
