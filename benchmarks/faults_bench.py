@@ -1,0 +1,212 @@
+"""Fault-injection benchmark: does the scheduling win survive chaos?
+(writes ``BENCH_faults.json``)
+
+Three measurements, all in virtual time (the DES fault engine) plus one
+serving-layer chaos drain on the wall clock:
+
+* **degradation curves** — ``core.sweep.sweep_faults``: FCFS vs SJF x
+  crash-MTBF in {inf, 240, 120, 60} s x repair time in {5, 15} s on the
+  paper's rho = 0.74 Poisson workload with NOISY predictor scores (~0.87
+  ranking accuracy, like BENCH_policies/BENCH_batching).  Fault
+  timelines and workloads are fully paired across conditions.  The
+  acceptance bar: SJF keeps a short-class P50 win over FCFS at every
+  nonzero failure rate — HoL mitigation is not a fair-weather property.
+* **shedding bounds the tail** — overload row (rho = 1.3, guard off as
+  in the burst replication): served-request short-P99 with a deadline
+  budget vs without.  Unbounded overload grows the tail with the queue;
+  a deadline budget caps queueing delay at dispatch, so the served tail
+  stays ~deadline + service while shed_rate absorbs the excess.
+* **serving-layer chaos drain** — a ``ClairvoyantServer`` (virtual-time
+  sim engines) run under a seeded ``FaultPlan`` (transients + crashes +
+  stalls): per-request drain overhead of the fault/retry layer vs a
+  clean drain, plus the no-lost-requests accounting (terminal statuses
+  sum to submissions).
+
+    PYTHONPATH=src python -m benchmarks.run faults
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+MTBFS = (float("inf"), 240.0, 120.0, 60.0)
+REPAIRS = (5.0, 15.0)
+SEEDS = 5
+N = 1000
+RHO = 0.74
+ACC = 0.87
+
+
+def _noisy_batches(n, rho, seeds, short, long):
+    from repro.core.sim_fast import RequestBatch
+    from repro.core.simulation import _spread_for_accuracy
+    es = 0.5 * (short.mean + long.mean)
+    spread = _spread_for_accuracy(ACC)
+    batches = []
+    for s in range(seeds):
+        rng = np.random.default_rng(s)
+        b = RequestBatch.poisson(rng, n, rho / es, short, long)
+        base = np.where(b.p_long > 0.5, 0.75, 0.25)
+        b.p_long = np.clip(rng.normal(base, spread), 0.0, 1.0)
+        batches.append(b)
+    return batches
+
+
+def _degradation(result: dict):
+    from repro.core.sweep import sweep_faults
+    from repro.serving.service_time import (PAPER_4090_LONG,
+                                            PAPER_4090_SHORT)
+
+    short, long = PAPER_4090_SHORT, PAPER_4090_LONG
+    tau = 3.0 * short.mean
+    conditions = [("fcfs", None), ("sjf", tau)]
+    batches = _noisy_batches(N, RHO, SEEDS, short, long)
+    t0 = time.perf_counter()
+    res = sweep_faults(conditions, MTBFS, REPAIRS, range(SEEDS),
+                       n=N, short=short, long=long, rho=RHO,
+                       batches=batches)
+    dt = time.perf_counter() - t0
+    cells = len(conditions) * len(MTBFS) * len(REPAIRS) * SEEDS
+    emit("faults_grid", dt / cells * 1e6,
+         f"{cells} DES cells (2 policies x {len(MTBFS)} MTBFs x "
+         f"{len(REPAIRS)} repairs x {SEEDS} seeds, n={N}) in {dt:.2f}s")
+
+    sp = res.metric("short_p50")          # (C, F, R, S)
+    gp = res.metric("goodput")
+    rq = res.metric("requeues")
+    curves = {}
+    win_cells = []
+    for fi, mtbf in enumerate(MTBFS):
+        for ri, rep in enumerate(REPAIRS):
+            label = ("mtbf_inf" if not np.isfinite(mtbf)
+                     else f"mtbf{int(mtbf)}_mttr{int(rep)}")
+            if not np.isfinite(mtbf) and ri > 0:
+                continue                  # one no-fault column is enough
+            f50 = float(sp[0, fi, ri].mean())
+            s50 = float(sp[1, fi, ri].mean())
+            win = 100.0 * (1.0 - s50 / f50)
+            curves[label] = {
+                "fcfs_short_p50": round(f50, 3),
+                "sjf_short_p50": round(s50, 3),
+                "sjf_win_pct": round(win, 1),
+                "fcfs_goodput": round(float(gp[0, fi, ri].mean()), 4),
+                "sjf_goodput": round(float(gp[1, fi, ri].mean()), 4),
+                "requeues_per_run": round(float(rq[1, fi, ri].mean()), 2),
+            }
+            if np.isfinite(mtbf):
+                win_cells.append(win > 0.0)
+            emit(f"faults_{label}", 0.0,
+                 f"short P50 fcfs {f50:.1f}s sjf {s50:.1f}s "
+                 f"(win {win:.0f}%), goodput "
+                 f"{curves[label]['sjf_goodput']:.3f} req/s")
+    result["degradation"] = curves
+    result["degradation_axes"] = {
+        "policies": ["fcfs", "sjf"], "mtbfs_s": list(MTBFS),
+        "repairs_s": list(REPAIRS), "rho": RHO, "n": N, "seeds": SEEDS,
+        "tau": tau, "ranking_accuracy": ACC}
+    result["sjf_win_survives_all_fault_cells"] = bool(all(win_cells))
+
+
+def _shedding(result: dict):
+    from repro.core.sweep import sweep_faults
+    from repro.serving.service_time import (PAPER_4090_LONG,
+                                            PAPER_4090_SHORT)
+
+    short, long = PAPER_4090_SHORT, PAPER_4090_LONG
+    rho_over = 1.3
+    deadline = 6.0 * short.mean           # generous vs service, tiny vs
+    conditions = [("fcfs", None), ("sjf", None)]   # overload queue growth
+    batches = _noisy_batches(N, rho_over, SEEDS, short, long)
+    rows = {}
+    for dl in (None, deadline):
+        res = sweep_faults(conditions, (float("inf"),), (5.0,),
+                           range(SEEDS), n=N, short=short, long=long,
+                           rho=rho_over, deadline=dl, batches=batches)
+        for ci, (pol, _) in enumerate(conditions):
+            key = f"{pol}_" + ("noshed" if dl is None else "shed")
+            rows[key] = {
+                "short_p99": round(float(
+                    res.metric("short_p99")[ci, 0, 0].mean()), 2),
+                "short_p50": round(float(
+                    res.metric("short_p50")[ci, 0, 0].mean()), 2),
+                "shed_rate": round(float(
+                    res.metric("shed_rate")[ci, 0, 0].mean()), 3),
+                "goodput": round(float(
+                    res.metric("goodput")[ci, 0, 0].mean()), 4),
+            }
+    result["overload_shedding"] = rows
+    result["overload_shedding_axes"] = {
+        "rho": rho_over, "deadline_s": deadline, "n": N, "seeds": SEEDS}
+    bound = rows["sjf_shed"]["short_p99"]
+    unbound = rows["sjf_noshed"]["short_p99"]
+    result["shed_p99_reduction_pct"] = round(100 * (1 - bound / unbound), 1)
+    emit("faults_overload_shed", 0.0,
+         f"rho={rho_over} short P99: unbounded {unbound:.0f}s -> deadline "
+         f"{deadline:.0f}s budget {bound:.0f}s "
+         f"({result['shed_p99_reduction_pct']:.0f}% lower, shed_rate "
+         f"{rows['sjf_shed']['shed_rate']:.2f})")
+
+
+def _chaos_drain(result: dict):
+    from repro.serving.faults import FaultPlan
+    from repro.serving.openai_api import CompletionRequest
+    from repro.serving.server import ClairvoyantServer
+
+    n = 400
+    rng = np.random.default_rng(0)
+    toks = np.where(rng.random(n) < 0.5,
+                    rng.integers(30, 90, n), rng.integers(400, 700, n))
+    arrivals = np.sort(rng.uniform(0.0, n * 0.5, n))
+
+    def drive(plan):
+        server = ClairvoyantServer(policy="sjf", predictor=None,
+                                   fault_plan=plan, seed=0)
+        for i in range(n):
+            server.submit(CompletionRequest(prompt=f"req {i}"),
+                          arrival=float(arrivals[i]),
+                          true_output_tokens=int(toks[i]),
+                          klass="short" if toks[i] < 200 else "long")
+        t0 = time.perf_counter()
+        server.drain()
+        return server, time.perf_counter() - t0
+
+    plan = FaultPlan.random(seed=7, horizon=float(arrivals[-1]),
+                            crash_mtbf=40.0, crash_mttr=5.0,
+                            transient_rate=1 / 30.0, stall_mtbf=60.0,
+                            stall_s=10.0)
+    clean_server, clean_dt = drive(None)
+    chaos_server, chaos_dt = drive(plan)
+
+    statuses = {}
+    for r in chaos_server.responses:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+    lost = n - len(chaos_server.responses)
+    result["chaos_drain"] = {
+        "n": n, "clean_us_per_req": round(clean_dt / n * 1e6, 1),
+        "chaos_us_per_req": round(chaos_dt / n * 1e6, 1),
+        "fault_layer_overhead_x": round(chaos_dt / max(clean_dt, 1e-9), 2),
+        "statuses": statuses, "lost_requests": lost,
+        "fault_stats": dict(chaos_server.fault_stats),
+    }
+    emit("faults_chaos_drain", chaos_dt / n * 1e6,
+         f"{n} reqs under chaos plan: statuses {statuses}, lost {lost}, "
+         f"retries {chaos_server.fault_stats['retries']}, crashes "
+         f"{chaos_server.fault_stats['crashes']} "
+         f"({result['chaos_drain']['fault_layer_overhead_x']:.2f}x clean)")
+    result["no_lost_requests"] = bool(lost == 0)
+
+
+def run() -> dict:
+    result: dict = {}
+    _degradation(result)
+    _shedding(result)
+    _chaos_drain(result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -14,7 +14,10 @@ tracked across PRs:
   registered scheduling policy under Poisson rho=0.74 and 100-req burst);
 * ``batching`` -> ``BENCH_batching.json`` (lane-scaling tok/s through the
   micro-batched engine, the s(c) slowdown calibration, and the
-  policy x lane-count x KV-budget DES grid).
+  policy x lane-count x KV-budget DES grid);
+* ``faults`` -> ``BENCH_faults.json`` (fault-injection degradation
+  curves: SJF-vs-FCFS short-P50 and goodput across crash-MTBF x repair
+  grids, overload shedding P99 bound, serving-layer chaos drain).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -34,15 +37,17 @@ BENCH_JSONS = {
     "serve": os.path.join(_ROOT, "BENCH_serve.json"),
     "policies": os.path.join(_ROOT, "BENCH_policies.json"),
     "batching": os.path.join(_ROOT, "BENCH_batching.json"),
+    "faults": os.path.join(_ROOT, "BENCH_faults.json"),
 }
 
 
 def main() -> None:
-    from benchmarks import (batching_bench, fig3_rho_sweep, policies_bench,
-                            predictor_latency, serve_bench, sim_bench,
-                            table1_service_stats, table2_dataset_stats,
-                            table4_ablation, table5_ranking, table6_cross,
-                            table7_baselines, table8_burst, table9_tau)
+    from benchmarks import (batching_bench, faults_bench, fig3_rho_sweep,
+                            policies_bench, predictor_latency, serve_bench,
+                            sim_bench, table1_service_stats,
+                            table2_dataset_stats, table4_ablation,
+                            table5_ranking, table6_cross, table7_baselines,
+                            table8_burst, table9_tau)
 
     suites = {
         "table1": table1_service_stats.run,
@@ -59,6 +64,7 @@ def main() -> None:
         "serve": serve_bench.run,
         "policies": policies_bench.run,
         "batching": batching_bench.run,
+        "faults": faults_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

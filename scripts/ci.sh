@@ -31,6 +31,35 @@ echo "== example smoke runs (multi-replica routing, batched serve) =="
 python examples/multireplica_routing.py
 python examples/batched_serve.py
 
+echo "== fixed-seed chaos smoke (no-lost-requests invariant) =="
+# a seeded FaultPlan over the sim-engine server: every submitted request
+# must terminate with exactly one terminal status, whatever faults fire
+python - <<'PY'
+from repro.serving.faults import FaultPlan
+from repro.serving.openai_api import CompletionRequest
+from repro.serving.server import ClairvoyantServer
+
+n = 200
+plan = FaultPlan.random(seed=1234, horizon=300.0, crash_mtbf=60.0,
+                        crash_mttr=5.0, transient_rate=1 / 40.0,
+                        stall_mtbf=100.0, predictor_mtbf=120.0)
+server = ClairvoyantServer(policy="sjf", predictor=None, fault_plan=plan,
+                           deadline_s=60.0, seed=0)
+for i in range(n):
+    server.submit(CompletionRequest(prompt=f"req {i}"), arrival=i * 2.0,
+                  true_output_tokens=40 if i % 3 else 300,
+                  klass="long" if i % 3 == 0 else "short")
+server.drain()
+statuses = sorted(r.status for r in server.responses)
+assert len(server.responses) == n, \
+    f"lost requests: {n - len(server.responses)}"
+assert len(set(r.request_id for r in server.responses)) == n, \
+    "duplicate terminal responses"
+print(f"chaos smoke OK: {n} requests, statuses "
+      f"{ {s: statuses.count(s) for s in set(statuses)} }, "
+      f"fault_stats {server.fault_stats}")
+PY
+
 if [ -z "${SKIP_BENCH:-}" ]; then
     echo "== predictor microbenchmark =="
     python -m benchmarks.run predictor
@@ -52,4 +81,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run batching
     echo "== BENCH_batching.json =="
     cat BENCH_batching.json
+    echo "== fault-injection benchmark (degradation curves + shedding) =="
+    python -m benchmarks.run faults
+    echo "== BENCH_faults.json =="
+    cat BENCH_faults.json
 fi

@@ -298,7 +298,7 @@ class SJFQueue:
         self._seq = itertools.count()
         self._live: dict[int, Request] = {}
         self.stats = {"promotions": 0, "cancellations": 0, "dispatched": 0,
-                      "preemptions": 0}
+                      "preemptions": 0, "requeues": 0}
 
     def __len__(self):
         return len(self._live)
@@ -317,8 +317,10 @@ class SJFQueue:
         self._heap.push(key, seq, req.req_id)
         self._fifo.append(req)
 
-    def push_requeue(self, req: Request, key: float) -> None:
-        """Re-admit a preempted request with an explicit (policy-computed)
+    def push_requeue(self, req: Request, key: float,
+                     reason: str = "preempt") -> None:
+        """Re-admit a preempted (``reason="preempt"``) or fault-requeued
+        (``reason="fault"``, e.g. engine crash) request with an explicit
         requeue key.  It keeps its original arrival, so the starvation
         guard still sees its true wait; the new heap seq makes re-entries
         FIFO among equal keys."""
@@ -333,7 +335,7 @@ class SJFQueue:
         self._fifo = deque(sorted(
             [r for r in self._fifo if r.req_id != req.req_id] + [req],
             key=lambda r: (r.arrival, r.req_id)))
-        self.stats["preemptions"] += 1
+        self.stats["requeues" if reason == "fault" else "preemptions"] += 1
 
     def peek(self) -> Optional[tuple]:
         """Best queued ``(key, Request)`` without dispatching (preemption

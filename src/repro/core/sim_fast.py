@@ -916,3 +916,238 @@ def simulate_batch_servers(batch: RequestBatch, policy="sjf",
                           promoted=promoted, promotions=int(promos[0]),
                           makespan=float(finish.max()) if n else 0.0,
                           preemptions=int(pre[0]))
+
+
+# ---------------------------------------------------------------------------
+# Fault-injected serial engine (PR 6).
+#
+# The DES mirror of the serving-layer fault model (serving/faults.py): the
+# single server goes DOWN for repair windows (crash + MTTR), runs SLOW
+# inside stall windows, and the scheduler may SHED a request at dispatch
+# when its queueing delay already exceeds its deadline budget.  A request
+# in flight when the server goes down is requeued *work-conserving* — the
+# service it already received is kept (``used``) and only the remainder
+# runs after repair — under its ORIGINAL queue key and arrival (so the
+# starvation guard still ages it from first arrival).
+#
+# Equivalence contract: with no fault windows and no deadline, the loop
+# performs bitwise the same float ops as ``_simulate_arrays_python``
+# (``svc - 0.0 == svc`` and ``rem * 1.0 == rem`` exactly in IEEE-754), so
+# no-fault rows are trace-equivalent to every other engine and to the
+# reference — the oracle the tests pin.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServerFaults:
+    """One server's fault timeline in virtual time.
+
+    ``downs``: ((down_t, up_t), ...) sorted, non-overlapping — the server
+    does no work inside a window.  ``slowdowns``: ((t0, t1, factor), ...) —
+    service accrues at ``1/factor`` speed while inside (factors of
+    overlapping windows multiply).  Empty tuples = a healthy server.
+    """
+
+    downs: Tuple[Tuple[float, float], ...] = ()
+    slowdowns: Tuple[Tuple[float, float, float], ...] = ()
+
+    def __post_init__(self):
+        last = -float("inf")
+        for d, u in self.downs:
+            if not (d >= last and u > d):
+                raise ValueError("downs must be sorted, non-overlapping "
+                                 "windows with up > down")
+            last = u
+        for t0, t1, f in self.slowdowns:
+            if not (t1 > t0 and f > 1.0):
+                raise ValueError("slowdown windows need t1 > t0, factor > 1")
+
+    @classmethod
+    def random(cls, rng, horizon: float, *, mtbf: float = 0.0,
+               mttr: float = 5.0, stall_mtbf: float = 0.0,
+               stall_s: float = 10.0,
+               stall_factor: float = 2.0) -> "ServerFaults":
+        """Poisson crash/stall timelines over ``[0, horizon)``.
+
+        ``mtbf``/``stall_mtbf`` of 0 disable that fault class.  Repair and
+        stall durations are fixed (``mttr`` / ``stall_s``) so a sweep axis
+        over repair time changes exactly one thing.  Windows drawn from one
+        ``rng`` — share the generator across paired conditions.
+        """
+        downs: List[Tuple[float, float]] = []
+        if mtbf > 0.0:
+            t = rng.exponential(mtbf)
+            while t < horizon:
+                downs.append((t, t + mttr))
+                t = t + mttr + rng.exponential(mtbf)
+        slows: List[Tuple[float, float, float]] = []
+        if stall_mtbf > 0.0:
+            t = rng.exponential(stall_mtbf)
+            while t < horizon:
+                slows.append((t, t + stall_s, stall_factor))
+                t = t + stall_s + rng.exponential(stall_mtbf)
+        return cls(downs=tuple(downs), slowdowns=tuple(slows))
+
+
+def _simulate_faults_python(arrival, service, key, tau, faults,
+                            deadline=None):
+    """Serial fault engine (see module comment above for the contract).
+
+    Returns ``(start, finish, promoted, promos, shed, requeues)``; shed
+    requests carry ``start = finish = NaN``.
+    """
+    import heapq
+    n = arrival.shape[0]
+    arr = arrival.tolist()
+    svc = service.tolist()
+    ks = key.tolist()
+    downs = faults.downs
+    slows = faults.slowdowns
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    promoted = np.zeros(n, bool)
+    shed = np.zeros(n, bool)
+    fin = [False] * n            # terminal (served or shed)
+    used = [0.0] * n             # service already received (work-conserving)
+    last_seq = [-1] * n          # validity stamp of the live heap entry
+    heap: list = []              # (key, seq, i): seq breaks ties == index
+    guard = tau is not None      # order when no requeue has happened
+    t = 0.0
+    i_arr = 0
+    oldest = 0
+    promos = 0
+    requeues = 0
+    nterm = 0
+    nq = 0                       # live (non-tombstone) heap entries
+    seq = 0
+
+    def down_until(x):
+        for d, u in downs:
+            if d <= x < u:
+                return u
+        return None
+
+    def factor_at(x):
+        f = 1.0
+        for t0, t1, fac in slows:
+            if t0 <= x < t1:
+                f *= fac
+        return f
+
+    def next_boundary(x):
+        b = float("inf")
+        for d, _u in downs:
+            if x < d < b:
+                b = d
+        for t0, t1, _f in slows:
+            if x < t0 < b:
+                b = t0
+            if x < t1 < b:
+                b = t1
+        return b
+
+    while nterm < n:
+        if nq == 0:                               # queue empty: jump
+            a = arr[i_arr]
+            if t < a:
+                t = a
+        if downs:                                 # never dispatch while down
+            u = down_until(t)
+            if u is not None:
+                t = u
+        while i_arr < n and arr[i_arr] <= t:
+            heapq.heappush(heap, (ks[i_arr], seq, i_arr))
+            last_seq[i_arr] = seq
+            seq += 1
+            nq += 1
+            i_arr += 1
+        while fin[oldest]:
+            oldest += 1
+        was_promo = False
+        if guard and (t - arr[oldest]) > tau:
+            j = oldest                            # promote past the heap;
+            was_promo = True                      # stale entry -> tombstone
+        else:
+            while True:
+                _, s, j = heapq.heappop(heap)
+                if not fin[j] and s == last_seq[j]:
+                    break
+        nq -= 1
+        if deadline is not None and used[j] == 0.0 \
+                and (t - arr[j]) > deadline:
+            shed[j] = True                        # shed at dispatch, never
+            fin[j] = True                         # once service has begun
+            start[j] = float("nan")
+            finish[j] = float("nan")
+            nterm += 1
+            continue
+        if was_promo:
+            promoted[j] = True
+            promos += 1
+        if used[j] == 0.0:
+            start[j] = t                          # FIRST dispatch
+        while True:                               # serve, event-sliced
+            rem = svc[j] - used[j]
+            f = factor_at(t)
+            tb = next_boundary(t)
+            tc = t + rem * f                      # == t + svc[j] bitwise
+            if tc <= tb:                          # when no faults active
+                t = tc
+                finish[j] = t
+                fin[j] = True
+                nterm += 1
+                break
+            used[j] += (tb - t) / f               # accrue partial service
+            t = tb
+            u = down_until(t)
+            if u is not None:                     # crash mid-service:
+                last_seq[j] = seq                 # work-conserving requeue
+                heapq.heappush(heap, (ks[j], seq, j))
+                seq += 1
+                nq += 1
+                requeues += 1
+                t = u
+                break
+    return start, finish, promoted, promos, shed, requeues
+
+
+def simulate_grid_faults(arrival, service, key, tau, faults,
+                         deadline=None):
+    """G fault-injected simulations in one call (Python engine only —
+    fault rows are rare relative to the clean grids the C engine runs).
+
+    ``faults``: one :class:`ServerFaults` shared by every row, or a
+    length-G sequence (one timeline per row — pair timelines across
+    conditions the same way workloads are paired).  ``deadline``: scalar
+    queueing-delay budget or length-G sequence (None disables shedding).
+    Returns ``(start, finish, promoted, promotions, shed, requeues)``
+    with shed (G, n) bool and requeues (G,) int64 appended to the
+    :func:`simulate_grid` contract.
+    """
+    arrival = np.ascontiguousarray(arrival, np.float64)
+    service = np.ascontiguousarray(service, np.float64)
+    key = np.ascontiguousarray(key, np.float64)
+    G, n = arrival.shape
+    tau_arr = np.array([np.nan if t is None else float(t) for t in tau],
+                       np.float64)
+    if tau_arr.shape != (G,):
+        raise ValueError(f"tau must have length {G}")
+    if isinstance(faults, ServerFaults):
+        faults = [faults] * G
+    if len(faults) != G:
+        raise ValueError(f"faults must have length {G}")
+    if deadline is None or np.isscalar(deadline):
+        deadline = [deadline] * G
+    start = np.empty((G, n))
+    finish = np.empty((G, n))
+    promoted = np.zeros((G, n), bool)
+    shed = np.zeros((G, n), bool)
+    promotions = np.zeros(G, np.int64)
+    requeues = np.zeros(G, np.int64)
+    if n == 0:
+        return start, finish, promoted, promotions, shed, requeues
+    for g in range(G):
+        tg = None if np.isnan(tau_arr[g]) else float(tau_arr[g])
+        (start[g], finish[g], promoted[g], promotions[g], shed[g],
+         requeues[g]) = _simulate_faults_python(
+            arrival[g], service[g], key[g], tg, faults[g], deadline[g])
+    return start, finish, promoted, promotions, shed, requeues

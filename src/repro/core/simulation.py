@@ -140,6 +140,69 @@ def simulate_servers(requests: Sequence[Request], policy="sjf",
                      makespan=res.makespan)
 
 
+@dataclass
+class FaultSimResult(SimResult):
+    """A :class:`SimResult` plus the fault-run outcome counters.  Shed
+    requests stay in ``requests`` with ``start = finish = NaN``, so the
+    percentile/mean aggregations (which drop NaN) report *goodput*
+    latency over served requests only."""
+
+    shed: int = 0
+    requeues: int = 0
+
+    @property
+    def served(self) -> int:
+        return len(self.requests) - self.shed
+
+
+def simulate_faulty(requests: Sequence[Request], policy="sjf",
+                    tau: Optional[float] = None,
+                    faults=None, deadline: Optional[float] = None
+                    ) -> FaultSimResult:
+    """Run the serial DES under a :class:`~repro.core.sim_fast.ServerFaults`
+    timeline (server down/repair windows + stall windows) with optional
+    deadline shedding (a request whose queueing delay exceeds ``deadline``
+    at dispatch is dropped — only before any service has run; a crashed
+    request's remainder is always work-conserving requeued).
+
+    With ``faults=None``/empty and ``deadline=None`` this is bitwise
+    trace-equivalent to :func:`simulate` (and the reference oracle) for
+    key-based policies; preemptive policies are rejected.
+    """
+    from repro.core.policy import get_policy
+    from repro.core.sim_fast import (RequestBatch, ServerFaults,
+                                     simulate_grid_faults)
+    pol = get_policy(policy)
+    if pol.preemptive:
+        raise ValueError("simulate_faulty is non-preemptive; fault "
+                         "injection composes with key-based policies only")
+    if faults is None:
+        faults = ServerFaults()
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    n = len(reqs)
+    if n == 0:
+        return FaultSimResult(requests=[], promotions=0, makespan=0.0)
+    b = RequestBatch.from_requests(reqs)
+    key = pol.key_array(b.arrival, b.p_long, b.true_service,
+                        tenant=b.tenant, tenants=b.tenants)
+    start, finish, promoted, promos, shed, requeues = simulate_grid_faults(
+        b.arrival[None], b.true_service[None], key[None],
+        (pol.aging.effective_tau(tau),), faults, deadline=deadline)
+    for i, r in enumerate(reqs):
+        r.start = float(start[0, i])
+        r.finish = float(finish[0, i])
+        r.promoted = bool(promoted[0, i])
+        if shed[0, i]:
+            r.meta["shed"] = True
+    ok = ~shed[0]
+    makespan = float(finish[0, ok].max()) if ok.any() else 0.0
+    done = [reqs[i] for i in np.argsort(np.where(ok, start[0], np.inf),
+                                        kind="stable")]
+    return FaultSimResult(requests=done, promotions=int(promos[0]),
+                          makespan=makespan, shed=int(shed[0].sum()),
+                          requeues=int(requeues[0]))
+
+
 # ---------------------------------------------------------------------------
 # Workload generators
 # ---------------------------------------------------------------------------

@@ -364,3 +364,142 @@ def run_grid(axes: Dict[str, Sequence], fn: Callable) -> Dict[tuple, object]:
     names = list(axes)
     return {combo: fn(**dict(zip(names, combo)))
             for combo in itertools.product(*(axes[k] for k in names))}
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection grid (PR 6): conditions x crash-MTBF x repair x seeds.
+# ---------------------------------------------------------------------------
+
+FAULT_METRICS = METRICS + ("goodput", "shed_rate", "requeues")
+
+
+@dataclass
+class FaultSweepResult:
+    """Metric arrays over a conditions x mtbfs x repairs x seeds grid.
+
+    ``mtbf = inf`` rows are the no-fault baseline (and are bitwise
+    trace-equal to the clean engines).  Latency metrics aggregate served
+    requests only; ``goodput`` is served requests per unit makespan,
+    ``shed_rate`` the shed fraction, ``requeues`` crash-requeue count.
+    """
+
+    conditions: Tuple[Condition, ...]
+    mtbfs: Tuple[float, ...]
+    repairs: Tuple[float, ...]
+    seeds: Tuple[int, ...]
+    metrics: Dict[str, np.ndarray]               # each (C, F, R, S)
+
+    def metric(self, name: str) -> np.ndarray:
+        return self.metrics[name]
+
+    def condition_index(self, policy: str, tau) -> int:
+        return self.conditions.index((policy, tau))
+
+
+def sweep_faults(conditions: Sequence[Condition], mtbfs: Sequence[float],
+                 repairs: Sequence[float], seeds: Sequence[int],
+                 n: int, short, long, rho: float = 0.7,
+                 mix_long: float = 0.5, deadline: Optional[float] = None,
+                 stall_mtbf: float = 0.0, stall_s: float = 10.0,
+                 stall_factor: float = 2.0,
+                 batches: Optional[Sequence[RequestBatch]] = None
+                 ) -> FaultSweepResult:
+    """The robustness grid: does the scheduling win survive faults?
+
+    One Poisson workload per seed is shared across every condition and
+    every fault cell; one fault timeline per (mtbf, repair, seed) cell is
+    shared across all conditions — fully paired comparisons on both axes.
+    ``mtbf = inf`` (or 0) disables crashes for that column, giving the
+    in-grid no-fault baseline.  Key-based conditions only (the fault
+    engine is non-preemptive).  ``batches`` (one per seed) overrides the
+    internal Poisson generation — use for noisy-predictor workloads.
+    """
+    from repro.core.sim_fast import ServerFaults, simulate_grid_faults
+    specs = tuple((p, t) for p, t in conditions)
+    policies = [get_policy(p) for p, _ in specs]
+    if any(p.preemptive for p in policies):
+        raise ValueError("sweep_faults supports key-based policies only")
+    conditions = tuple((p.name, t) for p, (_, t) in zip(policies, specs))
+    mtbfs = tuple(float(m) for m in mtbfs)
+    repairs = tuple(float(r) for r in repairs)
+    seeds = tuple(int(s) for s in seeds)
+    C, F, R, S = len(conditions), len(mtbfs), len(repairs), len(seeds)
+
+    es = mix_long * long.mean + (1.0 - mix_long) * short.mean
+    lam = rho / es
+    if batches is not None and len(batches) != S:
+        raise ValueError(f"need one batch per seed ({S})")
+    cols = []
+    for si, seed in enumerate(seeds):
+        if batches is not None:
+            b = batches[si]
+        else:
+            rng = np.random.default_rng(seed)
+            b = RequestBatch.poisson(rng, n, lam, short, long,
+                                     mix_long=mix_long)
+        perm = np.lexsort((b.req_id, b.arrival))
+        cols.append((b.arrival[perm], b.true_service[perm],
+                     b.p_long[perm], b.klass[perm], b.tenant[perm],
+                     b.tenants))
+
+    # one timeline per (mtbf, repair, seed) — horizon covers the busy
+    # period with slack for repair-time queue growth
+    timelines = {}
+    for fi, mtbf in enumerate(mtbfs):
+        for ri, rep in enumerate(repairs):
+            for si, seed in enumerate(seeds):
+                horizon = float(cols[si][0][-1]) + 20.0 * es
+                rng = np.random.default_rng((seed, fi, ri, 7))
+                eff = 0.0 if not np.isfinite(mtbf) else mtbf
+                timelines[fi, ri, si] = ServerFaults.random(
+                    rng, horizon, mtbf=eff, mttr=rep,
+                    stall_mtbf=stall_mtbf, stall_s=stall_s,
+                    stall_factor=stall_factor)
+
+    G = C * F * R * S
+    n = cols[0][0].shape[0]           # batches may override the target n
+    arrival = np.empty((G, n))
+    service = np.empty((G, n))
+    key = np.empty((G, n))
+    taus: List[Optional[float]] = []
+    faults = []
+    for c, ((_, tau), pol) in enumerate(zip(specs, policies)):
+        for fi in range(F):
+            for ri in range(R):
+                for si in range(S):
+                    row = ((c * F + fi) * R + ri) * S + si
+                    arr, svc, pl, _, tc, tn = cols[si]
+                    arrival[row] = arr
+                    service[row] = svc
+                    key[row] = pol.key_array(arr, pl, svc, tenant=tc,
+                                             tenants=tn)
+                    taus.append(pol.aging.effective_tau(tau))
+                    faults.append(timelines[fi, ri, si])
+    start, finish, promoted, promotions, shed, requeues = \
+        simulate_grid_faults(arrival, service, key, taus, faults,
+                             deadline=deadline)
+
+    from repro.core.sim_fast import _KLASS_CODE
+    out = {m: np.empty((C, F, R, S)) for m in FAULT_METRICS}
+    for c in range(C):
+        for fi in range(F):
+            for ri in range(R):
+                for si in range(S):
+                    row = ((c * F + fi) * R + ri) * S + si
+                    klass = cols[si][3]
+                    ok = ~shed[row]
+                    vals = _percentile_metrics(
+                        start[row][ok], finish[row][ok],
+                        int(promotions[row]), arrival[row][ok],
+                        (klass == _KLASS_CODE["short"])[ok],
+                        (klass == _KLASS_CODE["long"])[ok])
+                    mk = float(finish[row][ok].max()) if ok.any() else 0.0
+                    vals = vals[:-1] + (mk,)
+                    for m, v in zip(METRICS, vals):
+                        out[m][c, fi, ri, si] = v
+                    out["goodput"][c, fi, ri, si] = \
+                        (ok.sum() / mk) if mk > 0 else 0.0
+                    out["shed_rate"][c, fi, ri, si] = shed[row].mean()
+                    out["requeues"][c, fi, ri, si] = requeues[row]
+    return FaultSweepResult(conditions=conditions, mtbfs=mtbfs,
+                            repairs=repairs, seeds=seeds, metrics=out)

@@ -100,6 +100,11 @@ class RealEngine:
         self.busy_until = 0.0
         self.served = 0
         self._cancel = False
+        # optional serving.faults.FaultInjector: polled at fused-decode
+        # segment boundaries (same join points as cancellation), where an
+        # injected crash surfaces as an EngineCrash raise out of generate
+        self.fault_injector = None
+        self._pending_items: list = []
 
         self._bucketing = all(k in _BUCKET_SAFE_KINDS
                               for k in cfg.block_pattern)
@@ -213,6 +218,10 @@ class RealEngine:
         ttft = time.monotonic() - t0
 
         def cancelled():
+            if self.fault_injector is not None:
+                # may raise EngineCrash: the mid-generation crash fires at
+                # the segment boundary, exactly where a cancel would land
+                self.fault_injector.poll_segment(self.replica_id)
             return self._cancel or (cancel_cb is not None and cancel_cb())
 
         dec = self._decoder(segment_len or self.segment_len)
@@ -307,6 +316,13 @@ class BatchedRealEngine(RealEngine):
                                          segment_len)
         self.lane_manager = None       # the most recent run's manager/stats
 
+    def take_pending(self) -> list:
+        """Drain the popped-but-not-admitted work items of the most recent
+        ``run_lanes`` call (crash recovery: these left the caller's queue
+        but never reached a lane, so an aborted run would lose them)."""
+        items, self._pending_items = list(self._pending_items), []
+        return items
+
     # ----------------------------------------------------------- batch API
     def generate_batch(self, prompts, max_new_tokens=32,
                        eos_id: Optional[int] = None) -> list:
@@ -372,6 +388,10 @@ class BatchedRealEngine(RealEngine):
         eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
         dev = {"d": None}               # (tok, produced, plen, max_new, act)
         pending: list = []              # popped but budget-blocked items
+        # exposed for exception-safe callers: if a crash propagates out of
+        # this method, items popped from the queue but not yet admitted to
+        # a lane are recoverable via take_pending()
+        self._pending_items = pending
         drained = {"source": False}
 
         def fill(backfill: bool = False) -> None:
@@ -433,32 +453,51 @@ class BatchedRealEngine(RealEngine):
                     active[lane] = True
             dev["d"] = None             # lane composition changed
 
-        def finish(state, cancelled: bool) -> None:
+        def finish(state, cancelled: bool, crashed: bool = False) -> None:
             t_fin = now()
             self.served += not cancelled
             on_finish(state, {
                 "tokens": list(state.tokens), "cancelled": cancelled,
+                "crashed": crashed,
                 "ttft_s": state.ttft_s, "admit_t": state.admit_t,
                 "finish_t": t_fin, "service_s": t_fin - state.admit_t,
                 "lane": state.lane, "evictions": state.evictions})
 
+        inj = self.fault_injector
         fill()
         while active.any():
+            # segment boundary: collect client disconnects and injected
+            # lane crashes, then evict + back-fill in one pass.  A
+            # whole-engine crash (poll_segment) raises out of run_lanes;
+            # the server requeues busy lanes + pending items.
+            evictions = []                  # (lane, crashed)
             if cancel_check is not None:
-                evicted = False
                 for lane in mgr.busy_lanes():
                     if cancel_check(mgr.lanes[lane]):
-                        st = mgr.evict(lane)
-                        active[lane] = False
-                        evicted = True
-                        finish(st, cancelled=True)
-                if evicted:
-                    if dev["d"] is not None:
-                        tok = np.array(dev["d"][0])   # refresh host mirror
-                    dev["d"] = None
-                    fill(backfill=True)
-                    if not active.any():
+                        evictions.append((lane, False))
+            if inj is not None:
+                inj.poll_segment(self.replica_id)
+                spec = inj.lane_crash_due(self.replica_id)
+                while spec is not None:
+                    taken = {lane for lane, _ in evictions}
+                    busy = [ln for ln in mgr.busy_lanes()
+                            if ln not in taken]
+                    if not busy:
                         break
+                    victim = spec.lane if spec.lane in busy else busy[0]
+                    evictions.append((victim, True))
+                    spec = inj.lane_crash_due(self.replica_id)
+            if evictions:
+                for lane, crashed in evictions:
+                    st = mgr.evict(lane)
+                    active[lane] = False
+                    finish(st, cancelled=True, crashed=crashed)
+                if dev["d"] is not None:
+                    tok = np.array(dev["d"][0])       # refresh host mirror
+                dev["d"] = None
+                fill(backfill=True)
+                if not active.any():
+                    break
             if dev["d"] is None:
                 dev["d"] = (jnp.asarray(tok), jnp.asarray(produced),
                             jnp.asarray(plen), jnp.asarray(max_new),

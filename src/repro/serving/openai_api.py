@@ -26,6 +26,16 @@ class CompletionRequest:
     created: float = field(default_factory=time.monotonic)
 
 
+#: Terminal states a response can report.  Every submitted request ends
+#: in exactly one of these (the server's no-lost-requests invariant):
+#: ``ok`` served to completion; ``shed`` dropped by admission control
+#: (queue overflow) or a deadline budget before service; ``failed`` the
+#: backend faulted and the bounded retries were exhausted; ``timeout``
+#: the deadline expired while in service; ``cancelled`` client
+#: disconnect (queued or mid-generation).
+STATUSES = ("ok", "shed", "failed", "timeout", "cancelled")
+
+
 @dataclass
 class CompletionResponse:
     request_id: int
@@ -38,6 +48,18 @@ class CompletionResponse:
     replica: int = 0
     p_long: float = 0.0
     klass: str = ""                     # ground-truth class, if known
+    status: str = "ok"                  # terminal state (see STATUSES)
+    error: Optional[str] = None         # human-readable failure reason
+    retries: int = 0                    # fault retries before terminating
+    degraded: bool = False              # admitted under predictor outage
+
+    def __post_init__(self):
+        if self.status not in STATUSES:
+            raise ValueError(f"unknown status {self.status!r}")
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
     @property
     def sojourn_s(self) -> float:

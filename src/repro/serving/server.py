@@ -38,6 +38,32 @@ queue applies the starvation check, exactly like the Go dispatcher goroutine.
 Mid-generation disconnects on a real backend go through ``cancel``: if the
 request is currently decoding, the engine's cancel flag stops the fused loop
 at the next segment boundary (§3.4 drain semantics).
+
+Robustness (PR 6) — the drain loops are exception-safe and every
+submitted request terminates with exactly one terminal
+``CompletionResponse`` (``ok | shed | failed | timeout | cancelled``),
+the **no-lost-requests invariant** (enforced: a second terminal response
+for the same request raises).  The pieces:
+
+* ``fault_plan`` — a seeded ``serving.faults.FaultPlan`` injects engine
+  crashes (virtual-time for sim drains, fused-decode segment boundaries
+  for real engines), straggler stall windows, transient backend errors,
+  predictor outages and admission-overflow windows.
+* engine faults (injected or organic ``Exception`` from an engine call)
+  requeue the in-flight request with its original arrival (sojourn
+  accounting is preserved) under a jittered-exponential ``RetryPolicy``;
+  retries exhausted => terminal ``failed`` response, never a raise.
+* ``deadline_s`` — per-request queue-wait budget: a request still
+  undispatched past its budget is shed at dispatch time (terminal
+  ``shed`` response), bounding tail latency under overload.
+* graceful predictor degradation — a predictor exception, NaN scores,
+  or an injected outage flips the server into degraded mode
+  (``self.degraded``): admission continues with ``p_long = 0`` for
+  every request, which collapses SJF to FCFS (equal keys -> FIFO
+  tie-break), and recovers as soon as a later predictor call succeeds.
+* per-replica circuit breaker (``breaker=``) — consecutive recorded
+  failures stop placement on a replica until a half-open probe succeeds
+  (core/router.py).
 """
 
 from __future__ import annotations
@@ -51,6 +77,9 @@ from repro.core.predictor import Predictor
 from repro.core.router import PredictiveRouter
 from repro.core.scheduler import Request, SJFQueue
 from repro.serving.engine import BatchedRealEngine, RealEngine, SimEngine
+from repro.serving.faults import (CircuitBreaker, EngineCrash, FaultError,
+                                  RetryPolicy, TransientBackendError,
+                                  as_injector)
 from repro.serving.openai_api import CompletionRequest, CompletionResponse
 from repro.serving.service_time import ServiceTimeModel, sample_output_tokens
 from repro.data.tokenizer import HashTokenizer, approx_token_len
@@ -62,7 +91,12 @@ class ClairvoyantServer:
                  predictor: Optional[Predictor] = None,
                  service_model: Optional[ServiceTimeModel] = None,
                  engines: Optional[Sequence] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 fault_plan=None,
+                 retry: Optional[RetryPolicy] = None,
+                 deadline_s: Optional[float] = None,
+                 max_queue_depth: Optional[int] = None,
+                 breaker: Optional[CircuitBreaker] = None):
         # policy: registry name or Policy instance (core/policy.py)
         self.policy_obj = get_policy(policy)
         self.policy = self.policy_obj.name
@@ -76,25 +110,66 @@ class ClairvoyantServer:
         else:
             self.engines = [SimEngine(self.service_model, i)
                             for i in range(n_replicas)]
-        self.router = PredictiveRouter(n_replicas, policy=policy, tau=tau)
+        self.router = PredictiveRouter(n_replicas, policy=policy, tau=tau,
+                                       breaker=breaker)
         self._inflight: Dict[int, CompletionRequest] = {}
         self._decoding: Dict[int, int] = {}     # replica_id -> request_id
         self._disconnected: set = set()         # mid-flight client cancels
         self._oracle_tokens: Dict[int, int] = {}
         self._tokenizer: Optional[HashTokenizer] = None
         self.responses: List[CompletionResponse] = []
+        # --- robustness layer (serving/faults.py) ---
+        self.faults = as_injector(fault_plan)
+        self.retry = retry if retry is not None else RetryPolicy(seed=seed)
+        self.deadline_s = deadline_s
+        self.max_queue_depth = max_queue_depth
+        self.degraded = False                   # predictor-outage FCFS mode
+        self._terminal: Dict[int, str] = {}     # req_id -> terminal status
+        self.fault_stats = {"predictor_failures": 0,
+                            "degraded_admissions": 0, "sheds": 0,
+                            "retries": 0, "failures": 0, "crashes": 0,
+                            "transients": 0, "requeues": 0}
+        if self.faults is not None:
+            for eng in self.engines:
+                if isinstance(eng, RealEngine):
+                    eng.fault_injector = self.faults
 
     # ------------------------------------------------------------------ API
+    def _predict_probas(self, prompts: List[str], now: float):
+        """Predictor call with graceful degradation: an exception, a
+        non-finite score, or an injected outage window returns None (the
+        caller admits with ``p_long = 0`` for all — FCFS order) and flips
+        ``self.degraded``; a later successful call heals the server back
+        to predictive SJF.  Never raises to the submitting client."""
+        if self.predictor is None or not self.policy_obj.uses_predictor \
+                or not prompts:
+            return None
+        probas = None
+        if self.faults is None or not self.faults.predictor_down(now):
+            try:
+                probas = np.asarray(
+                    self.predictor.proba_batch(prompts), float)
+                if not np.all(np.isfinite(probas)):
+                    probas = None                # NaN/inf scores: degrade
+            except Exception:
+                probas = None                    # predictor raised: degrade
+        if probas is None:
+            self.fault_stats["predictor_failures"] += 1
+            self.degraded = True
+            return None
+        self.degraded = False                    # predictor healed
+        return probas
+
     def submit(self, req: CompletionRequest, *, arrival: float = 0.0,
                true_output_tokens: Optional[int] = None,
                klass: str = "") -> int:
         """Admit one request.  ``true_output_tokens`` is the oracle ground
         truth (known to the simulator, NOT the scheduler unless policy is
-        sjf_oracle)."""
-        proba = None
-        if self.predictor is not None and self.policy_obj.uses_predictor:
-            proba = self.predictor.proba_batch([req.prompt])[0]
-        return self._admit(req, proba, arrival, true_output_tokens, klass)
+        sjf_oracle).  Returns the chosen replica, or -1 if the request
+        was shed at admission (queue overflow)."""
+        probas = self._predict_probas([req.prompt], arrival)
+        return self._admit(req, None if probas is None else probas[0],
+                           arrival, true_output_tokens, klass)
 
     def submit_many(self, reqs: Sequence[CompletionRequest], *,
                     arrivals: Optional[Sequence[float]] = None,
@@ -105,13 +180,13 @@ class ClairvoyantServer:
         Feature extraction + GBDT scoring run once over the whole batch
         (``Predictor.proba_batch``, the PR 1 vectorized admission fast
         path) instead of once per request — ~10x cheaper per request at
-        realistic burst sizes.  Returns the chosen replica per request.
+        realistic burst sizes.  Returns the chosen replica per request
+        (-1 for requests shed at admission).
         """
         n = len(reqs)
-        probas = None
-        if self.predictor is not None and self.policy_obj.uses_predictor \
-                and n:
-            probas = self.predictor.proba_batch([r.prompt for r in reqs])
+        probas = self._predict_probas(
+            [r.prompt for r in reqs],
+            0.0 if arrivals is None or not n else float(arrivals[0]))
         return [
             self._admit(
                 req,
@@ -129,6 +204,8 @@ class ClairvoyantServer:
                 self.rng, klass or "short")
         prompt_toks = approx_token_len(req.prompt)
         p_long = float(proba[2]) if proba is not None else 0.0
+        degraded = proba is None and self.degraded \
+            and self.policy_obj.uses_predictor
         r = Request(req_id=req.request_id, prompt=req.prompt, arrival=arrival,
                     p_long=p_long, klass=klass,
                     true_service=self.service_model.service(
@@ -136,17 +213,114 @@ class ClairvoyantServer:
                     tenant=req.tenant,
                     meta={"prompt_tokens": prompt_toks,
                           "output_tokens": true_output_tokens})
+        if degraded:
+            r.meta["degraded"] = True
+            self.fault_stats["degraded_admissions"] += 1
+        # bounded admission queue / injected overflow window: shed, never
+        # enqueue-and-forget
+        depth = sum(len(rep.queue) for rep in self.router.replicas)
+        if (self.max_queue_depth is not None
+                and depth >= self.max_queue_depth) \
+                or (self.faults is not None
+                    and self.faults.overflow_active(arrival)):
+            self.fault_stats["sheds"] += 1
+            self._finish(CompletionResponse(
+                request_id=req.request_id, text="", tokens_generated=0,
+                queue_wait_s=0.0, service_s=0.0, replica=-1,
+                p_long=p_long, klass=klass, status="shed",
+                error="admission queue overflow", degraded=degraded))
+            return -1
         self._inflight[req.request_id] = req
         self._oracle_tokens[req.request_id] = true_output_tokens
         return self.router.route(r, proba=proba, now=arrival)
 
+    # -------------------------------------------------------- terminal path
+    def _finish(self, resp: CompletionResponse) -> None:
+        """The single exit gate: every submitted request passes through
+        here exactly once (the no-lost-requests invariant — a duplicate
+        terminal response is a scheduler bug and raises)."""
+        prev = self._terminal.get(resp.request_id)
+        if prev is not None:
+            raise RuntimeError(
+                f"request {resp.request_id} already terminated "
+                f"({prev!r}); duplicate terminal status {resp.status!r}")
+        self._terminal[resp.request_id] = resp.status
+        self._inflight.pop(resp.request_id, None)
+        self.responses.append(resp)
+
+    def _maybe_shed(self, rep, req, now: float) -> bool:
+        """Deadline-budget load shedding at dispatch time: a request that
+        has not started and is already past its queue-wait budget is shed
+        with a terminal response (bounds the tail under overload)."""
+        if self.deadline_s is None or req.start is not None \
+                or (now - req.arrival) <= self.deadline_s:
+            return False
+        self.router.release(rep.replica_id, req)
+        self.fault_stats["sheds"] += 1
+        req.finish = now
+        self._finish(CompletionResponse(
+            request_id=req.req_id, text="", tokens_generated=0,
+            queue_wait_s=max(0.0, now - req.arrival), service_s=0.0,
+            replica=rep.replica_id, p_long=req.p_long, klass=req.klass,
+            status="shed", error="deadline budget exceeded before dispatch",
+            retries=req.meta.get("fault_retries", 0),
+            degraded=bool(req.meta.get("degraded"))))
+        return True
+
+    def _retry_or_fail(self, rep, req, now: float, exc: Exception,
+                       charge_backoff: bool = True) -> float:
+        """Shared fault epilogue for all drain loops: the popped request
+        either re-enters its queue (bounded retries, original arrival
+        preserved) or terminates with a ``failed`` response.  Returns the
+        (possibly backoff-advanced) clock."""
+        n = req.meta.get("fault_retries", 0) + 1
+        req.meta["fault_retries"] = n
+        self.router.record_failure(rep.replica_id, now)
+        if isinstance(exc, EngineCrash):
+            self.fault_stats["crashes"] += 1
+        elif isinstance(exc, TransientBackendError):
+            self.fault_stats["transients"] += 1
+        if n > self.retry.max_retries:
+            self.fault_stats["failures"] += 1
+            self.router.release(rep.replica_id, req)
+            start = req.start if req.start is not None else now
+            req.finish = now
+            self._finish(CompletionResponse(
+                request_id=req.req_id, text="", tokens_generated=0,
+                queue_wait_s=max(0.0, start - req.arrival),
+                service_s=max(0.0, now - start),
+                replica=rep.replica_id, p_long=req.p_long, klass=req.klass,
+                status="failed", error=f"{type(exc).__name__}: {exc}",
+                retries=n, degraded=bool(req.meta.get("degraded"))))
+            return now
+        self.fault_stats["retries"] += 1
+        self.fault_stats["requeues"] += 1
+        if charge_backoff:
+            now += self.retry.backoff(n - 1)
+        rep.queue.push_requeue(
+            req, req.meta.get("queue_key",
+                              req.meta.get("policy_key0", 0.0)),
+            reason="fault")
+        return now
+
     def cancel(self, request_id: int) -> bool:
         """Client disconnect: lazy-delete from whichever queue holds it; if
         it is mid-generation on a real engine, flag the fused loop to drain
-        at the next segment boundary."""
+        at the next segment boundary.  A queued cancel terminates the
+        request immediately with a ``cancelled`` response; a mid-flight
+        cancel terminates when the drain loop observes the eviction —
+        either way the request is never silently dropped."""
         for rep in self.router.replicas:
+            req = rep.queue._live.get(request_id)
             if rep.queue.cancel(request_id):
-                self._inflight.pop(request_id, None)
+                self.router.release(rep.replica_id, req)
+                self._finish(CompletionResponse(
+                    request_id=request_id, text="", tokens_generated=0,
+                    queue_wait_s=0.0, service_s=0.0,
+                    replica=rep.replica_id,
+                    p_long=req.p_long, klass=req.klass,
+                    status="cancelled", error="client disconnect (queued)",
+                    degraded=bool(req.meta.get("degraded"))))
                 return True
         for eng in self.engines:
             # mid-flight on a batched engine: flag the lane; the drain
@@ -186,28 +360,91 @@ class ClairvoyantServer:
         return self.responses
 
     def _drain_sim(self, rep, eng) -> None:
+        """Virtual-clock serial drain, exception-safe: every popped
+        request terminates through ``_finish`` (ok / shed / failed) or
+        re-enters the queue — injected faults (transient errors, stalls,
+        crash + repair) and organic engine exceptions both route through
+        ``_retry_or_fail``.  The loop always re-pops, so a requeued
+        request is served later in this same drain."""
         if self.policy_obj.preemptive:
             self._drain_sim_preemptive(rep, eng)
             return
+        inj = self.faults
+        rid = rep.replica_id
         t = eng.busy_until
         while True:
             req = rep.queue.pop(now=t)
             if req is None:
                 break
             t = max(t, req.arrival)
-            ttft, service = eng.execute(
-                t, req.meta["prompt_tokens"], req.meta["output_tokens"])
-            req.start, req.finish = t, t + service
+            if self._maybe_shed(rep, req, t):
+                continue
+            # injected transient backend error: fails this attempt before
+            # any service is rendered
+            if inj is not None:
+                spec = inj.transient_due(rid, t)
+                if spec is not None:
+                    t = self._retry_or_fail(rep, req, t,
+                                            TransientBackendError(
+                                                "injected transient "
+                                                "backend error"))
+                    continue
+            if req.start is None:
+                req.start = t                  # first dispatch
+            try:
+                ttft, service = self._sim_execute(eng, rid, t, req)
+            except FaultError as e:
+                # engine crash mid-service: the clock is already advanced
+                # to the end of the repair window by _sim_execute
+                t = self._retry_or_fail(rep, req, eng.busy_until, e,
+                                        charge_backoff=False)
+                continue
+            except Exception as e:             # organic engine bug
+                t = self._retry_or_fail(rep, req, t, e)
+                continue
             t += service
-            self.router.on_dispatch(rep.replica_id, req, t,
-                                    service_estimate=service)
-            self.responses.append(CompletionResponse(
+            req.finish = t
+            self.router.on_dispatch(rid, req, t, service_estimate=service)
+            self.router.record_success(rid, t)
+            retries = req.meta.get("fault_retries", 0)
+            self._finish(CompletionResponse(
                 request_id=req.req_id, text="",
                 tokens_generated=req.meta["output_tokens"],
                 queue_wait_s=req.start - req.arrival,
-                service_s=service, ttft_s=req.start - req.arrival + ttft,
-                promoted=req.promoted, replica=rep.replica_id,
-                p_long=req.p_long, klass=req.klass))
+                # a fault-requeued request reports time-in-service across
+                # the gaps so sojourn_s == finish - arrival stays exact
+                service_s=service if retries == 0 else t - req.start,
+                ttft_s=req.start - req.arrival + ttft,
+                promoted=req.promoted, replica=rid,
+                p_long=req.p_long, klass=req.klass, retries=retries,
+                degraded=bool(req.meta.get("degraded"))))
+
+    def _sim_execute(self, eng, rid: int, t: float, req) -> tuple:
+        """One virtual-time service attempt with fault injection.  Returns
+        ``(ttft, service)`` and advances the engine clock on success; on
+        an injected crash raises :class:`EngineCrash` with the engine
+        parked at the end of its repair window and the request's partial
+        progress recorded (work-conserving requeue: the next attempt only
+        serves the remaining work)."""
+        ptoks = req.meta["prompt_tokens"]
+        otoks = req.meta["output_tokens"]
+        full = eng.model.service(ptoks, otoks)
+        used = req.meta.get("sim_used_s", 0.0)
+        rem = max(full - used, 0.0)
+        inj = self.faults
+        if inj is not None:
+            rem *= inj.stall_factor(rid, t)    # straggler window
+            crash = inj.crash_between(rid, t, t + rem)
+            if crash is not None:
+                crash_t = max(t, crash.at)
+                req.meta["sim_used_s"] = used + (crash_t - t)
+                eng.busy_until = crash_t + crash.repair_s
+                raise EngineCrash("injected engine crash mid-service",
+                                  at=crash_t, repair_s=crash.repair_s)
+        ttft = eng.model.overhead_s + ptoks / eng.model.prefill_tok_per_s
+        eng.busy_until = t + rem
+        eng.served += 1
+        return ttft, rem
 
     def _drain_sim_preemptive(self, rep, eng) -> None:
         """Virtual-time drain under a preemptive policy: the replica's
@@ -244,7 +481,7 @@ class ClairvoyantServer:
             eng.served += 1
             self.router.on_dispatch(rep.replica_id, req, req.finish,
                                     service_estimate=service)
-            self.responses.append(CompletionResponse(
+            self._finish(CompletionResponse(
                 request_id=req.req_id, text="",
                 tokens_generated=req.meta["output_tokens"],
                 queue_wait_s=req.start - req.arrival,
@@ -253,7 +490,8 @@ class ClairvoyantServer:
                 service_s=req.finish - req.start,
                 ttft_s=req.start - req.arrival + ttft,
                 promoted=req.promoted, replica=rep.replica_id,
-                p_long=req.p_long, klass=req.klass))
+                p_long=req.p_long, klass=req.klass,
+                degraded=bool(req.meta.get("degraded"))))
 
     def _drain_real(self, rep, eng: RealEngine, max_new_tokens: int) -> None:
         """Serial wall-clock loop: pop -> tokenize -> fused decode.
@@ -281,6 +519,8 @@ class ClairvoyantServer:
             if req is None:
                 break
             t = max(t, req.arrival)
+            if self._maybe_shed(rep, req, t):
+                continue
             ids, n_total, resume = self._prepare_ids(req, eng,
                                                      max_new_tokens)
             n_new = max(1, n_total - len(resume))
@@ -317,10 +557,33 @@ class ClairvoyantServer:
 
             if req.start is None:
                 req.start = t                 # first dispatch
+            # injected transient backend error at dispatch time
+            if self.faults is not None:
+                spec = self.faults.transient_due(rep.replica_id, t)
+                if spec is not None:
+                    t = self._retry_or_fail(rep, req, t,
+                                            TransientBackendError(
+                                                "injected transient "
+                                                "backend error"))
+                    continue
             self._decoding[rep.replica_id] = req.req_id
+            wall_gen0 = _time.monotonic()
             try:
                 out = eng.generate(ids, max_new_tokens=n_new,
                                    cancel_cb=cancel_cb)
+            except Exception as e:
+                # engine crash mid-generation (injected at a segment
+                # boundary, or organic): the popped request must not be
+                # lost — charge the wall time burned, then requeue or
+                # fail through the shared epilogue.  Tokens decoded by
+                # the dead engine are gone (no resume credit).
+                elapsed = _time.monotonic() - wall_gen0
+                t += elapsed
+                if isinstance(e, EngineCrash):
+                    t += e.repair_s           # replica down for repair
+                eng.busy_until = t
+                t = self._retry_or_fail(rep, req, t, e)
+                continue
             finally:
                 self._decoding.pop(rep.replica_id, None)
             service = out["service_s"]
@@ -331,8 +594,19 @@ class ClairvoyantServer:
             if out.get("cancelled"):
                 if req.req_id in self._disconnected:
                     self._disconnected.discard(req.req_id)
-                    self._inflight.pop(req.req_id, None)
-                    continue                  # client disconnect: drop
+                    req.finish = t
+                    self._finish(CompletionResponse(
+                        request_id=req.req_id, text="",
+                        tokens_generated=len(tokens),
+                        queue_wait_s=req.start - req.arrival,
+                        service_s=used + service,
+                        ttft_s=req.start - req.arrival + req.meta["ttft_s"],
+                        promoted=req.promoted, replica=rep.replica_id,
+                        p_long=req.p_long, klass=req.klass,
+                        status="cancelled",
+                        error="client disconnect (mid-generation)",
+                        degraded=bool(req.meta.get("degraded"))))
+                    continue                  # client disconnect: drained
                 if len(tokens) >= n_total:
                     pass                      # done at the boundary anyway
                 else:
@@ -344,14 +618,17 @@ class ClairvoyantServer:
             req.finish = t
             self.router.on_dispatch(rep.replica_id, req, t,
                                     service_estimate=total_service)
-            self.responses.append(CompletionResponse(
+            self.router.record_success(rep.replica_id, t)
+            self._finish(CompletionResponse(
                 request_id=req.req_id, text="",
                 tokens_generated=len(tokens),
                 queue_wait_s=req.start - req.arrival,
                 service_s=total_service,
                 ttft_s=req.start - req.arrival + req.meta["ttft_s"],
                 promoted=req.promoted, replica=rep.replica_id,
-                p_long=req.p_long, klass=req.klass))
+                p_long=req.p_long, klass=req.klass,
+                retries=req.meta.get("fault_retries", 0),
+                degraded=bool(req.meta.get("degraded"))))
 
     def _drain_batched(self, rep, eng: BatchedRealEngine,
                        max_new_tokens: int) -> None:
@@ -380,41 +657,116 @@ class ClairvoyantServer:
 
         def source(k: int):
             items = []
-            for req in rep.queue.pop_many(k, now=now()):
-                ids, n_total, resume = self._prepare_ids(req, eng,
-                                                         max_new_tokens)
-                items.append({"req_id": req.req_id, "ids": ids,
-                              "max_new": max(1, n_total - len(resume)),
-                              "tenant": req.tenant,
-                              "meta": {"req": req, "resume": list(resume)}})
+            while len(items) < k:
+                got = rep.queue.pop_many(k - len(items), now=now())
+                if not got:
+                    break
+                for req in got:
+                    if self._maybe_shed(rep, req, now()):
+                        continue              # shed: pull a replacement
+                    ids, n_total, resume = self._prepare_ids(
+                        req, eng, max_new_tokens)
+                    items.append({"req_id": req.req_id, "ids": ids,
+                                  "max_new": max(1, n_total - len(resume)),
+                                  "tenant": req.tenant,
+                                  "meta": {"req": req,
+                                           "resume": list(resume)}})
             return items
 
         def cancel_check(state) -> bool:
             return state.req_id in self._disconnected
 
+        def requeue_or_fail(req, now_t) -> None:
+            """Crashed-lane victim: bounded retry with the original
+            arrival (and a resume prefix — re-prefill is work-conserving)
+            or a terminal ``failed`` response."""
+            self._retry_or_fail(rep, req, now_t, EngineCrash(
+                "injected lane crash"), charge_backoff=False)
+
         def on_finish(state, out):
             req = state.meta["req"]
+            tokens = state.meta["resume"] + out["tokens"]
+            if req.start is None:
+                req.start = max(out["admit_t"], req.arrival)
+            if out.get("crashed"):
+                # lane died at a segment boundary: keep the decoded prefix
+                # for the resume re-prefill, then retry or fail
+                req.meta["resume_tokens"] = tokens
+                requeue_or_fail(req, out["finish_t"])
+                return
             if out["cancelled"]:
                 self._disconnected.discard(req.req_id)
-                self._inflight.pop(req.req_id, None)
+                req.finish = max(out["finish_t"], req.start)
+                self._finish(CompletionResponse(
+                    request_id=req.req_id, text="",
+                    tokens_generated=len(tokens),
+                    queue_wait_s=req.start - req.arrival,
+                    service_s=req.finish - req.start,
+                    ttft_s=out["ttft_s"], promoted=req.promoted,
+                    replica=rep.replica_id, p_long=req.p_long,
+                    klass=req.klass, status="cancelled",
+                    error="client disconnect (mid-generation)",
+                    degraded=bool(req.meta.get("degraded"))))
                 return
-            tokens = state.meta["resume"] + out["tokens"]
-            req.start = max(out["admit_t"], req.arrival)
             req.finish = max(out["finish_t"], req.start)
             req.meta.setdefault("ttft_s", out["ttft_s"])
             self.router.on_dispatch(rep.replica_id, req, req.finish,
                                     service_estimate=out["service_s"])
-            self.responses.append(CompletionResponse(
+            self.router.record_success(rep.replica_id, req.finish)
+            self._finish(CompletionResponse(
                 request_id=req.req_id, text="",
                 tokens_generated=len(tokens),
                 queue_wait_s=req.start - req.arrival,
                 service_s=req.finish - req.start,
                 ttft_s=req.start - req.arrival + req.meta["ttft_s"],
                 promoted=req.promoted, replica=rep.replica_id,
-                p_long=req.p_long, klass=req.klass))
+                p_long=req.p_long, klass=req.klass,
+                retries=req.meta.get("fault_retries", 0),
+                degraded=bool(req.meta.get("degraded"))))
 
-        eng.run_lanes(source, on_finish, cancel_check=cancel_check,
-                      now_fn=now)
+        # exception-safe lane driving: a whole-engine crash raised from a
+        # segment boundary evicts every busy lane back into the queue
+        # (bounded per-request retries), and crash/requeue churn re-enters
+        # run_lanes until the queue truly drains.  The pass cap is a
+        # safety net — fault plans are finite, so it is never hit unless
+        # an engine raises unboundedly, in which case remaining requests
+        # terminate as failed instead of looping forever.
+        for _pass in range(64):
+            try:
+                eng.run_lanes(source, on_finish, cancel_check=cancel_check,
+                              now_fn=now)
+            except Exception as e:
+                t_err = now()
+                mgr = eng.lane_manager
+                if mgr is not None:
+                    for lane in list(mgr.busy_lanes()):
+                        st = mgr.evict(lane)
+                        victim = st.meta["req"]
+                        victim.meta["resume_tokens"] = \
+                            st.meta["resume"] + list(st.tokens)
+                        if victim.start is None:
+                            victim.start = max(st.admit_t, victim.arrival)
+                        self._retry_or_fail(rep, victim, t_err, e,
+                                            charge_backoff=False)
+                # items popped from the queue but not yet admitted to a
+                # lane would otherwise vanish with the engine's stack
+                for item in eng.take_pending():
+                    pend = item["meta"]["req"]
+                    self._retry_or_fail(rep, pend, t_err, e,
+                                        charge_backoff=False)
+            if not rep.queue.live():
+                break
+        else:
+            for req in list(rep.queue.live()):
+                rep.queue.remove(req.req_id)
+                req.finish = now()
+                self._finish(CompletionResponse(
+                    request_id=req.req_id, text="", tokens_generated=0,
+                    queue_wait_s=max(0.0, now() - req.arrival),
+                    service_s=0.0, replica=rep.replica_id,
+                    p_long=req.p_long, klass=req.klass, status="failed",
+                    error="engine unable to drain (retry passes exhausted)",
+                    retries=req.meta.get("fault_retries", 0)))
         eng.busy_until = now()
 
     def _prepare_ids(self, req, eng, max_new_tokens: int):
@@ -504,10 +856,19 @@ class ClairvoyantServer:
 
     # ---------------------------------------------------------------- stats
     def percentile(self, q: float, klass: Optional[str] = None,
-                   attr: str = "sojourn_s") -> float:
+                   attr: str = "sojourn_s",
+                   statuses: Sequence[str] = ("ok",)) -> float:
+        """Latency percentile over terminal responses.  By default only
+        ``ok`` responses count (shed/failed/cancelled requests have no
+        meaningful sojourn); pass ``statuses=None`` to pool everything."""
         vals = [getattr(r, attr) for r in self.responses
-                if klass is None or self._klass_of(r) == klass]
+                if (klass is None or self._klass_of(r) == klass)
+                and (statuses is None or r.status in statuses)]
         return float(np.percentile(vals, q)) if vals else float("nan")
+
+    @property
+    def ok_responses(self) -> List[CompletionResponse]:
+        return [r for r in self.responses if r.status == "ok"]
 
     def _klass_of(self, resp: CompletionResponse) -> str:
         if resp.klass:

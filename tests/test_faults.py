@@ -1,0 +1,598 @@
+"""Robustness suite (PR 6): fault injection + handling.
+
+Covers the no-lost-requests invariant under fuzzed chaos plans (sim,
+real, and batched drains), graceful predictor degradation, deadline
+shedding, retry/backoff + circuit-breaker units, the DES fault mirror's
+bitwise no-fault contract, and the compile-at-first-use native fallback.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import _native
+from repro.core.sim_fast import (RequestBatch, ServerFaults, dispatch_key,
+                                 simulate_grid, simulate_grid_faults)
+from repro.core.simulation import (ServiceDist, poisson_workload, simulate,
+                                   simulate_faulty)
+from repro.serving.faults import (CircuitBreaker, EngineCrash, FaultPlan,
+                                  FaultSpec, FaultInjector, RetryPolicy,
+                                  TransientBackendError, as_injector)
+from repro.serving.openai_api import STATUSES, CompletionRequest
+from repro.serving.server import ClairvoyantServer
+
+SHORT = ServiceDist(mean=3.5, std=0.8)
+LONG = ServiceDist(mean=8.9, std=2.0)
+
+
+# ----------------------------------------------------------- faults units
+def test_fault_spec_validates_kind():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor_strike")
+
+
+def test_fault_plan_random_is_deterministic():
+    kw = dict(horizon=200.0, crash_mtbf=30.0, transient_rate=1 / 20.0,
+              stall_mtbf=50.0, predictor_mtbf=80.0, n_replicas=3)
+    a, b = FaultPlan.random(seed=5, **kw), FaultPlan.random(seed=5, **kw)
+    assert a.specs == b.specs and len(a) > 0
+    assert FaultPlan.random(seed=6, **kw).specs != a.specs
+    assert all(s.at < 200.0 for s in a)
+
+
+def test_injector_consumes_one_shot_specs_once():
+    inj = FaultInjector(FaultPlan([
+        FaultSpec(kind="transient", at=1.0, replica=0),
+        FaultSpec(kind="crash", at=5.0, replica=-1, repair_s=2.0),
+    ]))
+    assert inj.transient_due(0, 0.5) is None        # not due yet
+    assert inj.transient_due(1, 2.0) is None        # wrong replica
+    assert inj.transient_due(0, 2.0) is not None
+    assert inj.transient_due(0, 2.0) is None        # consumed
+    assert inj.crash_between(2, 0.0, 4.0) is None   # trigger not in window
+    crash = inj.crash_between(2, 4.0, 6.0)          # replica -1 matches any
+    assert crash is not None and crash.repair_s == 2.0
+    assert inj.crash_between(2, 4.0, 6.0) is None
+    inj.reset()
+    assert inj.transient_due(0, 2.0) is not None    # reset re-arms
+
+
+def test_injector_windows_do_not_fire_out():
+    inj = FaultInjector(FaultPlan([
+        FaultSpec(kind="stall", at=2.0, duration=3.0, factor=4.0),
+        FaultSpec(kind="predictor_down", at=0.0, duration=1.0),
+        FaultSpec(kind="overflow", at=10.0, duration=1.0),
+    ]))
+    assert inj.stall_factor(0, 1.0) == 1.0
+    assert inj.stall_factor(0, 3.0) == 4.0
+    assert inj.stall_factor(0, 3.0) == 4.0          # windows are reusable
+    assert inj.stall_factor(0, 5.0) == 1.0          # half-open interval
+    assert inj.predictor_down(0.5) and not inj.predictor_down(1.5)
+    assert inj.overflow_active(10.5) and not inj.overflow_active(11.5)
+    assert as_injector(inj) is inj and as_injector(None) is None
+
+
+def test_retry_policy_backoff_grows_and_jitter_is_bounded():
+    rp = RetryPolicy(max_retries=3, base_s=0.1, multiplier=2.0,
+                     jitter=0.5, seed=1)
+    waits = [rp.backoff(a) for a in range(4)]
+    for a, w in enumerate(waits):
+        lo = 0.1 * 2.0 ** a
+        assert lo <= w < lo * 1.5
+    # deterministic for a given seed + call sequence
+    rp2 = RetryPolicy(max_retries=3, base_s=0.1, multiplier=2.0,
+                      jitter=0.5, seed=1)
+    assert waits == [rp2.backoff(a) for a in range(4)]
+
+
+def test_circuit_breaker_lifecycle():
+    br = CircuitBreaker(failure_threshold=2, recovery_s=10.0)
+    assert br.state == "closed" and br.allow(0.0)
+    br.record_failure(1.0)
+    assert br.state == "closed"                     # below threshold
+    br.record_failure(2.0)
+    assert br.state == "open"
+    assert not br.allow(5.0)                        # cooling down
+    assert br.allow(12.0) and br.state == "half_open"
+    assert not br.allow(12.0)                       # one probe at a time
+    br.record_failure(12.5)                         # probe failed: re-open
+    assert br.state == "open" and not br.allow(13.0)
+    assert br.allow(22.6) and br.state == "half_open"
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0 and br.allow(23.0)
+
+
+def test_breaker_would_allow_is_side_effect_free():
+    br = CircuitBreaker(failure_threshold=1, recovery_s=5.0)
+    br.record_failure(0.0)
+    for _ in range(3):                              # pure: never commits the
+        assert br.would_allow(6.0)                  # half-open probe slot
+    assert br.state == "open"
+    assert br.allow(6.0) and br.state == "half_open"
+    assert not br.would_allow(6.0)                  # probe slot committed
+
+
+# --------------------------------------- no-lost-requests chaos fuzz (sim)
+def _chaos_server(seed, n_replicas=1, deadline_s=None, max_queue_depth=None):
+    plan = FaultPlan.random(
+        seed=seed, horizon=150.0, crash_mtbf=25.0, crash_mttr=3.0,
+        transient_rate=1 / 20.0, stall_mtbf=40.0, stall_s=8.0,
+        predictor_mtbf=60.0, n_replicas=n_replicas)
+    return ClairvoyantServer(policy="sjf", predictor=None, fault_plan=plan,
+                             n_replicas=n_replicas, deadline_s=deadline_s,
+                             max_queue_depth=max_queue_depth, seed=seed)
+
+
+def test_chaos_fuzz_sim_no_lost_requests():
+    """Every submitted request terminates with exactly one terminal
+    response, for any seeded fault plan, replica count, and deadline."""
+    for trial in range(8):
+        rng = np.random.default_rng(trial)
+        n = int(rng.integers(20, 60))
+        server = _chaos_server(
+            seed=trial, n_replicas=1 + trial % 2,
+            deadline_s=None if trial % 3 else 40.0,
+            max_queue_depth=None if trial % 4 else 30)
+        ids = []
+        for i in range(n):
+            req = CompletionRequest(prompt=f"req {trial}:{i}")
+            ids.append(req.request_id)
+            server.submit(req, arrival=float(rng.uniform(0, 120)),
+                          true_output_tokens=int(rng.integers(20, 600)),
+                          klass="short" if rng.random() < 0.6 else "long")
+        # a couple of client disconnects while queued
+        server.cancel(ids[0])
+        server.cancel(ids[n // 2])
+        server.drain()
+        assert len(server.responses) == n, \
+            f"trial {trial}: lost {n - len(server.responses)} requests"
+        seen = [r.request_id for r in server.responses]
+        assert len(set(seen)) == n, f"trial {trial}: duplicate terminals"
+        assert set(seen) == set(ids)
+        assert all(r.status in STATUSES for r in server.responses)
+
+
+def test_duplicate_terminal_response_raises():
+    server = ClairvoyantServer(policy="sjf", predictor=None)
+    req = CompletionRequest(prompt="x")
+    server.submit(req, true_output_tokens=10, klass="short")
+    server.drain()
+    dup = copy.deepcopy(server.responses[0])
+    with pytest.raises(RuntimeError, match="already terminated"):
+        server._finish(dup)
+
+
+def test_mid_drain_raise_loses_no_request():
+    """Regression: an engine exception raised mid-drain (organic bug, not
+    an injected fault) must not drop the popped request."""
+    server = ClairvoyantServer(policy="sjf", predictor=None, seed=0)
+    orig = server._sim_execute
+    calls = {"n": 0}
+
+    def flaky(eng, rid, t, req):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("organic mid-drain bug")
+        return orig(eng, rid, t, req)
+
+    server._sim_execute = flaky
+    for i in range(5):
+        server.submit(CompletionRequest(prompt=f"r{i}"), arrival=0.0,
+                      true_output_tokens=30, klass="short")
+    server.drain()
+    assert len(server.responses) == 5
+    assert all(r.status == "ok" for r in server.responses)
+    assert sum(r.retries for r in server.responses) == 1
+    assert server.fault_stats["retries"] == 1
+
+
+def test_mid_drain_unrecoverable_fails_terminally():
+    """A persistently-raising engine exhausts retries: terminal ``failed``
+    responses with the error attached, never an exception to the caller."""
+    server = ClairvoyantServer(policy="sjf", predictor=None,
+                               retry=RetryPolicy(max_retries=1, seed=0))
+
+    def broken(eng, rid, t, req):
+        raise RuntimeError("backend is gone")
+
+    server._sim_execute = broken
+    for i in range(3):
+        server.submit(CompletionRequest(prompt=f"r{i}"),
+                      true_output_tokens=30, klass="short")
+    server.drain()
+    assert len(server.responses) == 3
+    assert all(r.status == "failed" for r in server.responses)
+    assert all("backend is gone" in r.error for r in server.responses)
+    assert all(r.retries == 2 for r in server.responses)  # 1 + 1 retry
+    assert server.fault_stats["failures"] == 3
+
+
+# ------------------------------------------------- injected fault handling
+def test_sim_crash_repair_is_work_conserving():
+    from repro.data.tokenizer import approx_token_len
+    plan = FaultPlan([FaultSpec(kind="crash", at=5.0, repair_s=2.0)])
+    server = ClairvoyantServer(policy="sjf", predictor=None,
+                               fault_plan=plan, seed=0)
+    req = CompletionRequest(prompt="steady request")
+    server.submit(req, arrival=0.0, true_output_tokens=600, klass="long")
+    server.drain()
+    (resp,) = server.responses
+    full = server.service_model.service(approx_token_len(req.prompt), 600)
+    assert full > 5.0                      # the crash lands mid-service
+    assert resp.status == "ok" and resp.retries == 1
+    # 5s served, 2s repair, then only the REMAINDER runs again
+    assert resp.sojourn_s == pytest.approx(full + 2.0)
+    assert server.fault_stats["crashes"] == 1
+    assert server.fault_stats["requeues"] == 1
+
+
+def test_sim_transient_retries_with_backoff():
+    plan = FaultPlan([FaultSpec(kind="transient", at=0.0)])
+    server = ClairvoyantServer(policy="sjf", predictor=None,
+                               fault_plan=plan, seed=0)
+    server.submit(CompletionRequest(prompt="x"), true_output_tokens=40,
+                  klass="short")
+    server.drain()
+    (resp,) = server.responses
+    assert resp.status == "ok" and resp.retries == 1
+    assert server.fault_stats["transients"] == 1
+    assert resp.queue_wait_s > 0.0         # the backoff delay is charged
+
+
+def test_deadline_shedding_bounds_the_queue():
+    server = ClairvoyantServer(policy="fcfs", predictor=None,
+                               deadline_s=8.0, seed=0)
+    for i in range(10):
+        server.submit(CompletionRequest(prompt=f"r{i}"), arrival=0.0,
+                      true_output_tokens=300, klass="long")
+    server.drain()
+    assert len(server.responses) == 10
+    shed = [r for r in server.responses if r.status == "shed"]
+    ok = [r for r in server.responses if r.status == "ok"]
+    assert shed and ok
+    assert all("deadline" in r.error for r in shed)
+    assert all(r.service_s == 0.0 and r.tokens_generated == 0 for r in shed)
+    # served requests all dispatched within budget
+    assert all(r.queue_wait_s <= 8.0 for r in ok)
+    assert server.fault_stats["sheds"] == len(shed)
+    # percentile() defaults to ok responses only; pooling needs statuses=None
+    assert np.isfinite(server.percentile(99))
+    assert server.percentile(99) == server.percentile(99, statuses=("ok",))
+    assert len(server.ok_responses) == len(ok)
+
+
+def test_queue_overflow_sheds_at_admission():
+    server = ClairvoyantServer(policy="sjf", predictor=None,
+                               max_queue_depth=2, seed=0)
+    placements = [
+        server.submit(CompletionRequest(prompt=f"r{i}"), arrival=0.0,
+                      true_output_tokens=40, klass="short")
+        for i in range(5)]
+    assert placements[:2] == [0, 0] and placements[2:] == [-1, -1, -1]
+    server.drain()
+    statuses = sorted(r.status for r in server.responses)
+    assert statuses == ["ok", "ok", "shed", "shed", "shed"]
+    assert all(r.error == "admission queue overflow"
+               for r in server.responses if r.status == "shed")
+
+
+def test_overflow_window_sheds_during_interval():
+    plan = FaultPlan([FaultSpec(kind="overflow", at=10.0, duration=5.0)])
+    server = ClairvoyantServer(policy="sjf", predictor=None,
+                               fault_plan=plan, seed=0)
+    a = server.submit(CompletionRequest(prompt="a"), arrival=9.0,
+                      true_output_tokens=40, klass="short")
+    b = server.submit(CompletionRequest(prompt="b"), arrival=12.0,
+                      true_output_tokens=40, klass="short")
+    c = server.submit(CompletionRequest(prompt="c"), arrival=16.0,
+                      true_output_tokens=40, klass="short")
+    assert (a, b, c) == (0, -1, 0)
+
+
+# --------------------------------------------- predictor degradation (FCFS)
+class _FlakyPredictor:
+    """Scores by prompt content; raises (or emits NaN) when failing."""
+
+    def __init__(self):
+        self.mode = "ok"                   # ok | raise | nan
+
+    def proba_batch(self, prompts):
+        if self.mode == "raise":
+            raise RuntimeError("predictor OOD crash")
+        out = np.array([[0.05, 0.05, 0.9] if "long" in p
+                        else [0.9, 0.05, 0.05] for p in prompts])
+        if self.mode == "nan":
+            out[0, 2] = np.nan
+        return out
+
+
+def _degradation_phase(server, tag):
+    prompts = [f"long {tag} 0", f"short {tag} 1", f"short {tag} 2",
+               f"long {tag} 3"]
+    toks = [500, 40, 40, 500]
+    klasses = ["long", "short", "short", "long"]
+    before = len(server.responses)
+    for p, tk, kl in zip(prompts, toks, klasses):
+        server.submit(CompletionRequest(prompt=p), arrival=0.0,
+                      true_output_tokens=tk, klass=kl)
+    server.drain()
+    return server.responses[before:]
+
+
+def test_predictor_outage_degrades_to_fcfs_then_recovers():
+    pred = _FlakyPredictor()
+    server = ClairvoyantServer(policy="sjf", predictor=pred, seed=0)
+
+    # phase 1: predictor down -> FCFS admission, no exception to callers
+    pred.mode = "raise"
+    phase1 = _degradation_phase(server, "p1")
+    assert server.degraded
+    assert server.fault_stats["predictor_failures"] >= 1
+    assert server.fault_stats["degraded_admissions"] == 4
+    assert all(r.degraded for r in phase1)
+    assert all(r.p_long == 0.0 for r in phase1)
+    # FCFS: completion follows submission order — the long head blocks
+    assert [r.klass for r in phase1] == ["long", "short", "short", "long"]
+
+    # phase 2: predictor healed -> SJF restored (shorts jump the longs)
+    pred.mode = "ok"
+    phase2 = _degradation_phase(server, "p2")
+    assert not server.degraded
+    assert not any(r.degraded for r in phase2)
+    assert [r.klass for r in phase2] == ["short", "short", "long", "long"]
+
+    # phase 3: non-finite scores degrade exactly like an exception
+    pred.mode = "nan"
+    phase3 = _degradation_phase(server, "p3")
+    assert server.degraded and all(r.degraded for r in phase3)
+    assert [r.klass for r in phase3] == ["long", "short", "short", "long"]
+
+
+def test_predictor_outage_window_from_fault_plan():
+    pred = _FlakyPredictor()
+    plan = FaultPlan([FaultSpec(kind="predictor_down", at=0.0,
+                                duration=10.0)])
+    server = ClairvoyantServer(policy="sjf", predictor=pred,
+                               fault_plan=plan, seed=0)
+    server.submit(CompletionRequest(prompt="long x"), arrival=5.0,
+                  true_output_tokens=500, klass="long")
+    assert server.degraded                  # inside the outage window
+    server.submit(CompletionRequest(prompt="long y"), arrival=15.0,
+                  true_output_tokens=500, klass="long")
+    assert not server.degraded              # window closed, healed
+    server.drain()
+    assert [r.degraded for r in server.responses] == [True, False]
+
+
+# ------------------------------------------------ real + batched chaos
+def test_real_engine_injected_crash_retries_and_completes():
+    from repro.configs import get_config
+    from repro.serving.engine import RealEngine
+
+    cfg = get_config("smollm-360m").reduced()
+    eng = RealEngine(cfg, max_len=64, segment_len=8)
+    plan = FaultPlan([FaultSpec(kind="crash", after_polls=2, replica=0,
+                                repair_s=0.02)])
+    server = ClairvoyantServer(policy="sjf_oracle", engines=[eng],
+                               fault_plan=plan, seed=0)
+    for i in range(3):
+        server.submit(CompletionRequest(prompt=f"real req {i}"),
+                      true_output_tokens=12, klass="short")
+    resp = server.drain(max_new_tokens=12)
+    assert len(resp) == 3
+    assert all(r.status == "ok" for r in resp)
+    assert all(r.tokens_generated == 12 for r in resp)
+    assert server.fault_stats["crashes"] == 1
+    assert sum(r.retries for r in resp) == 1
+
+
+def test_batched_lane_crash_resumes_work_conserving():
+    from repro.configs import get_config
+    from repro.serving.engine import BatchedRealEngine
+
+    cfg = get_config("smollm-360m").reduced()
+    eng = BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=2)
+    plan = FaultPlan([FaultSpec(kind="lane_crash", after_polls=1,
+                                replica=0)])
+    server = ClairvoyantServer(policy="sjf_oracle", engines=[eng],
+                               fault_plan=plan, seed=0)
+    for i in range(4):
+        server.submit(CompletionRequest(prompt=f"lane req {i}"),
+                      true_output_tokens=10, klass="short")
+    resp = server.drain(max_new_tokens=10)
+    assert len(resp) == 4
+    assert all(r.status == "ok" for r in resp)
+    assert server.fault_stats["crashes"] == 1
+    victims = [r for r in resp if r.retries == 1]
+    assert len(victims) == 1
+    # resume re-prefill is work-conserving: full token count delivered
+    assert victims[0].tokens_generated == 10
+
+
+def test_batched_whole_engine_crash_evicts_and_drains():
+    from repro.configs import get_config
+    from repro.serving.engine import BatchedRealEngine
+
+    cfg = get_config("smollm-360m").reduced()
+    eng = BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=2)
+    plan = FaultPlan([FaultSpec(kind="crash", after_polls=1, replica=0,
+                                repair_s=0.0)])
+    server = ClairvoyantServer(policy="sjf_oracle", engines=[eng],
+                               fault_plan=plan, seed=0)
+    for i in range(4):
+        server.submit(CompletionRequest(prompt=f"crash req {i}"),
+                      true_output_tokens=8, klass="short")
+    resp = server.drain(max_new_tokens=8)
+    assert len(resp) == 4
+    assert all(r.status == "ok" for r in resp)
+    assert server.fault_stats["crashes"] >= 1
+
+
+# --------------------------------------------------------- DES fault mirror
+def test_simulate_faulty_nofault_is_bitwise_trace_equal():
+    rng = np.random.default_rng(0)
+    for trial in range(12):
+        n = int(rng.integers(5, 150))
+        reqs = poisson_workload(np.random.default_rng(trial), n, 0.12,
+                                SHORT, LONG)
+        pol = ["fcfs", "sjf", "sjf_oracle"][trial % 3]
+        tau = [None, -1.0, 0.0, 4.0, 60.0][trial % 5]
+        a = simulate(copy.deepcopy(reqs), policy=pol, tau=tau)
+        b = simulate_faulty(copy.deepcopy(reqs), policy=pol, tau=tau)
+        assert b.shed == 0 and b.requeues == 0
+        assert a.promotions == b.promotions
+        ra = sorted(a.requests, key=lambda r: r.req_id)
+        rb = sorted(b.requests, key=lambda r: r.req_id)
+        for x, y in zip(ra, rb):
+            assert x.start == y.start and x.finish == y.finish \
+                and x.promoted == y.promoted, f"trial {trial} diverged"
+
+
+def test_simulate_grid_faults_nofault_matches_every_engine():
+    rng = np.random.default_rng(1)
+    n = 80
+    arr = np.sort(np.round(rng.exponential(1.0, n).cumsum(), 2))
+    svc = rng.uniform(0.5, 9.0, n)
+    key = dispatch_key("sjf", arr, np.round(rng.uniform(0, 1, n), 1), svc)
+    for engine in ("python", "auto"):
+        s0, f0, p0, m0 = simulate_grid(arr[None], svc[None], key[None],
+                                       (3.0,), engine=engine)
+        s1, f1, p1, m1, shed, rq = simulate_grid_faults(
+            arr[None], svc[None], key[None], (3.0,), ServerFaults())
+        assert np.array_equal(s0, s1) and np.array_equal(f0, f1)
+        assert np.array_equal(p0, p1) and np.array_equal(m0, m1)
+        assert not shed.any() and rq[0] == 0
+
+
+def test_server_faults_validates_windows():
+    with pytest.raises(ValueError):
+        ServerFaults(downs=((5.0, 3.0),))            # up <= down
+    with pytest.raises(ValueError):
+        ServerFaults(downs=((0.0, 5.0), (4.0, 8.0)))  # overlapping
+    with pytest.raises(ValueError):
+        ServerFaults(slowdowns=((0.0, 5.0, 0.5),))   # factor <= 1
+    f = ServerFaults.random(np.random.default_rng(0), 500.0, mtbf=50.0,
+                            mttr=5.0, stall_mtbf=100.0)
+    ServerFaults(downs=f.downs, slowdowns=f.slowdowns)  # self-consistent
+    assert ServerFaults.random(np.random.default_rng(0), 500.0).downs == ()
+
+
+def test_des_crash_requeue_is_work_conserving():
+    arr = np.array([0.0, 0.1])
+    svc = np.array([4.0, 1.0])
+    key = dispatch_key("fcfs", arr, svc * 0, svc)
+    flt = ServerFaults(downs=((2.0, 5.0),))
+    s, f, p, m, shed, rq = simulate_grid_faults(
+        arr[None], svc[None], key[None], (None,), flt)
+    # req0 serves 2s, crashes, resumes at t=5 for the REMAINING 2s
+    assert rq[0] == 1 and not shed.any()
+    assert f[0][0] == pytest.approx(7.0) and f[0][1] == pytest.approx(8.0)
+    assert s[0][0] == 0.0                   # start records FIRST dispatch
+
+
+def test_des_stall_window_stretches_service():
+    arr = np.array([0.0])
+    svc = np.array([4.0])
+    key = dispatch_key("fcfs", arr, svc * 0, svc)
+    flt = ServerFaults(slowdowns=((0.0, 2.0, 2.0),))
+    _, f, _, _, _, _ = simulate_grid_faults(
+        arr[None], svc[None], key[None], (None,), flt)
+    # 2s wall inside the 2x window = 1s of work; 3s more outside
+    assert f[0][0] == pytest.approx(5.0)
+
+
+def test_des_deadline_sheds_only_undispatched_work():
+    arr = np.array([0.0, 0.1, 0.2])
+    svc = np.array([10.0, 1.0, 1.0])
+    key = dispatch_key("fcfs", arr, svc * 0, svc)
+    s, f, p, m, shed, rq = simulate_grid_faults(
+        arr[None], svc[None], key[None], (None,), ServerFaults(),
+        deadline=5.0)
+    assert shed[0].tolist() == [False, True, True]
+    assert np.isnan(f[0][1]) and np.isnan(f[0][2])
+    # a crashed-and-requeued request is NOT shed (service already started)
+    flt = ServerFaults(downs=((2.0, 9.0),))
+    s, f, p, m, shed, rq = simulate_grid_faults(
+        arr[None][:, :1], svc[None][:, :1], key[None][:, :1], (None,),
+        flt, deadline=5.0)
+    assert not shed.any() and rq[0] == 1
+    assert f[0][0] == pytest.approx(17.0)   # 2 + 7 down + 8 remaining
+
+
+def test_simulate_faulty_percentiles_exclude_shed():
+    reqs = poisson_workload(np.random.default_rng(2), 200, 0.3, SHORT, LONG)
+    res = simulate_faulty(reqs, policy="sjf", tau=None,
+                          faults=ServerFaults(downs=((10.0, 30.0),)),
+                          deadline=25.0)
+    assert res.shed > 0 and res.served == 200 - res.shed
+    assert np.isfinite(res.percentile(99))
+    assert all(r.meta.get("shed") for r in res.requests
+               if r.finish is not None and np.isnan(r.finish))
+
+
+def test_sweep_faults_grid_shapes_and_nofault_column():
+    from repro.core.sweep import FAULT_METRICS, sweep_faults
+    conditions = [("fcfs", None), ("sjf", 10.5)]
+    res = sweep_faults(conditions, mtbfs=(float("inf"), 60.0),
+                       repairs=(4.0, 12.0), seeds=(0, 1), n=200,
+                       short=SHORT, long=LONG, rho=0.74)
+    assert res.conditions == (("fcfs", None), ("sjf", 10.5))
+    for m in FAULT_METRICS:
+        assert res.metric(m).shape == (2, 2, 2, 2)
+    # the mtbf=inf column is repair-invariant (no crash windows exist)
+    np.testing.assert_array_equal(res.metric("short_p50")[:, 0, 0],
+                                  res.metric("short_p50")[:, 0, 1])
+    assert (res.metric("requeues")[:, 0] == 0).all()
+    assert (res.metric("requeues")[:, 1] > 0).any()
+    assert (res.metric("goodput") > 0).all()
+    # faults hurt: faulted mean sojourn >= the no-fault column's
+    assert (res.metric("mean_sojourn")[:, 1, 1]
+            >= res.metric("mean_sojourn")[:, 0, 1]).all()
+
+
+# ------------------------------------------------- native compile fallback
+def test_native_fallback_numpy_scorer_is_bitwise_equal(monkeypatch):
+    from repro.core.ensemble_pack import pack_ensemble
+    from repro.core.gbdt import GBDTParams, train_gbdt
+    params = GBDTParams(num_rounds=6, max_depth=3, n_classes=3)
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 3, 400)
+    X = rng.normal(0, 1, (400, 9)).astype(np.float32)
+    X[:, 0] += y * 1.3
+    model = train_gbdt(X, y, params)
+    packed = pack_ensemble(model)
+    dense = model.predict_margin_dense(X)
+    monkeypatch.setitem(_native._cache, "gbdt", None)  # "no C compiler"
+    assert _native.native_scorer() is None
+    np.testing.assert_array_equal(packed.predict_margin(X), dense)
+
+
+def test_native_fallback_heapq_des_is_bitwise_equal(monkeypatch):
+    rng = np.random.default_rng(3)
+    n = 120
+    arr = np.sort(np.round(rng.exponential(0.8, n).cumsum(), 2))
+    svc = rng.uniform(0.5, 9.0, n)
+    key = dispatch_key("sjf", arr, np.round(rng.uniform(0, 1, n), 1), svc)
+    want = simulate_grid(arr[None], svc[None], key[None], (5.0,),
+                         engine="python")
+    monkeypatch.setitem(_native._cache, "des", None)   # "no C compiler"
+    assert _native.native_des() is None
+    got = simulate_grid(arr[None], svc[None], key[None], (5.0,),
+                        engine="auto")                 # silently degrades
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    with pytest.raises(RuntimeError):                  # explicit native: loud
+        simulate_grid(arr[None], svc[None], key[None], (5.0,),
+                      engine="native")
+
+
+def test_compile_failure_degrades_to_none(monkeypatch):
+    """A compiler failure at first use caches None — every consumer sees
+    the fallback, nothing raises."""
+    monkeypatch.setattr(_native, "_cache", {})
+    monkeypatch.setattr(_native, "_compile_lib", lambda *a, **k: None)
+    assert _native.native_scorer() is None
+    assert _native.native_des() is None
+    assert _native.native_des_preempt() is None
+    assert "des" in _native._cache                     # cached, not retried

@@ -121,3 +121,87 @@ def test_router_accepts_policy_instances():
     assert all(r.queue.policy == "srpt" for r in router.replicas)
     router.route(_req(0))
     assert router.stats["routed"] == 1
+
+
+def test_fail_replica_preserves_arrivals_and_excludes_dead():
+    """PR 6 robustness: drained requests keep their ORIGINAL arrival time
+    (sojourn accounting spans the failover) and never land back on the
+    dead replica."""
+    router = PredictiveRouter(n_replicas=3)
+    reqs = [_req(i, arrival=0.5 * i) for i in range(9)]
+    for r in reqs:
+        router.route(r, now=r.arrival)
+    arrivals = {r.req_id: r.arrival for r in reqs}
+    drained = router.fail_replica(0, now=10.0)
+    assert drained
+    for r in drained:
+        assert r.arrival == arrivals[r.req_id]
+    assert router.queue_lengths()[0] == 0
+    alive = {r.req_id
+             for rep in router.replicas[1:] for r in rep.queue.waiting()}
+    assert {r.req_id for r in reqs} == alive
+    # subsequent routing also skips the dead replica
+    for i in range(20, 26):
+        assert router.route(_req(i)) != 0
+
+
+def test_breaker_opens_and_reroutes_then_probe_recloses():
+    """Circuit-breaker lifecycle through the router: repeated failures
+    open replica 0's breaker, traffic flows to replica 1 during cooldown,
+    then exactly one half-open probe re-admits and success re-closes."""
+    from repro.serving.faults import CircuitBreaker
+
+    router = PredictiveRouter(
+        n_replicas=2, breaker=CircuitBreaker(failure_threshold=2,
+                                             recovery_s=30.0))
+    # per-replica clones: tripping replica 0 must not affect replica 1
+    assert router.replicas[0].breaker is not router.replicas[1].breaker
+    router.record_failure(0, now=0.0)
+    assert router.eligible(0, now=0.0)       # below threshold
+    router.record_failure(0, now=1.0)
+    assert router.replicas[0].breaker.state == "open"
+    assert not router.eligible(0, now=5.0)
+    assert router.eligible(1, now=5.0)
+    assert router.stats["breaker_opens"] == 1
+    # cooldown: everything routes to replica 1
+    for i in range(4):
+        assert router.route(_req(i), now=5.0 + i) == 1
+    # eligibility scans during cooldown never consumed the probe slot
+    after = 31.0
+    assert router.eligible(0, now=after)
+    assert router.replicas[0].breaker.state == "open"
+    # first routed request past recovery_s IS the committed probe
+    probe_rep = router.route(_req(10), now=after)
+    assert probe_rep == 0                    # replica 1 carries 4 reqs
+    assert router.replicas[0].breaker.state == "half_open"
+    # while the probe is in flight, no second request is admitted there
+    assert not router.eligible(0, now=after)
+    assert router.route(_req(11), now=after) == 1
+    router.record_success(0)
+    assert router.stats["breaker_probes"] == 1
+    assert router.replicas[0].breaker.state == "closed"
+    assert router.eligible(0, now=after)
+
+
+def test_on_engine_failure_fails_over_or_requeues_solo():
+    from repro.serving.faults import CircuitBreaker
+
+    # two replicas: the failed request moves to the healthy one
+    router = PredictiveRouter(n_replicas=2)
+    req = _req(0, arrival=1.0)
+    rep = router.route(req, now=1.0)
+    got = router.replicas[rep].queue.pop(now=1.0)
+    router.on_dispatch(rep, got, now=1.0)
+    new_rep = router.on_engine_failure(rep, got, now=2.0)
+    assert new_rep == 1 - rep
+    assert got.meta["failed_over"] and got.arrival == 1.0
+    assert router.stats["failed_over"] == 1
+    # solo replica: nowhere to fail over -> requeued in place, not lost
+    solo = PredictiveRouter(n_replicas=1,
+                            breaker=CircuitBreaker(failure_threshold=100))
+    req2 = _req(0, arrival=0.0)
+    solo.route(req2, now=0.0)
+    got2 = solo.replicas[0].queue.pop(now=0.0)
+    solo.on_dispatch(0, got2, now=0.0)
+    assert solo.on_engine_failure(0, got2, now=1.0) == 0
+    assert len(solo.replicas[0].queue) == 1

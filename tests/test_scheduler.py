@@ -292,7 +292,7 @@ def test_promotion_skips_tombstoned_fifo_head():
     assert q.pop(now=10.2).req_id == 2
     assert q.pop(now=10.4) is None
     assert q.stats == {"promotions": 1, "cancellations": 1, "dispatched": 2,
-                       "preemptions": 0}
+                       "preemptions": 0, "requeues": 0}
 
 
 def test_conservation_every_request_dispatched_once():

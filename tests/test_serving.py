@@ -80,9 +80,16 @@ def test_disconnect_cancellation(predictor):
     assert server.cancel(ids[0]) and server.cancel(ids[-1])
     assert not server.cancel(ids[0])        # double-cancel is a no-op
     resp = server.drain()
-    served = {r.request_id for r in resp}
+    # PR 6: cancelled requests now get a terminal "cancelled" response
+    # instead of vanishing — no request is ever lost
+    assert len(resp) == 8
+    served = {r.request_id for r in resp if r.status == "ok"}
     assert ids[0] not in served and ids[-1] not in served
     assert len(served) == 6
+    by_id = {r.request_id: r for r in resp}
+    for rid in (ids[0], ids[-1]):
+        assert by_id[rid].status == "cancelled"
+        assert "disconnect" in by_id[rid].error
 
 
 def test_router_jspw_balances_predicted_work():
