@@ -17,7 +17,9 @@ tracked across PRs:
   policy x lane-count x KV-budget DES grid);
 * ``faults`` -> ``BENCH_faults.json`` (fault-injection degradation
   curves: SJF-vs-FCFS short-P50 and goodput across crash-MTBF x repair
-  grids, overload shedding P99 bound, serving-layer chaos drain).
+  grids, overload shedding P99 bound, serving-layer chaos drain);
+* ``sidecar`` -> ``BENCH_sidecar.json`` (loopback HTTP/SSE: streaming
+  TTFT overhead vs in-process, client-observed SJF-vs-FCFS short P50).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -38,13 +40,14 @@ BENCH_JSONS = {
     "policies": os.path.join(_ROOT, "BENCH_policies.json"),
     "batching": os.path.join(_ROOT, "BENCH_batching.json"),
     "faults": os.path.join(_ROOT, "BENCH_faults.json"),
+    "sidecar": os.path.join(_ROOT, "BENCH_sidecar.json"),
 }
 
 
 def main() -> None:
     from benchmarks import (batching_bench, faults_bench, fig3_rho_sweep,
                             policies_bench, predictor_latency, serve_bench,
-                            sim_bench, table1_service_stats,
+                            sidecar_bench, sim_bench, table1_service_stats,
                             table2_dataset_stats, table4_ablation,
                             table5_ranking, table6_cross, table7_baselines,
                             table8_burst, table9_tau)
@@ -65,6 +68,7 @@ def main() -> None:
         "policies": policies_bench.run,
         "batching": batching_bench.run,
         "faults": faults_bench.run,
+        "sidecar": sidecar_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

@@ -1,0 +1,178 @@
+"""Wire-level sidecar benchmark (writes ``BENCH_sidecar.json``).
+
+Two questions the HTTP/SSE sidecar must answer before it can claim to
+be a faithful deployment of the paper's proxy:
+
+* **What does the wire cost?** — streaming TTFT measured by a loopback
+  HTTP client (connect -> POST -> first SSE delta byte) vs the same
+  backend awaited in-process (``backend.generate`` ttft).  The
+  acceptance bar: wire TTFT <= 2x in-process (the envelope adds
+  connection setup, HTTP parse, admission, dispatch hop, and SSE
+  framing — it must not add a queue's worth of latency).
+* **Does the scheduling win survive the wire?** — an 80-request
+  short/long burst served twice through real loopback HTTP under
+  ``sjf_oracle`` vs ``fcfs`` (same seeded workload, same arrival
+  pattern, 1 replica).  Client-observed short-class P50 sojourn must
+  keep the HoL-mitigation win end to end: socket -> parse -> admission
+  -> SJF queue -> dispatch -> SSE out.
+
+    PYTHONPATH=src python -m benchmarks.run sidecar
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+TTFT_REPS = 20
+BURST_N = 80
+TIME_SCALE = 0.004                      # burst: wall s per virtual s
+SHORT_TOKS, LONG_TOKS = 16, 240
+
+
+def _ttft_model():
+    from repro.serving.service_time import ServiceTimeModel
+    # decode fast / overhead visible: each request is ~40 ms wall, with
+    # a ~25 ms prefill so the TTFT being compared is not measurement noise
+    return ServiceTimeModel(prefill_tok_per_s=8000.0,
+                            decode_tok_per_s=2000.0, overhead_s=0.02)
+
+
+def _make_sidecar(policy, model, time_scale, n_replicas=1):
+    from repro.serving.backends import SimTextBackend
+    from repro.serving.http_sidecar import Sidecar
+    from repro.serving.server import ClairvoyantServer
+    backends = [SimTextBackend(model, replica_id=i, time_scale=time_scale)
+                for i in range(n_replicas)]
+    server = ClairvoyantServer(policy=policy, tau=None, engines=backends,
+                               service_model=model,
+                               deadline_mode="sojourn", seed=0)
+    return Sidecar(server, port=0, max_inflight=BURST_N + 8)
+
+
+async def _stream_once(port, body):
+    """POST one streaming request; returns (ttft_s, done_s) measured
+    from just before connect to first delta frame / [DONE]."""
+    t0 = time.monotonic()
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    payload = json.dumps(body).encode()
+    writer.write((
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: bench\r\n"
+        "Content-Type: application/json\r\n"
+        f"Content-Length: {len(payload)}\r\nConnection: close\r\n\r\n"
+    ).encode() + payload)
+    await writer.drain()
+    ttft = None
+    buf = b""
+    while b"data: [DONE]" not in buf:
+        chunk = await reader.read(4096)
+        if not chunk:
+            break
+        buf += chunk
+        if ttft is None and b'"content"' in buf:
+            ttft = time.monotonic() - t0
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionError, OSError):
+        pass
+    return ttft, time.monotonic() - t0
+
+
+def _bench_ttft(result: dict) -> None:
+    from repro.serving.backends import SimTextBackend
+    model = _ttft_model()
+    prompt = "measure the first token latency of this request"
+    body = {"prompt": prompt, "max_tokens": 32, "stream": True,
+            "output_tokens": 32}
+
+    async def run():
+        # in-process floor: await the backend directly, no wire
+        be = SimTextBackend(model, time_scale=1.0)
+        direct = []
+        for _ in range(TTFT_REPS):
+            out = await be.generate(prompt, max_new_tokens=32)
+            direct.append(out["ttft_s"])
+        sc = _make_sidecar("fcfs", model, time_scale=1.0)
+        await sc.start()
+        try:
+            await _stream_once(sc.port, body)        # warm-up
+            wire = []
+            for _ in range(TTFT_REPS):
+                ttft, _ = await _stream_once(sc.port, body)
+                wire.append(ttft)
+        finally:
+            await sc.shutdown(drain_s=1.0)
+        return float(np.median(direct)), float(np.median(wire))
+
+    d_med, w_med = asyncio.run(run())
+    ratio = w_med / d_med
+    result["ttft_inprocess_ms"] = d_med * 1e3
+    result["ttft_wire_ms"] = w_med * 1e3
+    result["ttft_wire_overhead_x"] = ratio
+    result["ttft_wire_overhead_ok"] = bool(ratio <= 2.0)
+    emit("sidecar_ttft_wire", w_med * 1e6,
+         f"inproc={d_med*1e3:.1f}ms overhead={ratio:.2f}x (bar: <=2x)")
+
+
+async def _burst(policy, model, seed=0):
+    """Fire the seeded short/long burst at a fresh sidecar; returns
+    per-class client-observed sojourn arrays."""
+    rng = np.random.default_rng(seed)
+    kinds = rng.random(BURST_N) < 0.6                # 60% short
+    sc = _make_sidecar(policy, model, TIME_SCALE)
+    await sc.start()
+
+    async def one(i):
+        await asyncio.sleep(float(rng.uniform(0, 0.01)))
+        otoks = SHORT_TOKS if kinds[i] else LONG_TOKS
+        t0 = time.monotonic()
+        await _stream_once(sc.port, {
+            "prompt": f"burst request {i}", "max_tokens": 512,
+            "output_tokens": int(otoks), "stream": True})
+        return time.monotonic() - t0
+
+    try:
+        sojourn = np.array(await asyncio.gather(
+            *[one(i) for i in range(BURST_N)]))
+    finally:
+        await sc.shutdown(drain_s=5.0)
+    assert len(sc.server._terminal) == BURST_N       # nothing lost
+    return sojourn[kinds], sojourn[~kinds]
+
+
+def _bench_sjf_win(result: dict) -> None:
+    from repro.serving.service_time import ServiceTimeModel
+    model = ServiceTimeModel(prefill_tok_per_s=8000.0,
+                             decode_tok_per_s=60.0)
+    t0 = time.time()
+    s_sjf, l_sjf = asyncio.run(_burst("sjf_oracle", model))
+    s_fcfs, l_fcfs = asyncio.run(_burst("fcfs", model))
+    p50_sjf = float(np.percentile(s_sjf, 50))
+    p50_fcfs = float(np.percentile(s_fcfs, 50))
+    result["wire_short_p50_sjf_s"] = p50_sjf
+    result["wire_short_p50_fcfs_s"] = p50_fcfs
+    result["wire_short_p50_speedup"] = p50_fcfs / p50_sjf
+    result["wire_long_p50_sjf_s"] = float(np.percentile(l_sjf, 50))
+    result["wire_long_p50_fcfs_s"] = float(np.percentile(l_fcfs, 50))
+    result["wire_sjf_win_ok"] = bool(p50_sjf < p50_fcfs)
+    emit("sidecar_sjf_short_p50", p50_sjf * 1e6,
+         f"fcfs={p50_fcfs*1e3:.0f}ms win={p50_fcfs/p50_sjf:.2f}x "
+         f"burst={BURST_N} wall={time.time()-t0:.1f}s")
+
+
+def run() -> dict:
+    result: dict = {"ttft_reps": TTFT_REPS, "burst_n": BURST_N,
+                    "time_scale": TIME_SCALE}
+    _bench_ttft(result)
+    _bench_sjf_win(result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,14 +1,27 @@
-"""End-to-end driver: serve a (small, real) model with batched requests
-through the Clairvoyant sidecar — deliverable (b)'s serving scenario.
+"""End-to-end driver: serve requests through the Clairvoyant sidecar.
 
-    PYTHONPATH=src python examples/serve_sidecar.py
+Two modes:
 
-A reduced smollm backbone actually decodes each request on CPU (RealEngine);
-admission ordering comes from the trained predictor + SJF queue.  Shows the
-paper's n=8 dispatch-order result with real token generation, then a larger
-simulated-time batch for the latency stats.
+    PYTHONPATH=src python examples/serve_sidecar.py            # in-process
+    PYTHONPATH=src python examples/serve_sidecar.py --http     # over the wire
+
+**In-process** (default): a reduced smollm backbone actually decodes each
+request on CPU (RealEngine); admission ordering comes from the trained
+predictor + SJF queue.  Shows the paper's n=8 dispatch-order result with
+real token generation, then a larger simulated-time batch for the
+latency stats.
+
+**HTTP** (``--http``): boots the asyncio HTTP/SSE sidecar on a loopback
+port, fires an asyncio client pool of streaming chat-completion requests
+at it (predictor-scored SJF admission, virtual-time sim backends), and
+reports *client-observed* wire TTFT and per-class P50 sojourn for SJF vs
+FCFS — the paper's HoL-mitigation win measured end to end through a real
+socket.
 """
 
+import argparse
+import asyncio
+import json
 import time
 
 import numpy as np
@@ -24,11 +37,11 @@ from repro.serving.openai_api import CompletionRequest
 from repro.serving.server import ClairvoyantServer
 
 
-def main():
+def main_inprocess(args):
     print("training predictor...")
     train = sample_dataset("sharegpt", n=2400, seed=0, balanced=True)
     pred = Predictor.train(train.prompts, train.lengths,
-                           GBDTParams(num_rounds=80))
+                           GBDTParams(num_rounds=args.rounds))
 
     # --- real decode through the SJF queue (n=8, 4 short + 4 long) --------
     cfg = get_config("smollm-360m").reduced()
@@ -79,6 +92,107 @@ def main():
         print(f"{policy}: short P50 sojourn {results[policy]:.1f}s")
     print(f"SJF short-P50 reduction: "
           f"{100*(1-results['sjf']/results['fcfs']):.0f}%")
+
+
+# ------------------------------------------------------------ HTTP mode
+async def _stream_request(port, body):
+    """One raw streaming chat completion; returns (wire_ttft_s, sojourn_s)
+    measured from just before connect."""
+    t0 = time.monotonic()
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    payload = json.dumps(body).encode()
+    writer.write((
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: example\r\n"
+        "Content-Type: application/json\r\n"
+        f"Content-Length: {len(payload)}\r\nConnection: close\r\n\r\n"
+    ).encode() + payload)
+    await writer.drain()
+    ttft, buf = None, b""
+    while b"data: [DONE]" not in buf:
+        chunk = await reader.read(4096)
+        if not chunk:
+            break
+        buf += chunk
+        if ttft is None and b'"content"' in buf:
+            ttft = time.monotonic() - t0
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionError, OSError):
+        pass
+    return ttft, time.monotonic() - t0
+
+
+async def _wire_burst(policy, pred, ds, time_scale, n_replicas):
+    from repro.serving.backends import SimTextBackend
+    from repro.serving.http_sidecar import Sidecar
+    from repro.serving.service_time import ServiceTimeModel
+    model = ServiceTimeModel(prefill_tok_per_s=8000.0,
+                             decode_tok_per_s=60.0)
+    backends = [SimTextBackend(model, replica_id=i, time_scale=time_scale)
+                for i in range(n_replicas)]
+    server = ClairvoyantServer(policy=policy, tau=None, predictor=pred,
+                               engines=backends, service_model=model,
+                               deadline_mode="sojourn", seed=0)
+    sc = Sidecar(server, port=0)
+    await sc.start()
+    rng = np.random.default_rng(4)
+    klasses = [("short", "medium", "long")[int(c)] for c in ds.classes]
+
+    async def one(i):
+        await asyncio.sleep(float(rng.uniform(0, 0.02)))
+        return await _stream_request(sc.port, {
+            "prompt": ds.prompts[i], "max_tokens": 2048,
+            "output_tokens": int(ds.lengths[i]), "stream": True})
+
+    try:
+        out = await asyncio.gather(*[one(i) for i in range(len(ds))])
+    finally:
+        await sc.shutdown(drain_s=10.0)
+    assert len(sc.server._terminal) == len(ds), "lost requests on the wire"
+    ttft = np.array([t for t, _ in out])
+    sojourn = np.array([s for _, s in out])
+    return {"ttft": ttft, "sojourn": sojourn,
+            "short": np.array([k == "short" for k in klasses])}
+
+
+def main_http(args):
+    print("training predictor...")
+    train = sample_dataset("sharegpt", n=2400, seed=0, balanced=True)
+    pred = Predictor.train(train.prompts, train.lengths,
+                           GBDTParams(num_rounds=args.rounds))
+    ds = sample_dataset("sharegpt", n=args.requests, seed=2)
+    print(f"firing {args.requests} streaming requests over loopback HTTP "
+          f"({args.replicas} replica(s), time_scale={args.time_scale})...")
+    results = {}
+    for policy in ("fcfs", "sjf"):
+        r = asyncio.run(_wire_burst(policy, pred, ds, args.time_scale,
+                                    args.replicas))
+        short, soj = r["short"], r["sojourn"]
+        results[policy] = np.percentile(soj[short], 50)
+        print(f"{policy}: wire TTFT P50 "
+              f"{np.percentile(r['ttft'], 50)*1e3:.0f} ms | "
+              f"short P50 {np.percentile(soj[short], 50)*1e3:.0f} ms "
+              f"P95 {np.percentile(soj[short], 95)*1e3:.0f} ms | "
+              f"long P50 {np.percentile(soj[~short], 50)*1e3:.0f} ms")
+    print(f"SJF short-P50 reduction over the wire: "
+          f"{100*(1-results['sjf']/results['fcfs']):.0f}%")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--http", action="store_true",
+                    help="serve over loopback HTTP/SSE instead of "
+                         "in-process")
+    ap.add_argument("--requests", type=int, default=80)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--rounds", type=int, default=80)
+    ap.add_argument("--time-scale", type=float, default=0.004)
+    args = ap.parse_args()
+    if args.http:
+        main_http(args)
+    else:
+        main_inprocess(args)
 
 
 if __name__ == "__main__":

@@ -22,7 +22,8 @@ echo "== assert-stripped import check (python -O) =="
 # exceptions, so the hot modules have to import and resolve cleanly
 python -O -c "import repro.core.sim_fast, repro.core.policy; \
 repro.core.policy.get_policy('sjf'); \
-import repro.core.sweep, repro.core.scheduler, repro.serving.batching"
+import repro.core.sweep, repro.core.scheduler, repro.serving.batching; \
+import repro.serving.http_sidecar, repro.serving.backends"
 
 echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
@@ -60,6 +61,87 @@ print(f"chaos smoke OK: {n} requests, statuses "
       f"fault_stats {server.fault_stats}")
 PY
 
+echo "== sidecar wire smoke (loopback HTTP/SSE, fixed seed) =="
+# boots the asyncio sidecar on a loopback port and exercises the wire
+# envelope: streaming SSE, non-streaming JSON, a rate-limit 429, and a
+# client disconnect -> cancelled terminal; fails on leaked asyncio tasks
+# or connections still tracked after the graceful drain
+python - <<'PY'
+import asyncio, json
+
+from repro.serving.backends import SimTextBackend
+from repro.serving.http_sidecar import Sidecar
+from repro.serving.server import ClairvoyantServer
+from repro.serving.service_time import ServiceTimeModel
+
+
+async def req(port, body, headers=None, disconnect_after=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    payload = json.dumps(body).encode()
+    hdrs = {"Host": "ci", "Content-Type": "application/json",
+            "Content-Length": str(len(payload)), "Connection": "close"}
+    hdrs.update(headers or {})
+    writer.write(("POST /v1/chat/completions HTTP/1.1\r\n" + "".join(
+        f"{k}: {v}\r\n" for k, v in hdrs.items()) + "\r\n"
+    ).encode() + payload)
+    await writer.drain()
+    if disconnect_after is not None:
+        await asyncio.sleep(disconnect_after)
+        writer.close()
+        return None, b""
+    data = await asyncio.wait_for(reader.read(), 30.0)
+    writer.close()
+    return int(data.split(None, 2)[1]), data
+
+
+async def main():
+    model = ServiceTimeModel(prefill_tok_per_s=8000.0,
+                             decode_tok_per_s=60.0)
+    backends = [SimTextBackend(model, replica_id=i, time_scale=0.01)
+                for i in range(2)]
+    server = ClairvoyantServer(policy="sjf", tau=1.0, engines=backends,
+                               service_model=model,
+                               deadline_mode="sojourn", seed=1234)
+    sc = Sidecar(server, port=0, tenant_rate=1.0, tenant_burst=1.0)
+    await sc.start()
+
+    st, data = await req(sc.port, {"prompt": "stream", "max_tokens": 32,
+                                   "output_tokens": 24, "stream": True},
+                         headers={"X-Tenant": "t-stream"})
+    assert st == 200 and b"data: [DONE]" in data, "streaming smoke failed"
+    st, data = await req(sc.port, {"prompt": "plain", "max_tokens": 8,
+                                   "output_tokens": 8},
+                         headers={"X-Tenant": "t-plain"})
+    body = json.loads(data.split(b"\r\n\r\n", 1)[1])
+    assert st == 200 and body["clairvoyant"]["status"] == "ok"
+    st, _ = await req(sc.port, {"prompt": "a", "max_tokens": 4,
+                                "output_tokens": 4},
+                      headers={"X-Tenant": "ci"})
+    st2, data = await req(sc.port, {"prompt": "b", "max_tokens": 4,
+                                    "output_tokens": 4},
+                          headers={"X-Tenant": "ci"})
+    assert (st, st2) == (200, 429), f"rate limit smoke: {st}, {st2}"
+    await req(sc.port, {"prompt": "bail", "max_tokens": 512,
+                        "output_tokens": 300, "stream": True},
+              headers={"X-Tenant": "t-bail"}, disconnect_after=0.08)
+    for _ in range(300):
+        if len(server._terminal) == 4:
+            break
+        await asyncio.sleep(0.01)
+    await sc.shutdown(drain_s=2.0)
+    statuses = sorted(server._terminal.values())
+    assert statuses == ["cancelled", "ok", "ok", "ok"], statuses
+    leaked = [t for t in asyncio.all_tasks()
+              if t is not asyncio.current_task() and not t.done()]
+    assert not leaked, f"leaked asyncio tasks: {leaked}"
+    assert not sc._conns, f"unclosed connections: {sc._conns}"
+    print(f"sidecar wire smoke OK: terminals {statuses}, "
+          f"wire_stats {sc.wire_stats}")
+
+
+asyncio.run(main())
+PY
+
 if [ -z "${SKIP_BENCH:-}" ]; then
     echo "== predictor microbenchmark =="
     python -m benchmarks.run predictor
@@ -85,4 +167,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run faults
     echo "== BENCH_faults.json =="
     cat BENCH_faults.json
+    echo "== sidecar wire benchmark (TTFT overhead + SJF-over-HTTP) =="
+    python -m benchmarks.run sidecar
+    echo "== BENCH_sidecar.json =="
+    cat BENCH_sidecar.json
 fi

@@ -989,11 +989,19 @@ class ServerFaults:
 
 
 def _simulate_faults_python(arrival, service, key, tau, faults,
-                            deadline=None):
+                            deadline=None, in_service_timeout=False):
     """Serial fault engine (see module comment above for the contract).
 
-    Returns ``(start, finish, promoted, promos, shed, requeues)``; shed
-    requests carry ``start = finish = NaN``.
+    Returns ``(start, finish, promoted, promos, shed, timeout,
+    requeues)``; shed requests carry ``start = finish = NaN``.
+
+    ``deadline`` alone keeps the PR 6 queue-wait semantics: only
+    undispatched work is shed, started work always completes.  With
+    ``in_service_timeout=True`` the deadline bounds the whole sojourn —
+    pre-dispatch expiry still sheds, but a request whose completion
+    would land past ``arrival + deadline`` is abandoned AT the deadline
+    instant (``timeout[j] = True``, the server is freed at expiry),
+    mirroring the sidecar's ``deadline_mode="sojourn"``.
     """
     import heapq
     n = arrival.shape[0]
@@ -1006,6 +1014,7 @@ def _simulate_faults_python(arrival, service, key, tau, faults,
     finish = np.zeros(n)
     promoted = np.zeros(n, bool)
     shed = np.zeros(n, bool)
+    timeout = np.zeros(n, bool)
     fin = [False] * n            # terminal (served or shed)
     used = [0.0] * n             # service already received (work-conserving)
     last_seq = [-1] * n          # validity stamp of the live heap entry
@@ -1085,11 +1094,24 @@ def _simulate_faults_python(arrival, service, key, tau, faults,
             promos += 1
         if used[j] == 0.0:
             start[j] = t                          # FIRST dispatch
+        # sojourn budget (in_service_timeout): completion past expiry
+        # abandons the work at the deadline instant — guarded so the
+        # deadline=None path performs zero extra float ops (the bitwise
+        # no-fault trace contract)
+        exp_j = (arr[j] + deadline) \
+            if (in_service_timeout and deadline is not None) else None
         while True:                               # serve, event-sliced
             rem = svc[j] - used[j]
             f = factor_at(t)
             tb = next_boundary(t)
             tc = t + rem * f                      # == t + svc[j] bitwise
+            if exp_j is not None and exp_j < tc and exp_j <= tb:
+                t = max(t, exp_j)                 # expiry may have passed
+                finish[j] = t                     # while the server was down
+                timeout[j] = True
+                fin[j] = True
+                nterm += 1
+                break
             if tc <= tb:                          # when no faults active
                 t = tc
                 finish[j] = t
@@ -1107,11 +1129,11 @@ def _simulate_faults_python(arrival, service, key, tau, faults,
                 requeues += 1
                 t = u
                 break
-    return start, finish, promoted, promos, shed, requeues
+    return start, finish, promoted, promos, shed, timeout, requeues
 
 
 def simulate_grid_faults(arrival, service, key, tau, faults,
-                         deadline=None):
+                         deadline=None, in_service_timeout=False):
     """G fault-injected simulations in one call (Python engine only —
     fault rows are rare relative to the clean grids the C engine runs).
 
@@ -1119,8 +1141,11 @@ def simulate_grid_faults(arrival, service, key, tau, faults,
     length-G sequence (one timeline per row — pair timelines across
     conditions the same way workloads are paired).  ``deadline``: scalar
     queueing-delay budget or length-G sequence (None disables shedding).
-    Returns ``(start, finish, promoted, promotions, shed, requeues)``
-    with shed (G, n) bool and requeues (G,) int64 appended to the
+    ``in_service_timeout``: the deadline bounds the whole sojourn —
+    mid-service expiry terminates as ``timeout`` instead of completing
+    (pre-dispatch expiry stays ``shed``).  Returns ``(start, finish,
+    promoted, promotions, shed, timeout, requeues)`` with shed/timeout
+    (G, n) bool and requeues (G,) int64 appended to the
     :func:`simulate_grid` contract.
     """
     arrival = np.ascontiguousarray(arrival, np.float64)
@@ -1141,13 +1166,16 @@ def simulate_grid_faults(arrival, service, key, tau, faults,
     finish = np.empty((G, n))
     promoted = np.zeros((G, n), bool)
     shed = np.zeros((G, n), bool)
+    timeout = np.zeros((G, n), bool)
     promotions = np.zeros(G, np.int64)
     requeues = np.zeros(G, np.int64)
     if n == 0:
-        return start, finish, promoted, promotions, shed, requeues
+        return (start, finish, promoted, promotions, shed, timeout,
+                requeues)
     for g in range(G):
         tg = None if np.isnan(tau_arr[g]) else float(tau_arr[g])
         (start[g], finish[g], promoted[g], promotions[g], shed[g],
-         requeues[g]) = _simulate_faults_python(
-            arrival[g], service[g], key[g], tg, faults[g], deadline[g])
-    return start, finish, promoted, promotions, shed, requeues
+         timeout[g], requeues[g]) = _simulate_faults_python(
+            arrival[g], service[g], key[g], tg, faults[g], deadline[g],
+            in_service_timeout)
+    return start, finish, promoted, promotions, shed, timeout, requeues

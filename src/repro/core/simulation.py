@@ -149,21 +149,27 @@ class FaultSimResult(SimResult):
 
     shed: int = 0
     requeues: int = 0
+    timeouts: int = 0
 
     @property
     def served(self) -> int:
-        return len(self.requests) - self.shed
+        return len(self.requests) - self.shed - self.timeouts
 
 
 def simulate_faulty(requests: Sequence[Request], policy="sjf",
                     tau: Optional[float] = None,
-                    faults=None, deadline: Optional[float] = None
+                    faults=None, deadline: Optional[float] = None,
+                    in_service_timeout: bool = False
                     ) -> FaultSimResult:
     """Run the serial DES under a :class:`~repro.core.sim_fast.ServerFaults`
     timeline (server down/repair windows + stall windows) with optional
     deadline shedding (a request whose queueing delay exceeds ``deadline``
     at dispatch is dropped — only before any service has run; a crashed
     request's remainder is always work-conserving requeued).
+    ``in_service_timeout=True`` extends the deadline to the whole sojourn:
+    mid-service expiry abandons the request at the deadline instant
+    (``meta["timeout"]``, counted in ``timeouts``) — the DES mirror of the
+    sidecar's ``deadline_mode="sojourn"``.
 
     With ``faults=None``/empty and ``deadline=None`` this is bitwise
     trace-equivalent to :func:`simulate` (and the reference oracle) for
@@ -185,22 +191,27 @@ def simulate_faulty(requests: Sequence[Request], policy="sjf",
     b = RequestBatch.from_requests(reqs)
     key = pol.key_array(b.arrival, b.p_long, b.true_service,
                         tenant=b.tenant, tenants=b.tenants)
-    start, finish, promoted, promos, shed, requeues = simulate_grid_faults(
-        b.arrival[None], b.true_service[None], key[None],
-        (pol.aging.effective_tau(tau),), faults, deadline=deadline)
+    start, finish, promoted, promos, shed, timeout, requeues = \
+        simulate_grid_faults(
+            b.arrival[None], b.true_service[None], key[None],
+            (pol.aging.effective_tau(tau),), faults, deadline=deadline,
+            in_service_timeout=in_service_timeout)
     for i, r in enumerate(reqs):
         r.start = float(start[0, i])
         r.finish = float(finish[0, i])
         r.promoted = bool(promoted[0, i])
         if shed[0, i]:
             r.meta["shed"] = True
-    ok = ~shed[0]
+        if timeout[0, i]:
+            r.meta["timeout"] = True
+    ok = ~shed[0] & ~timeout[0]
     makespan = float(finish[0, ok].max()) if ok.any() else 0.0
     done = [reqs[i] for i in np.argsort(np.where(ok, start[0], np.inf),
                                         kind="stable")]
     return FaultSimResult(requests=done, promotions=int(promos[0]),
                           makespan=makespan, shed=int(shed[0].sum()),
-                          requeues=int(requeues[0]))
+                          requeues=int(requeues[0]),
+                          timeouts=int(timeout[0].sum()))
 
 
 # ---------------------------------------------------------------------------

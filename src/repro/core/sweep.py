@@ -370,7 +370,8 @@ def run_grid(axes: Dict[str, Sequence], fn: Callable) -> Dict[tuple, object]:
 # Fault-injection grid (PR 6): conditions x crash-MTBF x repair x seeds.
 # ---------------------------------------------------------------------------
 
-FAULT_METRICS = METRICS + ("goodput", "shed_rate", "requeues")
+FAULT_METRICS = METRICS + ("goodput", "shed_rate", "timeout_rate",
+                           "requeues")
 
 
 @dataclass
@@ -380,7 +381,9 @@ class FaultSweepResult:
     ``mtbf = inf`` rows are the no-fault baseline (and are bitwise
     trace-equal to the clean engines).  Latency metrics aggregate served
     requests only; ``goodput`` is served requests per unit makespan,
-    ``shed_rate`` the shed fraction, ``requeues`` crash-requeue count.
+    ``shed_rate`` the pre-dispatch shed fraction, ``timeout_rate`` the
+    in-service deadline-expiry fraction (always 0 unless the sweep ran
+    with ``in_service_timeout=True``), ``requeues`` crash-requeue count.
     """
 
     conditions: Tuple[Condition, ...]
@@ -400,6 +403,7 @@ def sweep_faults(conditions: Sequence[Condition], mtbfs: Sequence[float],
                  repairs: Sequence[float], seeds: Sequence[int],
                  n: int, short, long, rho: float = 0.7,
                  mix_long: float = 0.5, deadline: Optional[float] = None,
+                 in_service_timeout: bool = False,
                  stall_mtbf: float = 0.0, stall_s: float = 10.0,
                  stall_factor: float = 2.0,
                  batches: Optional[Sequence[RequestBatch]] = None
@@ -475,9 +479,10 @@ def sweep_faults(conditions: Sequence[Condition], mtbfs: Sequence[float],
                                              tenants=tn)
                     taus.append(pol.aging.effective_tau(tau))
                     faults.append(timelines[fi, ri, si])
-    start, finish, promoted, promotions, shed, requeues = \
+    start, finish, promoted, promotions, shed, timeout, requeues = \
         simulate_grid_faults(arrival, service, key, taus, faults,
-                             deadline=deadline)
+                             deadline=deadline,
+                             in_service_timeout=in_service_timeout)
 
     from repro.core.sim_fast import _KLASS_CODE
     out = {m: np.empty((C, F, R, S)) for m in FAULT_METRICS}
@@ -487,7 +492,7 @@ def sweep_faults(conditions: Sequence[Condition], mtbfs: Sequence[float],
                 for si in range(S):
                     row = ((c * F + fi) * R + ri) * S + si
                     klass = cols[si][3]
-                    ok = ~shed[row]
+                    ok = ~shed[row] & ~timeout[row]
                     vals = _percentile_metrics(
                         start[row][ok], finish[row][ok],
                         int(promotions[row]), arrival[row][ok],
@@ -500,6 +505,8 @@ def sweep_faults(conditions: Sequence[Condition], mtbfs: Sequence[float],
                     out["goodput"][c, fi, ri, si] = \
                         (ok.sum() / mk) if mk > 0 else 0.0
                     out["shed_rate"][c, fi, ri, si] = shed[row].mean()
+                    out["timeout_rate"][c, fi, ri, si] = \
+                        timeout[row].mean()
                     out["requeues"][c, fi, ri, si] = requeues[row]
     return FaultSweepResult(conditions=conditions, mtbfs=mtbfs,
                             repairs=repairs, seeds=seeds, metrics=out)

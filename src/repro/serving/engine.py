@@ -204,12 +204,14 @@ class RealEngine:
     # ------------------------------------------------------------- generate
     def generate(self, prompt_ids: np.ndarray, max_new_tokens: int = 32,
                  eos_id: Optional[int] = None, cancel_cb=None,
-                 segment_len: Optional[int] = None) -> dict:
+                 segment_len: Optional[int] = None, on_segment=None) -> dict:
         """Fused greedy decode.  prompt_ids: (S,) ints.
 
         Returns {"tokens", "ttft_s", "service_s", "cancelled", "segments"}.
         ``cancel_cb`` (optional nullary) is polled with the engine's own
-        cancel flag between scan segments.
+        cancel flag between scan segments.  ``on_segment(new_tokens)``
+        streams tokens out at each segment boundary (the sidecar's SSE
+        flush points — see :meth:`FusedDecoder.decode`).
         """
         self._cancel = False
         t0 = time.monotonic()
@@ -226,7 +228,8 @@ class RealEngine:
 
         dec = self._decoder(segment_len or self.segment_len)
         out = dec.decode(self.params, caches, tok, plen, max_new_tokens,
-                         eos_id=eos_id, cancel_check=cancelled)
+                         eos_id=eos_id, cancel_check=cancelled,
+                         on_segment=on_segment)
         self.served += 1
         self._cancel = False
         return {"tokens": out["tokens"], "ttft_s": ttft,

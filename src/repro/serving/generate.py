@@ -95,14 +95,25 @@ class FusedDecoder:
 
     def decode(self, params, caches, first_token: int, prompt_len: int,
                max_new_tokens: int, eos_id: Optional[int] = None,
-               cancel_check=None) -> dict:
+               cancel_check=None, on_segment=None) -> dict:
         """Greedy-decode from a prefilled cache.
 
         ``first_token`` is the prefill argmax (already emitted).  Returns
         {"tokens": [first_token, ...], "cancelled": bool, "segments": int,
         "caches": final cache pytree}.
+
+        ``on_segment(new_tokens)`` fires at every host sync with the
+        tokens emitted since the previous call — the prefill token before
+        the first segment, then one call per segment.  This is the SSE
+        streaming hook: segment boundaries are the only points where
+        tokens reach the host, so they are the natural flush granularity
+        for the sidecar (and the same join points where cancellation and
+        injected crashes land).  Exceptions from the callback propagate —
+        emission is part of serving the request.
         """
         out = [int(first_token)]
+        if on_segment is not None:
+            on_segment([int(first_token)])
         tok = jnp.asarray(first_token, jnp.int32)
         produced = jnp.asarray(1, jnp.int32)
         plen = jnp.asarray(prompt_len, jnp.int32)
@@ -123,7 +134,10 @@ class FusedDecoder:
             segments += 1
             n_new = int(produced) - len(out)     # one host sync per segment
             buf_np = np.asarray(buf)
-            out.extend(int(x) for x in buf_np[:n_new])
+            new = [int(x) for x in buf_np[:n_new]]
+            out.extend(new)
+            if on_segment is not None and new:
+                on_segment(new)
             if bool(stopped):
                 break
         return {"tokens": out, "cancelled": cancelled, "segments": segments,

@@ -95,6 +95,7 @@ class ClairvoyantServer:
                  fault_plan=None,
                  retry: Optional[RetryPolicy] = None,
                  deadline_s: Optional[float] = None,
+                 deadline_mode: str = "queue",
                  max_queue_depth: Optional[int] = None,
                  breaker: Optional[CircuitBreaker] = None):
         # policy: registry name or Policy instance (core/policy.py)
@@ -122,13 +123,22 @@ class ClairvoyantServer:
         self.faults = as_injector(fault_plan)
         self.retry = retry if retry is not None else RetryPolicy(seed=seed)
         self.deadline_s = deadline_s
+        # "queue" (PR 6): deadline bounds QUEUE WAIT only — undispatched
+        # work is shed, started work always completes.  "sojourn": the
+        # deadline bounds arrival-to-finish — pre-dispatch expiry still
+        # sheds, but expiry MID-SERVICE terminates with status "timeout"
+        # (the wire semantics the async sidecar exposes).
+        if deadline_mode not in ("queue", "sojourn"):
+            raise ValueError(f"unknown deadline_mode {deadline_mode!r}")
+        self.deadline_mode = deadline_mode
         self.max_queue_depth = max_queue_depth
         self.degraded = False                   # predictor-outage FCFS mode
         self._terminal: Dict[int, str] = {}     # req_id -> terminal status
+        self._next_id = 1                       # per-server request-id space
         self.fault_stats = {"predictor_failures": 0,
                             "degraded_admissions": 0, "sheds": 0,
                             "retries": 0, "failures": 0, "crashes": 0,
-                            "transients": 0, "requeues": 0}
+                            "transients": 0, "requeues": 0, "timeouts": 0}
         if self.faults is not None:
             for eng in self.engines:
                 if isinstance(eng, RealEngine):
@@ -160,16 +170,26 @@ class ClairvoyantServer:
         self.degraded = False                    # predictor healed
         return probas
 
+    def allocate_id(self) -> int:
+        """Reserve the next request id from this server's id space (the
+        sidecar pre-assigns ids so it can register a waiter before the
+        admission path can emit a terminal shed response)."""
+        rid = self._next_id
+        self._next_id += 1
+        return rid
+
     def submit(self, req: CompletionRequest, *, arrival: float = 0.0,
                true_output_tokens: Optional[int] = None,
-               klass: str = "") -> int:
+               klass: str = "", deadline_s: Optional[float] = None) -> int:
         """Admit one request.  ``true_output_tokens`` is the oracle ground
         truth (known to the simulator, NOT the scheduler unless policy is
-        sjf_oracle).  Returns the chosen replica, or -1 if the request
+        sjf_oracle).  ``deadline_s`` overrides the server-wide budget for
+        this request.  Returns the chosen replica, or -1 if the request
         was shed at admission (queue overflow)."""
         probas = self._predict_probas([req.prompt], arrival)
         return self._admit(req, None if probas is None else probas[0],
-                           arrival, true_output_tokens, klass)
+                           arrival, true_output_tokens, klass,
+                           deadline_s=deadline_s)
 
     def submit_many(self, reqs: Sequence[CompletionRequest], *,
                     arrivals: Optional[Sequence[float]] = None,
@@ -198,7 +218,19 @@ class ClairvoyantServer:
         ]
 
     def _admit(self, req: CompletionRequest, proba, arrival: float,
-               true_output_tokens: Optional[int], klass: str) -> int:
+               true_output_tokens: Optional[int], klass: str,
+               deadline_s: Optional[float] = None) -> int:
+        # per-server id space: assign at admission (dense, deterministic
+        # per server); explicit ids are honored but may not collide with
+        # a request this server has already seen
+        if req.request_id is None:
+            req.request_id = self.allocate_id()
+        else:
+            self._next_id = max(self._next_id, int(req.request_id) + 1)
+        if req.request_id in self._terminal \
+                or req.request_id in self._inflight:
+            raise ValueError(f"request id {req.request_id} already "
+                             "submitted to this server")
         if true_output_tokens is None:
             true_output_tokens = sample_output_tokens(
                 self.rng, klass or "short")
@@ -213,6 +245,8 @@ class ClairvoyantServer:
                     tenant=req.tenant,
                     meta={"prompt_tokens": prompt_toks,
                           "output_tokens": true_output_tokens})
+        if deadline_s is not None:
+            r.meta["deadline_s"] = float(deadline_s)
         if degraded:
             r.meta["degraded"] = True
             self.fault_stats["degraded_admissions"] += 1
@@ -248,12 +282,18 @@ class ClairvoyantServer:
         self._inflight.pop(resp.request_id, None)
         self.responses.append(resp)
 
+    def _deadline_of(self, req) -> Optional[float]:
+        """Effective deadline budget for one request: the per-request
+        override (``submit(..., deadline_s=)``) or the server-wide one."""
+        return req.meta.get("deadline_s", self.deadline_s)
+
     def _maybe_shed(self, rep, req, now: float) -> bool:
         """Deadline-budget load shedding at dispatch time: a request that
         has not started and is already past its queue-wait budget is shed
         with a terminal response (bounds the tail under overload)."""
-        if self.deadline_s is None or req.start is not None \
-                or (now - req.arrival) <= self.deadline_s:
+        dl = self._deadline_of(req)
+        if dl is None or req.start is not None \
+                or (now - req.arrival) <= dl:
             return False
         self.router.release(rep.replica_id, req)
         self.fault_stats["sheds"] += 1
@@ -402,6 +442,31 @@ class ClairvoyantServer:
             except Exception as e:             # organic engine bug
                 t = self._retry_or_fail(rep, req, t, e)
                 continue
+            if self.deadline_mode == "sojourn":
+                dl = self._deadline_of(req)
+                if dl is not None and t + service > req.arrival + dl:
+                    # in-service expiry: the attempt is abandoned AT the
+                    # deadline instant with a terminal ``timeout`` (the
+                    # pre-dispatch case stays ``shed`` via _maybe_shed)
+                    expiry = max(t, req.arrival + dl)
+                    eng.busy_until = expiry
+                    self.router.release(rid, req)
+                    self.fault_stats["timeouts"] += 1
+                    req.finish = expiry
+                    self._finish(CompletionResponse(
+                        request_id=req.req_id, text="", tokens_generated=0,
+                        queue_wait_s=req.start - req.arrival,
+                        service_s=max(0.0, expiry - req.start),
+                        ttft_s=(req.start - req.arrival + ttft)
+                        if t + ttft <= expiry else None,
+                        promoted=req.promoted, replica=rid,
+                        p_long=req.p_long, klass=req.klass,
+                        status="timeout",
+                        error="deadline expired in service",
+                        retries=req.meta.get("fault_retries", 0),
+                        degraded=bool(req.meta.get("degraded"))))
+                    t = expiry
+                    continue
             t += service
             req.finish = t
             self.router.on_dispatch(rid, req, t, service_estimate=service)
@@ -555,6 +620,24 @@ class ClairvoyantServer:
                         return True
                     return False
 
+            deadline_hit = []
+            dl = self._deadline_of(req) \
+                if self.deadline_mode == "sojourn" else None
+            if dl is not None:
+                wall_dl0 = _time.monotonic()
+                waited = max(0.0, t - req.arrival)
+                inner_cb = cancel_cb
+
+                def cancel_cb(_inner=inner_cb, _w0=wall_dl0, _dl=dl,
+                              _waited=waited):
+                    # sojourn budget: queue wait already spent + wall time
+                    # in this attempt; expiry stops the fused loop at the
+                    # next segment boundary -> terminal ``timeout``
+                    if _waited + (_time.monotonic() - _w0) > _dl:
+                        deadline_hit.append(True)
+                        return True
+                    return _inner() if _inner is not None else False
+
             if req.start is None:
                 req.start = t                 # first dispatch
             # injected transient backend error at dispatch time
@@ -607,6 +690,23 @@ class ClairvoyantServer:
                         error="client disconnect (mid-generation)",
                         degraded=bool(req.meta.get("degraded"))))
                     continue                  # client disconnect: drained
+                if deadline_hit:
+                    self.fault_stats["timeouts"] += 1
+                    self.router.release(rep.replica_id, req)
+                    req.finish = t
+                    self._finish(CompletionResponse(
+                        request_id=req.req_id, text="",
+                        tokens_generated=len(tokens),
+                        queue_wait_s=req.start - req.arrival,
+                        service_s=used + service,
+                        ttft_s=req.start - req.arrival + req.meta["ttft_s"],
+                        promoted=req.promoted, replica=rep.replica_id,
+                        p_long=req.p_long, klass=req.klass,
+                        status="timeout",
+                        error="deadline expired in service",
+                        retries=req.meta.get("fault_retries", 0),
+                        degraded=bool(req.meta.get("degraded"))))
+                    continue                  # in-service deadline expiry
                 if len(tokens) >= n_total:
                     pass                      # done at the boundary anyway
                 else:
@@ -674,7 +774,15 @@ class ClairvoyantServer:
             return items
 
         def cancel_check(state) -> bool:
-            return state.req_id in self._disconnected
+            if state.req_id in self._disconnected:
+                return True
+            if self.deadline_mode == "sojourn":
+                req = state.meta["req"]
+                dl = self._deadline_of(req)
+                if dl is not None and (now() - req.arrival) > dl:
+                    state.meta["deadline_hit"] = True
+                    return True
+            return False
 
         def requeue_or_fail(req, now_t) -> None:
             """Crashed-lane victim: bounded retry with the original
@@ -695,7 +803,15 @@ class ClairvoyantServer:
                 requeue_or_fail(req, out["finish_t"])
                 return
             if out["cancelled"]:
-                self._disconnected.discard(req.req_id)
+                # disconnect wins over a deadline that fired the same
+                # segment (the client is gone either way)
+                timed_out = state.meta.get("deadline_hit") \
+                    and req.req_id not in self._disconnected
+                if timed_out:
+                    self.fault_stats["timeouts"] += 1
+                    self.router.release(rep.replica_id, req)
+                else:
+                    self._disconnected.discard(req.req_id)
                 req.finish = max(out["finish_t"], req.start)
                 self._finish(CompletionResponse(
                     request_id=req.req_id, text="",
@@ -704,8 +820,11 @@ class ClairvoyantServer:
                     service_s=req.finish - req.start,
                     ttft_s=out["ttft_s"], promoted=req.promoted,
                     replica=rep.replica_id, p_long=req.p_long,
-                    klass=req.klass, status="cancelled",
-                    error="client disconnect (mid-generation)",
+                    klass=req.klass,
+                    status="timeout" if timed_out else "cancelled",
+                    error="deadline expired in service" if timed_out
+                    else "client disconnect (mid-generation)",
+                    retries=req.meta.get("fault_retries", 0),
                     degraded=bool(req.meta.get("degraded"))))
                 return
             req.finish = max(out["finish_t"], req.start)

@@ -137,10 +137,10 @@ def test_chaos_fuzz_sim_no_lost_requests():
         ids = []
         for i in range(n):
             req = CompletionRequest(prompt=f"req {trial}:{i}")
-            ids.append(req.request_id)
             server.submit(req, arrival=float(rng.uniform(0, 120)),
                           true_output_tokens=int(rng.integers(20, 600)),
                           klass="short" if rng.random() < 0.6 else "long")
+            ids.append(req.request_id)    # assigned by the server at admit
         # a couple of client disconnects while queued
         server.cancel(ids[0])
         server.cancel(ids[n // 2])
@@ -458,11 +458,11 @@ def test_simulate_grid_faults_nofault_matches_every_engine():
     for engine in ("python", "auto"):
         s0, f0, p0, m0 = simulate_grid(arr[None], svc[None], key[None],
                                        (3.0,), engine=engine)
-        s1, f1, p1, m1, shed, rq = simulate_grid_faults(
+        s1, f1, p1, m1, shed, tmo, rq = simulate_grid_faults(
             arr[None], svc[None], key[None], (3.0,), ServerFaults())
         assert np.array_equal(s0, s1) and np.array_equal(f0, f1)
         assert np.array_equal(p0, p1) and np.array_equal(m0, m1)
-        assert not shed.any() and rq[0] == 0
+        assert not shed.any() and not tmo.any() and rq[0] == 0
 
 
 def test_server_faults_validates_windows():
@@ -483,7 +483,7 @@ def test_des_crash_requeue_is_work_conserving():
     svc = np.array([4.0, 1.0])
     key = dispatch_key("fcfs", arr, svc * 0, svc)
     flt = ServerFaults(downs=((2.0, 5.0),))
-    s, f, p, m, shed, rq = simulate_grid_faults(
+    s, f, p, m, shed, _tmo, rq = simulate_grid_faults(
         arr[None], svc[None], key[None], (None,), flt)
     # req0 serves 2s, crashes, resumes at t=5 for the REMAINING 2s
     assert rq[0] == 1 and not shed.any()
@@ -496,7 +496,7 @@ def test_des_stall_window_stretches_service():
     svc = np.array([4.0])
     key = dispatch_key("fcfs", arr, svc * 0, svc)
     flt = ServerFaults(slowdowns=((0.0, 2.0, 2.0),))
-    _, f, _, _, _, _ = simulate_grid_faults(
+    _, f, _, _, _, _, _ = simulate_grid_faults(
         arr[None], svc[None], key[None], (None,), flt)
     # 2s wall inside the 2x window = 1s of work; 3s more outside
     assert f[0][0] == pytest.approx(5.0)
@@ -506,14 +506,14 @@ def test_des_deadline_sheds_only_undispatched_work():
     arr = np.array([0.0, 0.1, 0.2])
     svc = np.array([10.0, 1.0, 1.0])
     key = dispatch_key("fcfs", arr, svc * 0, svc)
-    s, f, p, m, shed, rq = simulate_grid_faults(
+    s, f, p, m, shed, _tmo, rq = simulate_grid_faults(
         arr[None], svc[None], key[None], (None,), ServerFaults(),
         deadline=5.0)
     assert shed[0].tolist() == [False, True, True]
     assert np.isnan(f[0][1]) and np.isnan(f[0][2])
     # a crashed-and-requeued request is NOT shed (service already started)
     flt = ServerFaults(downs=((2.0, 9.0),))
-    s, f, p, m, shed, rq = simulate_grid_faults(
+    s, f, p, m, shed, _tmo, rq = simulate_grid_faults(
         arr[None][:, :1], svc[None][:, :1], key[None][:, :1], (None,),
         flt, deadline=5.0)
     assert not shed.any() and rq[0] == 1

@@ -75,8 +75,9 @@ def test_disconnect_cancellation(predictor):
     ids = []
     for prompt, toks, klass in _mixed_requests():
         req = CompletionRequest(prompt=prompt)
-        ids.append(req.request_id)
+        # ids are now assigned by the server at admission (per-server space)
         server.submit(req, true_output_tokens=toks, klass=klass)
+        ids.append(req.request_id)
     assert server.cancel(ids[0]) and server.cancel(ids[-1])
     assert not server.cancel(ids[0])        # double-cancel is a no-op
     resp = server.drain()

@@ -1,0 +1,532 @@
+"""Wire-level robustness suite (PR 7): the asyncio HTTP/SSE sidecar.
+
+Covers the per-server request-id regression, DES in-service ``timeout``
+semantics (sojourn deadlines in the fault engine + the sweep column),
+SSE framing, deadline/backpressure/rate-limit status codes, disconnect
+cancellation (queued and mid-generation), graceful shutdown under load,
+and the acceptance gate: a >=200-request loopback chaos drain (seeded
+crashes + transients, >=10% client disconnects, sub-service deadlines)
+that loses zero requests — every admitted request exits with exactly
+one terminal status and every surviving client reads a well-formed
+JSON or SSE response.
+"""
+
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.sim_fast import (ServerFaults, dispatch_key,
+                                 simulate_grid_faults)
+from repro.core.simulation import (ServiceDist, poisson_workload,
+                                   simulate_faulty)
+from repro.serving.backends import SimTextBackend, tokens_to_text
+from repro.serving.faults import FaultPlan, FaultSpec, RetryPolicy
+from repro.serving.http_sidecar import Sidecar, TokenBucket
+from repro.serving.openai_api import (HTTP_STATUS, STATUSES,
+                                      CompletionRequest)
+from repro.serving.server import ClairvoyantServer
+from repro.serving.service_time import ServiceTimeModel
+
+SHORT = ServiceDist(mean=3.5, std=0.8)
+LONG = ServiceDist(mean=8.9, std=2.0)
+
+
+# ------------------------------------------------- per-server id regression
+def test_request_ids_are_per_server():
+    """Two servers must not share an id space (the old process-global
+    counter cross-poisoned `_terminal` bookkeeping between servers)."""
+    a = ClairvoyantServer(policy="fcfs", n_replicas=1, seed=0)
+    b = ClairvoyantServer(policy="fcfs", n_replicas=1, seed=0)
+    ra = [CompletionRequest(prompt=f"a{i}") for i in range(3)]
+    rb = [CompletionRequest(prompt=f"b{i}") for i in range(2)]
+    for r in ra:
+        a.submit(r, true_output_tokens=4)
+    for r in rb:
+        b.submit(r, true_output_tokens=4)
+    assert [r.request_id for r in ra] == [1, 2, 3]
+    assert [r.request_id for r in rb] == [1, 2]      # NOT [4, 5]
+    a.drain(), b.drain()
+    assert set(a._terminal) == {1, 2, 3} and set(b._terminal) == {1, 2}
+
+
+def test_duplicate_request_id_rejected_and_allocate_reserves():
+    s = ClairvoyantServer(policy="fcfs", n_replicas=1, seed=0)
+    s.submit(CompletionRequest(prompt="x", request_id=7),
+             true_output_tokens=4)
+    with pytest.raises(ValueError):
+        s.submit(CompletionRequest(prompt="y", request_id=7),
+                 true_output_tokens=4)
+    assert s.allocate_id() == 8                      # bumped past explicit
+    r = CompletionRequest(prompt="z")
+    s.submit(r, true_output_tokens=4)
+    assert r.request_id == 9
+
+
+# ------------------------------------------- DES in-service timeout (sojourn)
+def test_des_sojourn_timeout_vs_queue_deadline():
+    arr = np.array([0.0, 3.0])
+    svc = np.array([10.0, 1.0])
+    key = dispatch_key("fcfs", arr, svc * 0, svc)
+    # queue-wait semantics (PR 6): started work always completes; the
+    # second request sheds after waiting past its budget
+    _, f, _, _, shed, tmo, _ = simulate_grid_faults(
+        arr[None], svc[None], key[None], (None,), ServerFaults(),
+        deadline=4.0)
+    assert shed[0].tolist() == [False, True] and not tmo.any()
+    assert f[0][0] == pytest.approx(10.0)
+    # sojourn semantics: the first request is abandoned AT its deadline
+    # (t=4) freeing the server; the second now starts at 4 and makes it
+    s, f, _, _, shed, tmo, _ = simulate_grid_faults(
+        arr[None], svc[None], key[None], (None,), ServerFaults(),
+        deadline=4.0, in_service_timeout=True)
+    assert tmo[0].tolist() == [True, False]
+    assert shed[0].tolist() == [False, False]
+    assert f[0][0] == pytest.approx(4.0)             # freed at expiry
+    assert s[0][1] == pytest.approx(4.0)
+    assert f[0][1] == pytest.approx(5.0)
+
+
+def test_des_completion_exactly_at_deadline_is_ok():
+    arr = np.array([0.0])
+    svc = np.array([5.0])
+    key = dispatch_key("fcfs", arr, svc * 0, svc)
+    _, f, _, _, shed, tmo, _ = simulate_grid_faults(
+        arr[None], svc[None], key[None], (None,), ServerFaults(),
+        deadline=5.0, in_service_timeout=True)
+    assert not tmo.any() and not shed.any()
+    assert f[0][0] == pytest.approx(5.0)
+
+
+def test_simulate_faulty_counts_timeouts():
+    reqs = poisson_workload(np.random.default_rng(3), 200, 0.3,
+                            SHORT, LONG)
+    res = simulate_faulty(reqs, policy="sjf", deadline=9.0,
+                          in_service_timeout=True)
+    assert res.timeouts > 0
+    assert res.served == 200 - res.shed - res.timeouts
+    tagged = [r for r in res.requests if r.meta.get("timeout")]
+    assert len(tagged) == res.timeouts
+    for r in tagged:                                 # abandoned at expiry
+        assert r.finish == pytest.approx(r.arrival + 9.0)
+
+
+def test_sweep_faults_timeout_rate_column():
+    from repro.core.sweep import FAULT_METRICS, sweep_faults
+    assert "timeout_rate" in FAULT_METRICS
+    res = sweep_faults([("fcfs", None), ("sjf", 10.5)],
+                       mtbfs=(float("inf"),), repairs=(4.0,),
+                       seeds=(0, 1), n=150, short=SHORT, long=LONG,
+                       rho=0.9, deadline=12.0, in_service_timeout=True)
+    tr = res.metric("timeout_rate")
+    assert tr.shape == (2, 1, 1, 2) and (tr > 0).any()
+    # goodput accounts for both shed AND timed-out work
+    assert (res.metric("goodput")
+            <= 1.0 - res.metric("timeout_rate") + 1e-12).all()
+
+
+def test_server_sim_drain_sojourn_timeout():
+    srv = ClairvoyantServer(policy="fcfs", n_replicas=1, deadline_s=5.0,
+                            deadline_mode="sojourn", seed=0)
+    long_req = CompletionRequest(prompt="long")
+    srv.submit(long_req, arrival=0.0, true_output_tokens=2000)
+    srv.drain()
+    resp = srv.responses[0]
+    assert resp.status == "timeout" and "in service" in resp.error
+    assert srv.fault_stats["timeouts"] == 1
+    # same workload under queue-wait semantics completes
+    srv2 = ClairvoyantServer(policy="fcfs", n_replicas=1, deadline_s=5.0,
+                             deadline_mode="queue", seed=0)
+    srv2.submit(CompletionRequest(prompt="long"), arrival=0.0,
+                true_output_tokens=2000)
+    srv2.drain()
+    assert srv2.responses[0].status == "ok"
+
+
+# ------------------------------------------------------------ wire helpers
+def _make_sidecar(n_replicas=2, time_scale=0.01, specs=None, **kw):
+    model = ServiceTimeModel(prefill_tok_per_s=8000.0,
+                             decode_tok_per_s=60.0)
+    backends = [SimTextBackend(model, replica_id=i, time_scale=time_scale)
+                for i in range(n_replicas)]
+    sidecar_kw = {k: kw.pop(k) for k in
+                  ("max_inflight", "tenant_rate", "tenant_burst",
+                   "drain_s", "write_timeout_s") if k in kw}
+    server = ClairvoyantServer(
+        policy="sjf", tau=1.0, engines=backends, service_model=model,
+        deadline_mode="sojourn", seed=0,
+        fault_plan=FaultPlan(specs) if specs else None,
+        retry=RetryPolicy(max_retries=2, base_s=0.01, seed=0), **kw)
+    return Sidecar(server, port=0, **sidecar_kw)
+
+
+def _parse_http(data: bytes):
+    head, _, body = data.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split()[1])
+    hdrs = {}
+    for ln in lines[1:]:
+        k, _, v = ln.partition(":")
+        hdrs[k.strip().lower()] = v.strip()
+    return status, hdrs, body
+
+
+def _parse_sse(body: bytes):
+    frames = []
+    for block in body.decode().split("\n\n"):
+        block = block.strip()
+        if not block:
+            continue
+        assert block.startswith("data: "), f"bad SSE frame: {block!r}"
+        frames.append(block[len("data: "):])
+    return frames
+
+
+async def _request(port, body=None, headers=None, method="POST",
+                   path="/v1/chat/completions", disconnect_after=None):
+    """One raw loopback HTTP exchange.  Returns ("json", status, obj),
+    ("sse", status, frames) or ("disconnected", None, None)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    try:
+        payload = b"" if body is None else json.dumps(body).encode()
+        hdrs = {"Host": "loopback", "Connection": "close"}
+        if payload:
+            hdrs["Content-Type"] = "application/json"
+            hdrs["Content-Length"] = str(len(payload))
+        hdrs.update(headers or {})
+        writer.write((f"{method} {path} HTTP/1.1\r\n" + "".join(
+            f"{k}: {v}\r\n" for k, v in hdrs.items()) + "\r\n"
+        ).encode() + payload)
+        await writer.drain()
+        if disconnect_after is not None:
+            await asyncio.sleep(disconnect_after)
+            return "disconnected", None, None
+        data = await asyncio.wait_for(reader.read(), timeout=30.0)
+        status, rhdrs, rbody = _parse_http(data)
+        if rhdrs.get("content-type", "").startswith("text/event-stream"):
+            return "sse", status, _parse_sse(rbody)
+        return "json", status, json.loads(rbody) if rbody else {}
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+def _no_leaked_tasks():
+    cur = asyncio.current_task()
+    return [t for t in asyncio.all_tasks() if t is not cur and not t.done()]
+
+
+# ------------------------------------------------------------- wire units
+def test_token_bucket():
+    tb = TokenBucket(rate=2.0, burst=2.0)
+    assert tb.allow(0.0) == (True, 0.0)
+    assert tb.allow(0.0)[0]
+    ok, after = tb.allow(0.0)
+    assert not ok and after == pytest.approx(0.5)
+    ok, _ = tb.allow(0.6)                            # refilled > 1 token
+    assert ok
+
+
+def test_sse_framing_and_stream_roundtrip():
+    async def run():
+        sc = _make_sidecar(n_replicas=1)
+        await sc.start()
+        try:
+            kind, status, frames = await _request(sc.port, {
+                "messages": [{"role": "user", "content": "stream please"}],
+                "max_tokens": 64, "stream": True, "output_tokens": 24})
+            assert (kind, status) == ("sse", 200)
+            assert frames[-1] == "[DONE]"
+            chunks = [json.loads(f) for f in frames[:-1]]
+            assert all(c["object"] == "chat.completion.chunk"
+                       for c in chunks)
+            assert len({c["id"] for c in chunks}) == 1
+            text = "".join(c["choices"][0]["delta"].get("content", "")
+                           for c in chunks)
+            # deltas reassemble the full completion text
+            assert text.split() == [f"t{i}" for i in range(24)]
+            finals = [c["choices"][0]["finish_reason"] for c in chunks]
+            assert finals[-1] == "stop" and set(finals[:-1]) == {None}
+        finally:
+            await sc.shutdown(drain_s=1.0)
+        assert not _no_leaked_tasks()
+    asyncio.run(run())
+
+
+def test_non_stream_completion_body():
+    async def run():
+        sc = _make_sidecar(n_replicas=1)
+        await sc.start()
+        try:
+            kind, status, obj = await _request(sc.port, {
+                "messages": [{"role": "user", "content": "hello"}],
+                "max_tokens": 8, "output_tokens": 8})
+            assert (kind, status) == ("json", 200)
+            assert obj["object"] == "chat.completion"
+            assert obj["choices"][0]["finish_reason"] == "stop"
+            assert obj["choices"][0]["message"]["content"] \
+                == tokens_to_text(range(8))
+            cl = obj["clairvoyant"]
+            assert cl["status"] == "ok" and cl["ttft_s"] is not None
+        finally:
+            await sc.shutdown(drain_s=1.0)
+    asyncio.run(run())
+
+
+def test_health_and_ready_endpoints():
+    async def run():
+        sc = _make_sidecar(n_replicas=2)
+        await sc.start()
+        try:
+            kind, status, obj = await _request(sc.port, method="GET",
+                                               path="/healthz")
+            assert status == 200 and obj["status"] == "ok"
+            assert len(obj["replicas"]) == 2
+            kind, status, obj = await _request(sc.port, method="GET",
+                                               path="/readyz")
+            assert status == 200 and obj["ready"]
+            sc._stopping = True                      # draining: not ready
+            kind, status, obj = await _request(sc.port, method="GET",
+                                               path="/readyz")
+            assert status == 503 and not obj["ready"]
+            sc._stopping = False
+            kind, status, _ = await _request(sc.port, method="GET",
+                                             path="/nope")
+            assert status == 404
+        finally:
+            await sc.shutdown(drain_s=1.0)
+    asyncio.run(run())
+
+
+def test_tenant_rate_limit_429_never_reaches_scheduler():
+    async def run():
+        sc = _make_sidecar(n_replicas=1, tenant_rate=1.0, tenant_burst=1.0)
+        await sc.start()
+        try:
+            body = {"prompt": "hi", "max_tokens": 4, "output_tokens": 4}
+            kind, status, _ = await _request(
+                sc.port, body, headers={"X-Tenant": "acme"})
+            assert status == 200
+            kind, status, obj = await _request(
+                sc.port, body, headers={"X-Tenant": "acme"})
+            assert status == 429 and obj["error"]["type"] == "shed"
+            # a different tenant has its own bucket
+            kind, status, _ = await _request(
+                sc.port, body, headers={"X-Tenant": "other"})
+            assert status == 200
+        finally:
+            await sc.shutdown(drain_s=1.0)
+        # the rate-limited request was refused at the wire: only the two
+        # admitted ones ever reached the scheduler's terminal gate
+        assert sorted(sc.server._terminal) == [1, 2]
+        assert sc.wire_stats["rate_limited"] == 1
+    asyncio.run(run())
+
+
+def test_inflight_cap_returns_503_with_retry_after():
+    async def run():
+        sc = _make_sidecar(n_replicas=1, max_inflight=1)
+        await sc.start()
+        try:
+            slow = asyncio.create_task(_request(sc.port, {
+                "prompt": "slow", "max_tokens": 512,
+                "output_tokens": 400}))
+            await asyncio.sleep(0.05)                # slow one is in flight
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", sc.port)
+            payload = json.dumps({"prompt": "x", "max_tokens": 4}).encode()
+            writer.write((
+                "POST /v1/chat/completions HTTP/1.1\r\nHost: t\r\n"
+                f"Content-Length: {len(payload)}\r\n\r\n"
+            ).encode() + payload)
+            await writer.drain()
+            status, hdrs, body = _parse_http(await reader.read())
+            writer.close()
+            assert status == 503 and "retry-after" in hdrs
+            assert json.loads(body)["error"]["type"] == "shed"
+            kind, status, _ = await slow
+            assert status == 200
+        finally:
+            await sc.shutdown(drain_s=1.0)
+    asyncio.run(run())
+
+
+def test_deadline_timeout_and_predispatch_shed():
+    async def run():
+        sc = _make_sidecar(n_replicas=1)
+        await sc.start()
+        try:
+            # expiry mid-generation: 504 with terminal status "timeout"
+            kind, status, obj = await _request(sc.port, {
+                "prompt": "too slow", "max_tokens": 512,
+                "output_tokens": 400, "timeout_s": 0.05})
+            assert (kind, status) == ("json", 504)
+            assert obj["error"]["type"] == "timeout"
+            # expiry while queued behind a long request: shed (429),
+            # never dispatched
+            blocker = asyncio.create_task(_request(sc.port, {
+                "prompt": "blocker", "max_tokens": 512,
+                "output_tokens": 400}))
+            await asyncio.sleep(0.03)
+            kind, status, obj = await _request(
+                sc.port, {"prompt": "impatient", "max_tokens": 4,
+                          "output_tokens": 4},
+                headers={"X-Deadline-S": "0.01"})
+            assert status == 429 and obj["error"]["type"] == "shed"
+            await blocker
+        finally:
+            await sc.shutdown(drain_s=2.0)
+        st = sc.server._terminal
+        assert st[1] == "timeout" and st[3] == "shed" and st[2] == "ok"
+        assert sc.server.fault_stats["timeouts"] == 1
+    asyncio.run(run())
+
+
+def test_disconnect_cancels_queued_and_midgeneration():
+    async def run():
+        sc = _make_sidecar(n_replicas=1)
+        await sc.start()
+        try:
+            # A holds the replica mid-generation, B sits queued
+            a = asyncio.create_task(_request(
+                sc.port, {"prompt": "a", "max_tokens": 512,
+                          "output_tokens": 300, "stream": True},
+                disconnect_after=0.08))
+            await asyncio.sleep(0.03)
+            b = asyncio.create_task(_request(
+                sc.port, {"prompt": "b", "max_tokens": 8,
+                          "output_tokens": 8},
+                disconnect_after=0.02))
+            assert (await b)[0] == "disconnected"    # B: cancelled queued
+            assert (await a)[0] == "disconnected"    # A: cancelled mid-gen
+            for _ in range(200):
+                if len(sc.server._terminal) == 2:
+                    break
+                await asyncio.sleep(0.01)
+            st = dict(sc.server._terminal)
+            # the freed replica still serves new work
+            kind, status, _ = await _request(
+                sc.port, {"prompt": "after", "max_tokens": 4,
+                          "output_tokens": 4})
+            assert status == 200
+        finally:
+            await sc.shutdown(drain_s=2.0)
+        assert st == {1: "cancelled", 2: "cancelled"}
+        by_id = {r.request_id: r for r in sc.server.responses}
+        assert "mid-generation" in by_id[1].error
+        assert "queued" in by_id[2].error
+        assert sc.wire_stats["disconnects"] == 2
+    asyncio.run(run())
+
+
+# ------------------------------------------------- graceful shutdown gate
+def test_graceful_shutdown_under_load_loses_nothing():
+    async def run():
+        sc = _make_sidecar(n_replicas=2, time_scale=0.01)
+        await sc.start()
+        clients = [asyncio.create_task(_request(sc.port, {
+            "prompt": f"req {i}", "max_tokens": 256,
+            "output_tokens": 80 + i, "stream": i % 2 == 0}))
+            for i in range(24)]
+        await asyncio.sleep(0.1)                     # mid-load SIGTERM
+        await sc.shutdown(drain_s=0.2)
+        outcomes = await asyncio.gather(*clients, return_exceptions=True)
+        # late arrivals may be refused 503 (draining) — those were never
+        # admitted; every ADMITTED request has exactly one terminal
+        n_admitted = sc.server._next_id - 1
+        assert n_admitted > 0
+        assert sorted(sc.server._terminal) == list(
+            range(1, n_admitted + 1))
+        assert len(sc.server.responses) == n_admitted
+        statuses = set(sc.server._terminal.values())
+        assert statuses <= set(STATUSES)
+        assert "cancelled" in statuses               # the drain cut someone
+        # every client that kept its socket got a well-formed response
+        for out in outcomes:
+            assert not isinstance(out, Exception), out
+            kind, status, frames = out
+            if kind == "sse":
+                assert frames[-1] == "[DONE]"
+            else:
+                assert status in (200, 429, 499, 502, 503, 504)
+        assert not _no_leaked_tasks()
+    asyncio.run(run())
+
+
+# --------------------------------------------- THE acceptance chaos drain
+def test_wire_chaos_drain_no_lost_requests():
+    """>=200 loopback HTTP requests against a seeded fault plan (segment
+    crashes + dispatch transients), >=10% random client disconnects and
+    sub-service deadlines: zero lost requests, one terminal each."""
+    N = 220
+    rng = np.random.default_rng(7)
+    specs = [FaultSpec(kind="crash", after_polls=p, repair_s=0.02)
+             for p in (25, 80, 160, 260, 380)]
+    specs += [FaultSpec(kind="transient", at=float(a))
+              for a in rng.uniform(0.0, 1.5, 8)]
+
+    async def one_client(i, port):
+        otoks = int(rng.integers(4, 120))
+        body = {"prompt": f"chaos request {i} " + "x" * int(
+            rng.integers(0, 64)), "max_tokens": 512,
+            "output_tokens": otoks, "stream": bool(rng.random() < 0.5)}
+        headers = {"X-Tenant": f"t{i % 5}"}
+        disconnect_after = None
+        if rng.random() < 0.15:                      # impatient client
+            disconnect_after = float(rng.uniform(0.0, 0.08))
+        elif rng.random() < 0.18:                    # sub-service deadline
+            headers["X-Deadline-S"] = f"{rng.uniform(0.004, 0.03):.4f}"
+        await asyncio.sleep(float(rng.uniform(0, 0.4)))
+        try:
+            return await _request(port, body, headers=headers,
+                                  disconnect_after=disconnect_after)
+        except (ConnectionError, asyncio.IncompleteReadError) as e:
+            return "conn_error", None, repr(e)
+
+    async def run():
+        sc = _make_sidecar(n_replicas=3, time_scale=0.008, specs=specs,
+                           max_inflight=N + 8)
+        await sc.start()
+        outcomes = await asyncio.gather(
+            *[one_client(i, sc.port) for i in range(N)])
+        # wait for stragglers (disconnect terminals land asynchronously)
+        for _ in range(600):
+            if len(sc.server._terminal) == N:
+                break
+            await asyncio.sleep(0.01)
+        await sc.shutdown(drain_s=2.0)
+        srv = sc.server
+
+        # ---- zero lost requests: ids 1..N, one terminal each ----
+        assert sorted(srv._terminal) == list(range(1, N + 1))
+        assert len(srv.responses) == N               # _finish raises on dup
+        statuses = list(srv._terminal.values())
+        assert set(statuses) <= set(STATUSES)
+        counts = {s: statuses.count(s) for s in set(statuses)}
+        assert counts.get("ok", 0) >= N // 2         # chaos, not collapse
+        assert counts.get("cancelled", 0) >= 1       # disconnects landed
+        assert counts.get("timeout", 0) + counts.get("shed", 0) >= 1
+        assert srv.fault_stats["crashes"] + srv.fault_stats["transients"] \
+            > 0                                      # the plan actually hit
+
+        # ---- every surviving client read a well-formed terminal ----
+        valid_codes = set(HTTP_STATUS.values())
+        for out in outcomes:
+            kind, status, payload = out
+            if kind in ("disconnected", "conn_error"):
+                continue
+            if kind == "sse":
+                assert status == 200 and payload[-1] == "[DONE]"
+                for f in payload[:-1]:
+                    json.loads(f)                    # every frame is JSON
+            else:
+                assert status in valid_codes
+                assert isinstance(payload, dict)
+                if status != 200:
+                    assert payload["error"]["type"] in STATUSES
+        assert not _no_leaked_tasks()
+    asyncio.run(run())
