@@ -19,7 +19,11 @@ tracked across PRs:
   curves: SJF-vs-FCFS short-P50 and goodput across crash-MTBF x repair
   grids, overload shedding P99 bound, serving-layer chaos drain);
 * ``sidecar`` -> ``BENCH_sidecar.json`` (loopback HTTP/SSE: streaming
-  TTFT overhead vs in-process, client-observed SJF-vs-FCFS short P50).
+  TTFT overhead vs in-process, client-observed SJF-vs-FCFS short P50);
+* ``paging`` -> ``BENCH_paging.json`` (block-paged admission vs
+  worst-case KVBudget accounting at an identical byte budget: aggregate
+  tok/s + short P50, prefix-reuse warm-prefill speedup, and the
+  page-size x budget x share-ratio DES grid).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -41,12 +45,14 @@ BENCH_JSONS = {
     "batching": os.path.join(_ROOT, "BENCH_batching.json"),
     "faults": os.path.join(_ROOT, "BENCH_faults.json"),
     "sidecar": os.path.join(_ROOT, "BENCH_sidecar.json"),
+    "paging": os.path.join(_ROOT, "BENCH_paging.json"),
 }
 
 
 def main() -> None:
     from benchmarks import (batching_bench, faults_bench, fig3_rho_sweep,
-                            policies_bench, predictor_latency, serve_bench,
+                            paging_bench, policies_bench, predictor_latency,
+                            serve_bench,
                             sidecar_bench, sim_bench, table1_service_stats,
                             table2_dataset_stats, table4_ablation,
                             table5_ranking, table6_cross, table7_baselines,
@@ -69,6 +75,7 @@ def main() -> None:
         "batching": batching_bench.run,
         "faults": faults_bench.run,
         "sidecar": sidecar_bench.run,
+        "paging": paging_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

@@ -23,7 +23,8 @@ echo "== assert-stripped import check (python -O) =="
 python -O -c "import repro.core.sim_fast, repro.core.policy; \
 repro.core.policy.get_policy('sjf'); \
 import repro.core.sweep, repro.core.scheduler, repro.serving.batching; \
-import repro.serving.http_sidecar, repro.serving.backends"
+import repro.serving.http_sidecar, repro.serving.backends; \
+import repro.serving.paging, repro.kernels.decode_attention"
 
 echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
@@ -59,6 +60,41 @@ assert len(set(r.request_id for r in server.responses)) == n, \
 print(f"chaos smoke OK: {n} requests, statuses "
       f"{ {s: statuses.count(s) for s in set(statuses)} }, "
       f"fault_stats {server.fault_stats}")
+PY
+
+echo "== fixed-seed paging smoke (prefix hits + no-lost under eviction) =="
+# a shared-prefix workload against a pool too small for concurrent longs:
+# paged eviction must fire, every request must still retire with its exact
+# tokens, the prefix cache must actually hit, and the pool must drain empty
+python - <<'PY'
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving.engine import BatchedRealEngine, PagedBatchedEngine
+
+cfg = get_config("smollm-360m").reduced()
+base = BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=3, seed=0)
+eng = PagedBatchedEngine(cfg, params=base.params, max_len=64, segment_len=4,
+                         n_lanes=3, seed=0, page_size=8,
+                         budget_bytes=9 * 8 * base._bytes_per_token)
+rng = np.random.default_rng(7)
+prefix = rng.integers(1, cfg.vocab_size, size=24).astype(np.int64)
+prompts = [np.concatenate(
+    [prefix, rng.integers(1, cfg.vocab_size, size=8)]).astype(np.int64)
+    for _ in range(8)]
+maxes = [32, 32, 6, 6, 6, 6, 32, 6]
+res = eng.generate_batch(prompts, maxes)
+lost = [i for i, r in enumerate(res) if r is None]
+assert not lost, f"lost requests under paged eviction: {lost}"
+al = dict(eng.allocator.stats)
+mgr = eng.lane_manager.stats
+assert al["prefix_hit_pages"] > 0, f"prefix cache never hit: {al}"
+assert mgr["preemptions"] >= 1, f"tight pool never preempted: {mgr}"
+assert eng.allocator.used_pages == 0, "pages leaked after full drain"
+eng.allocator.check()
+print(f"paging smoke OK: {len(res)} requests retired, "
+      f"{al['prefix_hit_pages']} prefix-hit pages, "
+      f"{mgr['preemptions']} preemptions, pool drained clean")
 PY
 
 echo "== sidecar wire smoke (loopback HTTP/SSE, fixed seed) =="
@@ -171,4 +207,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run sidecar
     echo "== BENCH_sidecar.json =="
     cat BENCH_sidecar.json
+    echo "== paged-KV benchmark (A/B vs worst-case + prefix reuse) =="
+    python -m benchmarks.run paging
+    echo "== BENCH_paging.json =="
+    cat BENCH_paging.json
 fi

@@ -797,6 +797,353 @@ def simulate_grid_servers(arrival, service, key, tau, n_servers: int,
 
 
 # ---------------------------------------------------------------------------
+# Block-paged c-server engine (serving/paging.py's simulation mirror).
+#
+# Same event loop, dispatch rule and slowdown model as the c-server engine,
+# with the worst-case memory reservation replaced by the page-granular
+# model the paged engine implements:
+#
+# * admission charges the PROMPT's pages only (minus the shared-prefix
+#   pages when the prefix is already registered — the prefix cache);
+# * a running request's footprint grows linearly from its prompt pages to
+#   its total pages as decode progresses (one page per page_size tokens,
+#   smoothed to a rate — the DES doesn't model page-boundary staircase);
+# * pool exhaustion preempts the YOUNGEST-dispatched lane (never a solo
+#   lane): its pages are freed and it re-queues work-conserving under its
+#   original key, but its re-admission demand is its full current
+#   footprint (resume re-prefills prompt + generated, so the pages come
+#   back at once).  No admission happens at the exhaustion instant —
+#   the freed lane back-fills at the next arrival/completion event —
+#   which breaks the release/re-admit livelock the same way the live
+#   engine's per-boundary deferral does.
+# * a request's shared-prefix group registers at its first dispatch
+#   (the live engine registers right after prefill); later members admit
+#   warm — their shared pages are free and ``prefill_saved`` seconds of
+#   service (the skipped prefix prefill) are discounted.  Cache eviction
+#   under pressure is not modeled (cached pages are reclaimable, so they
+#   never block an allocation; dropping them early only loses hits).
+#
+# Bitwise contract at c=1: a solo lane is never preempted and idle-
+# override admits every head, so the page model is inert — rows reproduce
+# ``_simulate_cserver_python`` (and through it the serial engines) float
+# op for float op.
+# ---------------------------------------------------------------------------
+
+def _simulate_paged_python(arrival, service, key, tau, c, slowdown, mode,
+                           prompt_pages, total_pages, share_group,
+                           shared_pages, prefill_saved, n_pages):
+    import heapq
+    n = arrival.shape[0]
+    INF = float("inf")
+    arr = arrival.tolist()
+    svc = service.tolist()          # mutated: warm admits discount prefill
+    k0 = key.tolist()
+    curk = list(k0)
+    s = list(slowdown)
+    if len(s) < c:
+        raise ValueError(f"slowdown needs >= {c} entries, got {len(s)}")
+    srpt = mode == MODE_SRPT
+    if mode not in (MODE_NONE, MODE_SRPT):
+        raise ValueError("paged engine supports key-based and srpt "
+                         "policies only")
+    ppg = [min(float(x), float(n_pages)) for x in prompt_pages]
+    tpg = [min(float(x), float(n_pages)) for x in total_pages]
+    grp = share_group.tolist()
+    spg = shared_pages.tolist()
+    saved = prefill_saved.tolist()
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    promoted = np.zeros(n, bool)
+    started = [False] * n
+    state = [0] * n            # 0 waiting, 1 queued, 2 running, 3 done
+    used = [0.0] * n           # unscaled service received
+    last_seq = [-1] * n
+    base_pg = [0.0] * n        # admission pages (fixed at first dispatch)
+    rate = [0.0] * n           # pages per unit of credited service
+    disp_seq = [-1] * n        # dispatch order (preemption picks youngest)
+    heap: list = []
+    guard = tau is not None
+    seqc = 0
+    dseq = 0
+    t = 0.0
+    last_t = 0.0
+    i_arr = 0
+    oldest = 0
+    running: list = []
+    nq = 0
+    ndone = 0
+    promos = 0
+    preempts = 0
+    prefix_hits = 0
+    peak_pages = 0.0
+    registered: set = set()
+
+    def push(j):
+        nonlocal seqc, nq
+        heapq.heappush(heap, (curk[j], seqc, j))
+        last_seq[j] = seqc
+        seqc += 1
+        nq += 1
+
+    def heap_best():
+        while heap:
+            kk, sq, j = heap[0]
+            if state[j] == 1 and sq == last_seq[j]:
+                return kk, j
+            heapq.heappop(heap)
+        return None
+
+    def pop_valid():
+        nonlocal nq
+        while True:
+            _, sq, j = heapq.heappop(heap)
+            if state[j] == 1 and sq == last_seq[j]:
+                nq -= 1
+                return j
+
+    def advance(t_new):
+        nonlocal last_t
+        kcur = len(running)
+        if kcur and t_new > last_t:
+            d = (t_new - last_t) / s[kcur - 1]
+            for j in running:
+                used[j] += d
+        last_t = t_new
+
+    def next_completion():
+        kcur = len(running)
+        if not kcur:
+            return INF, -1
+        best_j, best_rem = -1, INF
+        for j in running:
+            r = svc[j] - used[j]
+            if r < best_rem:
+                best_rem, best_j = r, j
+        return last_t + best_rem * s[kcur - 1], best_j
+
+    def run_key(j):
+        return max(k0[j] - used[j], 0.0) if srpt else curk[j]
+
+    def held(j):
+        return min(base_pg[j] + rate[j] * used[j], tpg[j])
+
+    def pool():
+        return sum(held(j) for j in running)
+
+    def demand(j):
+        """Pages the pool must produce to (re-)dispatch j."""
+        if disp_seq[j] >= 0:                       # resume: re-prefills all
+            return base_pg[j] + rate[j] * used[j]
+        if grp[j] >= 0 and grp[j] in registered:   # warm admit
+            return ppg[j] - spg[j]
+        return ppg[j]
+
+    def fits(j):
+        # idle override, as in the c-server engine: an empty server
+        # admits any head (capped demand always fits a full pool)
+        return pool() + demand(j) <= n_pages or not running
+
+    def next_exhaustion():
+        kcur = len(running)
+        if kcur <= 1:                              # solo lane never preempts
+            return INF
+        r_tot = sum(rate[j] for j in running if used[j] < svc[j])
+        if r_tot <= 0.0:
+            return INF
+        head = n_pages - pool()
+        if head <= 0.0:
+            return last_t
+        return last_t + head * s[kcur - 1] / r_tot
+
+    def dispatch(j, promo):
+        nonlocal promos, dseq, prefix_hits, peak_pages
+        advance(t)
+        if promo:
+            promoted[j] = True
+            promos += 1
+        state[j] = 2
+        if disp_seq[j] < 0:                        # first dispatch
+            warm = grp[j] >= 0 and grp[j] in registered
+            if warm:
+                prefix_hits += 1
+                base_pg[j] = ppg[j] - spg[j]
+                svc[j] = max(svc[j] - saved[j], 1e-12)
+            else:
+                base_pg[j] = ppg[j]
+            span = max(tpg[j] - (spg[j] if warm else 0.0) - base_pg[j], 0.0)
+            rate[j] = span / svc[j] if svc[j] > 0 else 0.0
+            if grp[j] >= 0:
+                registered.add(grp[j])
+        disp_seq[j] = dseq
+        dseq += 1
+        running.append(j)
+        peak_pages = max(peak_pages, pool())
+        if not started[j]:
+            started[j] = True
+            start[j] = t
+
+    def admit_loop():
+        nonlocal oldest, nq
+        while len(running) < c and nq > 0:
+            # fits() needs the pool at time t, not at the last credit
+            # point; a no-op when running is empty, so the c=1 bitwise
+            # contract (which never reaches here with busy lanes) holds
+            advance(t)
+            while state[oldest] == 3:
+                oldest += 1
+            o = oldest
+            while state[o] != 1:
+                o += 1
+            if guard and (t - arr[o]) > tau:
+                j, promo = o, True
+            else:
+                j, promo = heap_best()[1], False
+            if not fits(j):
+                return
+            if promo:
+                nq -= 1
+            else:
+                j = pop_valid()
+            dispatch(j, promo)
+
+    while ndone < n:
+        if not running and nq == 0:
+            a = arr[i_arr]
+            if t < a:
+                t = a
+                last_t = t
+        t_fin, j_fin = next_completion()
+        t_arr = arr[i_arr] if i_arr < n else INF
+        t_ex = next_exhaustion()
+        if t_fin <= t_arr and t_fin <= t_ex:      # completion event
+            t = t_fin
+            advance(t)
+            running.remove(j_fin)
+            used[j_fin] = svc[j_fin]
+            finish[j_fin] = t
+            state[j_fin] = 3
+            ndone += 1
+            while i_arr < n and arr[i_arr] <= t:
+                state[i_arr] = 1
+                push(i_arr)
+                i_arr += 1
+            admit_loop()
+        elif t_arr <= t_ex:                       # arrival event(s)
+            if t_arr > t:
+                t = t_arr
+            if srpt:
+                advance(t)
+            while i_arr < n and arr[i_arr] <= t:
+                state[i_arr] = 1
+                push(i_arr)
+                i_arr += 1
+            if len(running) < c:
+                admit_loop()
+            elif srpt:
+                best = heap_best()
+                if best is not None:
+                    victim = max(running, key=lambda j: (run_key(j), j))
+                    vk = run_key(victim)
+                    new_pool = pool() - held(victim)
+                    fits_after = (new_pool + demand(best[1]) <= n_pages
+                                  or new_pool <= 0.0)
+                    if best[0] < vk and fits_after:
+                        advance(t)
+                        running.remove(victim)
+                        curk[victim] = vk
+                        state[victim] = 1
+                        push(victim)
+                        preempts += 1
+                        j = pop_valid()
+                        dispatch(j, False)
+        else:                                     # pool exhaustion
+            t = max(t, t_ex)
+            advance(t)
+            victim = max(running, key=lambda j: disp_seq[j])
+            running.remove(victim)
+            if not srpt:
+                pass                              # key kept: ages from arrival
+            else:
+                curk[victim] = run_key(victim)
+            state[victim] = 1
+            push(victim)
+            preempts += 1
+            # no admit here: the freed lane back-fills at the next real
+            # event (the live engine's per-boundary deferral)
+    return (start, finish, promoted, promos, preempts, prefix_hits,
+            peak_pages)
+
+
+def simulate_grid_paged(arrival, service, key, tau, n_servers: int,
+                        prompt_pages, total_pages, n_pages: int,
+                        slowdown=None, mode=None, share_group=None,
+                        shared_pages=None, prefill_saved=None):
+    """G independent block-paged c-server simulations in one call.
+
+    Layout follows :func:`simulate_grid_servers`, with the memory model
+    swapped for pages: ``prompt_pages``/``total_pages`` (G, n) are each
+    request's admission and completion footprints in pages, ``n_pages``
+    the shared pool.  Optional prefix sharing: ``share_group`` (G, n)
+    int (-1 = unshared) labels requests with a common prompt prefix,
+    ``shared_pages`` (G, n) the pages that prefix covers and
+    ``prefill_saved`` (G, n) the seconds of prefill a warm admission
+    skips.  Returns ``(start, finish, promoted, promotions,
+    preemptions, prefix_hits, peak_pages)``; the last two are length-G.
+    """
+    arrival = np.ascontiguousarray(arrival, np.float64)
+    service = np.ascontiguousarray(service, np.float64)
+    key = np.ascontiguousarray(key, np.float64)
+    prompt_pages = np.ascontiguousarray(prompt_pages, np.float64)
+    total_pages = np.ascontiguousarray(total_pages, np.float64)
+    G, n = arrival.shape
+    c = int(n_servers)
+    if c < 1:
+        raise ValueError(f"need >= 1 server, got {n_servers}")
+    if int(n_pages) < 1:
+        raise ValueError(f"need >= 1 page, got {n_pages}")
+    slowdown = tuple(float(x) for x in slowdown) if slowdown is not None \
+        else (1.0,) * c
+    if any(x <= 0 for x in slowdown):
+        raise ValueError(f"slowdown factors must be positive: {slowdown}")
+    tau_arr = np.array([np.nan if x is None else float(x) for x in tau],
+                       np.float64)
+    mode_arr = np.zeros(G, np.int8) if mode is None \
+        else np.ascontiguousarray(mode, np.int8)
+    if tau_arr.shape != (G,) or mode_arr.shape != (G,):
+        raise ValueError(f"tau and mode must have length {G}")
+    share_group = np.full((G, n), -1, np.int64) if share_group is None \
+        else np.ascontiguousarray(share_group, np.int64)
+    shared_pages = np.zeros((G, n)) if shared_pages is None \
+        else np.ascontiguousarray(shared_pages, np.float64)
+    prefill_saved = np.zeros((G, n)) if prefill_saved is None \
+        else np.ascontiguousarray(prefill_saved, np.float64)
+    start = np.empty((G, n))
+    finish = np.empty((G, n))
+    promoted = np.zeros((G, n), bool)
+    promotions = np.zeros(G, np.int64)
+    preemptions = np.zeros(G, np.int64)
+    prefix_hits = np.zeros(G, np.int64)
+    peak_pages = np.zeros(G)
+    if n == 0:
+        return (start, finish, promoted, promotions, preemptions,
+                prefix_hits, peak_pages)
+    for g in range(G):
+        tg = None if np.isnan(tau_arr[g]) else float(tau_arr[g])
+        (start[g], finish[g], promoted[g], promos, pre, hits,
+         peak) = _simulate_paged_python(
+            arrival[g], service[g], key[g], tg, c, slowdown,
+            int(mode_arr[g]), prompt_pages[g], total_pages[g],
+            share_group[g], shared_pages[g], prefill_saved[g],
+            float(n_pages))
+        promotions[g] = promos
+        preemptions[g] = pre
+        prefix_hits[g] = hits
+        peak_pages[g] = peak
+    return (start, finish, promoted, promotions, preemptions,
+            prefix_hits, peak_pages)
+
+
+# ---------------------------------------------------------------------------
 # Batch-level front end
 # ---------------------------------------------------------------------------
 
@@ -811,6 +1158,8 @@ class BatchSimResult:
     promotions: int
     makespan: float
     preemptions: int = 0       # preemptive policies only
+    prefix_hits: int = 0       # paged engine only (warm admissions)
+    peak_pages: float = 0.0    # paged engine only (pool high-water mark)
 
     def _vals(self, klass: Optional[str], attr: str) -> np.ndarray:
         if attr == "sojourn":
@@ -916,6 +1265,57 @@ def simulate_batch_servers(batch: RequestBatch, policy="sjf",
                           promoted=promoted, promotions=int(promos[0]),
                           makespan=float(finish.max()) if n else 0.0,
                           preemptions=int(pre[0]))
+
+
+def simulate_batch_paged(batch: RequestBatch, policy="sjf",
+                         tau: Optional[float] = None, n_servers: int = 1,
+                         slowdown=None, *, prompt_pages, total_pages,
+                         n_pages: int, share_group=None, shared_pages=None,
+                         prefill_saved=None) -> BatchSimResult:
+    """Run the block-paged c-server DES over a :class:`RequestBatch`.
+
+    Per-request arrays (``prompt_pages``/``total_pages`` and the optional
+    prefix-sharing triple) are aligned with the batch's row order, like
+    ``mem_tokens`` in :func:`simulate_batch_servers`.  At ``n_servers=1``
+    with unit slowdown and no sharing the trace is bitwise-equal to
+    :func:`simulate_batch_servers` (a solo lane never pages out).
+    """
+    pol = get_policy(policy)
+    if pol.mode not in (MODE_NONE, MODE_SRPT):
+        raise ValueError(f"policy {pol.name!r}: the paged engine "
+                         "supports key-based and srpt policies only")
+    tau = pol.aging.effective_tau(tau)
+    perm = np.lexsort((batch.req_id, batch.arrival))
+    arrival = batch.arrival[perm]
+    service = batch.true_service[perm]
+    key = pol.key_array(arrival, batch.p_long[perm], service,
+                        tenant=batch.tenant[perm], tenants=batch.tenants)
+
+    def _row(x, fill=0.0, dt=np.float64):
+        if x is None:
+            return None
+        return np.asarray(x, dt)[perm][None]
+    (start_s, finish_s, promoted_s, promos, pre, hits,
+     peak) = simulate_grid_paged(
+        arrival[None], service[None], key[None], (tau,), n_servers,
+        _row(prompt_pages), _row(total_pages), int(n_pages),
+        slowdown=slowdown, mode=(pol.mode,),
+        share_group=_row(share_group, dt=np.int64),
+        shared_pages=_row(shared_pages),
+        prefill_saved=_row(prefill_saved))
+    n = len(batch)
+    start = np.empty(n)
+    finish = np.empty(n)
+    promoted = np.empty(n, bool)
+    start[perm] = start_s[0]
+    finish[perm] = finish_s[0]
+    promoted[perm] = promoted_s[0]
+    return BatchSimResult(batch=batch, start=start, finish=finish,
+                          promoted=promoted, promotions=int(promos[0]),
+                          makespan=float(finish.max()) if n else 0.0,
+                          preemptions=int(pre[0]),
+                          prefix_hits=int(hits[0]),
+                          peak_pages=float(peak[0]))
 
 
 # ---------------------------------------------------------------------------

@@ -141,6 +141,63 @@ def simulate_servers(requests: Sequence[Request], policy="sjf",
 
 
 @dataclass
+class PagedSimResult(SimResult):
+    """A :class:`SimResult` plus the paged-pool outcome counters."""
+
+    preemptions: int = 0
+    prefix_hits: int = 0
+    peak_pages: float = 0.0
+
+
+def simulate_paged(requests: Sequence[Request], policy="sjf",
+                   tau: Optional[float] = None, n_servers: int = 1,
+                   slowdown=None, *, prompt_tokens, total_tokens,
+                   page_size: int, n_pages: int, share_group=None,
+                   shared_tokens=None,
+                   prefill_saved=None) -> PagedSimResult:
+    """Run the *block-paged* c-server DES: the worst-case memory
+    reservation of :func:`simulate_servers` replaced by page-granular
+    accounting with linear decode growth, youngest-lane preemption on
+    pool exhaustion and a shared-prefix cache
+    (:func:`repro.core.sim_fast.simulate_grid_paged`).
+
+    Token arrays are aligned with the arrival-sorted request order and
+    converted to pages here (``ceil(tokens / page_size)``; shared
+    prefixes count whole pages only, as the allocator caches only full
+    pages).  ``share_group`` labels requests sharing a prompt prefix of
+    ``shared_tokens`` tokens; ``prefill_saved`` is the prefill seconds a
+    warm admission skips.
+    """
+    from repro.core.sim_fast import RequestBatch, simulate_batch_paged
+    ps = int(page_size)
+    if ps < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    n = len(reqs)
+    if n == 0:
+        return PagedSimResult(requests=[], promotions=0, makespan=0.0)
+    pp = -(-np.asarray(prompt_tokens, np.float64) // ps)
+    tp = -(-np.asarray(total_tokens, np.float64) // ps)
+    sp = None if shared_tokens is None \
+        else np.asarray(shared_tokens, np.float64) // ps   # full pages only
+    res = simulate_batch_paged(
+        RequestBatch.from_requests(reqs), policy=policy, tau=tau,
+        n_servers=n_servers, slowdown=slowdown, prompt_pages=pp,
+        total_pages=tp, n_pages=n_pages, share_group=share_group,
+        shared_pages=sp, prefill_saved=prefill_saved)
+    for i, r in enumerate(reqs):
+        r.start = float(res.start[i])
+        r.finish = float(res.finish[i])
+        r.promoted = bool(res.promoted[i])
+    done = [reqs[i] for i in np.argsort(res.start, kind="stable")]
+    return PagedSimResult(requests=done, promotions=res.promotions,
+                          makespan=res.makespan,
+                          preemptions=res.preemptions,
+                          prefix_hits=res.prefix_hits,
+                          peak_pages=res.peak_pages)
+
+
+@dataclass
 class FaultSimResult(SimResult):
     """A :class:`SimResult` plus the fault-run outcome counters.  Shed
     requests stay in ``requests`` with ``start = finish = NaN``, so the

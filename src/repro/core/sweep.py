@@ -354,6 +354,151 @@ def sweep_lane_batches(batches: Sequence[RequestBatch],
     return out
 
 
+@dataclass
+class PagingSweepResult:
+    """Metric arrays over conditions x page-size x budget x share x seed."""
+
+    conditions: Tuple[Condition, ...]
+    page_sizes: Tuple[int, ...]
+    budgets: Tuple[float, ...]                   # memory tokens
+    share_ratios: Tuple[float, ...]
+    seeds: Tuple[int, ...]
+    metrics: Dict[str, np.ndarray]               # each (C, P, B, R, S)
+
+    def metric(self, name: str) -> np.ndarray:
+        return self.metrics[name]
+
+
+PAGING_METRICS = METRICS + ("preemptions", "prefix_hits", "peak_pages")
+
+
+def sweep_paging(conditions: Sequence[Condition],
+                 page_sizes: Sequence[int], budgets: Sequence[float],
+                 share_ratios: Sequence[float], seeds: Sequence[int],
+                 n: int, rho: float, short, long, mix_long: float = 0.5,
+                 n_servers: int = 4, slowdown=None,
+                 mem_tokens_per_s: float = 60.0, prompt_frac: float = 0.35,
+                 shared_tokens: Optional[float] = None,
+                 prefill_s_per_token: float = 5e-4) -> PagingSweepResult:
+    """The block-paged memory grid: policy x page-size x byte-budget x
+    prefix-share-ratio through the paged c-server engine
+    (``sim_fast.simulate_grid_paged``), answering how much sojourn the
+    page-granular accounting recovers at a FIXED budget, and how page
+    size and prefix sharing move it.
+
+    * ``page_sizes`` x ``budgets``: the pool is ``budget // page_size``
+      pages — the same memory-token budget sliced at different
+      granularities (big pages waste more of the last partial page;
+      the DES's linear-growth model shows the admission-level effect);
+    * ``share_ratios``: each request independently shares a fixed
+      ``shared_tokens``-token system prefix with probability r.  Warm
+      admissions skip those pages and ``shared_tokens x
+      prefill_s_per_token`` seconds of prefill;
+    * request memory: total residency ``true_service x
+      mem_tokens_per_s`` tokens, of which ``prompt_frac`` is prompt
+      (admission-time) and the rest decode growth.  ``shared_tokens``
+      defaults to half the mean prompt.
+
+    One workload per seed is shared across every cell (paired).
+    Returns metric arrays ``(C, P, B, R, S)``; beyond the standard
+    sojourn metrics: ``preemptions`` (pool-exhaustion pageouts),
+    ``prefix_hits`` (warm admissions) and ``peak_pages``.
+    """
+    from repro.core.sim_fast import _KLASS_CODE, simulate_grid_paged
+    specs = tuple((p, t) for p, t in conditions)
+    named = tuple((get_policy(p).name, t) for p, t in specs)
+    policies = [get_policy(p) for p, _ in specs]
+    page_sizes = tuple(int(p) for p in page_sizes)
+    budgets = tuple(float(b) for b in budgets)
+    share_ratios = tuple(float(r) for r in share_ratios)
+    seeds = tuple(int(s) for s in seeds)
+    if slowdown is None:
+        slowdown = (1.0,) * int(n_servers)
+    es = mix_long * long.mean + (1.0 - mix_long) * short.mean
+    lam = rho / es
+    if shared_tokens is None:
+        shared_tokens = 0.5 * prompt_frac * es * mem_tokens_per_s
+    C, G = len(specs), len(seeds)
+
+    arrival = np.empty((C * G, n))
+    service = np.empty((C * G, n))
+    key = np.empty((C * G, n))
+    total_tok = np.empty((C * G, n))
+    prompt_tok = np.empty((C * G, n))
+    taus: List[Optional[float]] = []
+    modes = np.zeros(C * G, np.int8)
+    klasses = []
+    shared_mask = {}                 # seed index -> per-ratio request mask
+    for g, s in enumerate(seeds):
+        rng = np.random.default_rng(s)
+        b = RequestBatch.poisson(rng, n, lam, short, long,
+                                 mix_long=mix_long)
+        perm = np.lexsort((b.req_id, b.arrival))
+        arr, svc = b.arrival[perm], b.true_service[perm]
+        pl, tc, tn = b.p_long[perm], b.tenant[perm], b.tenants
+        klasses.append(b.klass[perm])
+        # one uniform draw per request, thresholded per ratio: raising r
+        # only ADDS shared requests (nested masks, cleaner trends)
+        u = rng.random(n)
+        shared_mask[g] = {r: u < r for r in share_ratios}
+        tot = svc * mem_tokens_per_s
+        for c_i, ((_, tau), pol) in enumerate(zip(specs, policies)):
+            row = c_i * G + g
+            arrival[row] = arr
+            service[row] = svc
+            key[row] = pol.key_array(arr, pl, svc, tenant=tc, tenants=tn)
+            total_tok[row] = tot
+            prompt_tok[row] = prompt_frac * tot
+            taus.append(pol.aging.effective_tau(tau))
+            modes[row] = pol.mode
+
+    shape = (C, len(page_sizes), len(budgets), len(share_ratios), G)
+    out = {m: np.empty(shape) for m in PAGING_METRICS}
+    for ri, ratio in enumerate(share_ratios):
+        grp = np.full((C * G, n), -1, np.int64)
+        shared = np.zeros((C * G, n))
+        saved = np.zeros((C * G, n))
+        ptok = prompt_tok.copy()
+        ttok = total_tok.copy()
+        for g in range(G):
+            m = shared_mask[g][ratio]
+            for c_i in range(C):
+                row = c_i * G + g
+                grp[row, m] = 0                      # one system prefix
+                shared[row, m] = shared_tokens
+                saved[row, m] = shared_tokens * prefill_s_per_token
+                ptok[row, m] += shared_tokens        # prefix + private
+                ttok[row, m] += shared_tokens
+        for pi, ps in enumerate(page_sizes):
+            for bi, budget in enumerate(budgets):
+                n_pages = max(1, int(budget // ps))
+                (start, finish, _, promotions, preempts, hits,
+                 peak) = simulate_grid_paged(
+                    arrival, service, key, taus, n_servers,
+                    -(-ptok // ps), -(-ttok // ps), n_pages,
+                    slowdown=slowdown, mode=modes, share_group=grp,
+                    shared_pages=shared // ps,
+                    prefill_saved=saved)
+                for c_i in range(C):
+                    for g in range(G):
+                        row = c_i * G + g
+                        klass = klasses[g]
+                        vals = _percentile_metrics(
+                            start[row], finish[row], int(promotions[row]),
+                            arrival[row],
+                            klass == _KLASS_CODE["short"],
+                            klass == _KLASS_CODE["long"])
+                        cell = (c_i, pi, bi, ri, g)
+                        for m, v in zip(METRICS, vals):
+                            out[m][cell] = v
+                        out["preemptions"][cell] = float(preempts[row])
+                        out["prefix_hits"][cell] = float(hits[row])
+                        out["peak_pages"][cell] = float(peak[row])
+    return PagingSweepResult(conditions=named, page_sizes=page_sizes,
+                             budgets=budgets, share_ratios=share_ratios,
+                             seeds=seeds, metrics=out)
+
+
 def run_grid(axes: Dict[str, Sequence], fn: Callable) -> Dict[tuple, object]:
     """Evaluate ``fn(**point)`` over the cartesian product of ``axes``.
 

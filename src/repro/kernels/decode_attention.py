@@ -62,6 +62,104 @@ def _decode_kernel(t_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                        ).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(bt_ref, t_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page: int, scale: float):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (page, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    t = t_ref[b]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos <= t, s, NEG_INF)            # (G, page)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(ip == np_ - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, block_table, t, *,
+                                  interpret: bool = True):
+    """Block-paged variant: K/V live in a shared physical page pool and
+    each sequence reads its logical window through a block table.
+
+    q: (B, KV, G, hd) one query token, grouped; k_pages, v_pages:
+    (n_pages, KV, page, hd) physical pool; block_table: (B, P) int32
+    physical page backing logical block p of sequence b; t: (B,) int32
+    per-sequence fill levels (logical slots <= t[b] attend).  Returns
+    (B, KV, G, hd).
+
+    The block table and fill levels ride as scalar-prefetch operands
+    (``PrefetchScalarGridSpec``): the index map dereferences
+    ``bt[b, ip]`` to pick which physical page the (b, head, ip) program
+    streams, so the gather happens in the DMA schedule — the kernel body
+    is the same online-softmax loop as the dense ring kernel, with the
+    grid's page axis standing in for the kv-block axis.  Unallocated
+    table slots point at the pinned trash page (0); they sit beyond the
+    fill level so the mask discards whatever garbage they hold.
+    """
+    B, KV, G, hd = q.shape
+    n_pages, _, page, _ = k_pages.shape
+    P = block_table.shape[1]
+    grid = (B, KV, P)
+    bt = jnp.asarray(block_table, jnp.int32)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_paged_decode_kernel, page=page,
+                               scale=hd ** -0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, ip, bt_ref, t_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, ip, bt_ref, t_ref:
+                         (bt_ref[b, ip], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, ip, bt_ref, t_ref:
+                         (bt_ref[b, ip], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, ip, bt_ref, t_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(bt, t_arr, q, k_pages, v_pages)
+
+
 def decode_attention_kernel(q, k, v, t, *, block_kv: int = 256,
                             interpret: bool = True):
     """q: (B, KV, G, hd) one query token, grouped; k, v: (B, KV, S, hd);

@@ -24,16 +24,37 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
 
 
 def decode_attention_ref(q, k, v, t):
-    """q: (B, KV, G, hd); k, v: (B, KV, S, hd); slots <= t attend."""
+    """q: (B, KV, G, hd); k, v: (B, KV, S, hd); slots <= t attend.
+    ``t``: scalar, or (B,) per-sequence fill levels (decode lanes)."""
     B, KV, G, hd = q.shape
     S = k.shape[2]
     s = jnp.einsum("bkgh,bksh->bkgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * hd ** -0.5
-    mask = jnp.arange(S)[None, None, None, :] <= t
+    t_b = t if jnp.ndim(t) == 0 else t[:, None, None, None]
+    mask = jnp.arange(S)[None, None, None, :] <= t_b
     s = jnp.where(mask, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksh->bkgh", w, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, t):
+    """Block-paged decode oracle: gather the logical KV window through
+    the per-sequence block table, then plain masked softmax attention.
+
+    q: (B, KV, G, hd); k_pages, v_pages: (n_pages, KV, page, hd) shared
+    physical pool; block_table: (B, P) int32 physical page per logical
+    block; t: (B,) int32 fill levels (logical slots <= t attend).
+    Returns (B, KV, G, hd).
+    """
+    B = q.shape[0]
+    KV, ps, hd = k_pages.shape[1:]
+    P = block_table.shape[1]
+    k = k_pages[block_table]                       # (B, P, KV, ps, hd)
+    k = k.transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
+    v = v_pages[block_table]
+    v = v.transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
+    return decode_attention_ref(q, k, v, t)
 
 
 def gbdt_margins_ref(X, feature, threshold, value, *, n_classes: int = 3):

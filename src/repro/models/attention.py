@@ -205,7 +205,14 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
     """Returns (x_out, new_cache).
 
     mode "train": full causal attention, no cache returned.
-    mode "prefill": causal attention; returns {"k","v","t"} cache.
+    mode "prefill": causal attention; returns {"k","v","t"} cache.  With a
+    cache supplied (extend/continuation prefill, the paged engine's
+    preemption resume), x is the *suffix*: new KV is written into the
+    existing buffer at its fill level ``t`` and the suffix attends the
+    cached prefix plus itself — row-for-row bitwise identical to a full
+    re-prefill of prefix+suffix at the same buffer extent, because each
+    query row's online-softmax accumulation is independent of the other
+    rows and fully-masked kv chunks contribute exact zeros.
     mode "decode": x is (B,1,D); the cache is a ring buffer of S slots —
     the new KV is written at slot ``t % S`` (t = absolute fill level, RoPE
     stays absolute) so generation past the cache capacity wraps onto the
@@ -214,12 +221,30 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
     the batch, or a (B,) vector of per-sequence fill levels (decode
     lanes): each sequence then gets its own RoPE position, ring slot and
     attention window, so one natively batched step serves lanes that
-    prefilled at different prompt lengths.
+    prefilled at different prompt lengths.  A cache carrying a block
+    table ("bt") is block-paged (serving/paging.py): "k"/"v" are shared
+    physical pools (n_pages, page, KV, hd) and each lane reads/writes its
+    logical window through its table row; unallocated slots point at the
+    pinned trash page 0 and dead lanes past the window write there.
     """
     B = x.shape[0]
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     if mode in ("train", "prefill"):
         S = x.shape[1]
+        if mode == "prefill" and cache is not None:
+            # extend: append S suffix tokens at the buffer's fill level
+            plen = cache["t"]          # scalar fill level, traced
+            positions = plen + jnp.arange(S)
+            q, k, v = _project_qkv(cfg, p, h, positions)
+            kbuf = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), plen, axis=1)
+            vbuf = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), plen, axis=1)
+            out = flash_attention(q, kbuf, vbuf, causal=True, q_offset=plen)
+            new_cache = {"k": kbuf, "v": vbuf, "t": plen + S}
+            out = constrain(out, "batch", "seq", "heads", "head_dim")
+            out = out.reshape(B, -1, cfg.attn_dim)
+            return x + dense(out, p["wo"]), new_cache
         positions = jnp.arange(S)
         q, k, v = _project_qkv(cfg, p, h, positions)
         q = constrain(q, "batch", "seq", "heads", "head_dim")
@@ -227,6 +252,45 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
         new_cache = None
         if mode == "prefill":
             new_cache = {"k": k, "v": v, "t": jnp.asarray(S, jnp.int32)}
+    elif cache is not None and "bt" in cache:  # block-paged decode
+        t = cache["t"]                         # (B,) per-lane fill levels
+        bt = cache["bt"]                       # (B, P) int32 page per block
+        pool_k, pool_v = cache["k"], cache["v"]    # (Np, page, KV, hd)
+        n_pages, page = pool_k.shape[0], pool_k.shape[1]
+        P = bt.shape[1]
+        max_len = P * page
+        positions = t[:, None]
+        q, k, v = _project_qkv(cfg, p, h, positions)
+        # write: lane b's step-t KV lands in physical page bt[b, t//page]
+        # at in-page slot t%page.  Lanes past their window (stopped lanes
+        # whose t keeps advancing until segment end) are routed to the
+        # pinned trash page so they can never clobber a live or shared
+        # page; live lanes never collide (decode always writes a
+        # privately owned page — registration stops short of the write
+        # frontier), so the batched scatter is deterministic where it
+        # matters.
+        page_slot = jnp.minimum(t // jnp.int32(page), jnp.int32(P - 1))
+        pg = jnp.take_along_axis(bt, page_slot[:, None], axis=1)[:, 0]
+        pg = jnp.where(t < max_len, pg, jnp.int32(0))
+        gs = pg * page + jax.lax.rem(t, jnp.int32(page))
+        KV, hd = pool_k.shape[2], pool_k.shape[3]
+        flat_k = pool_k.reshape(n_pages * page, KV, hd)
+        flat_v = pool_v.reshape(n_pages * page, KV, hd)
+        flat_k = flat_k.at[gs].set(k.astype(flat_k.dtype)[:, 0])
+        flat_v = flat_v.at[gs].set(v.astype(flat_v.dtype)[:, 0])
+        new_pool_k = flat_k.reshape(n_pages, page, KV, hd)
+        new_pool_v = flat_v.reshape(n_pages, page, KV, hd)
+        # read: gather each lane's logical window through its table, then
+        # the exact same masked attention as the ring path — bitwise
+        # equal because every logical slot holds the same value either
+        # way and the shapes/einsums are identical.
+        k_log = new_pool_k[bt].reshape(B, max_len, KV, hd)
+        v_log = new_pool_v[bt].reshape(B, max_len, KV, hd)
+        out = decode_attention(q, k_log, v_log, t)
+        new_cache = {"k": new_pool_k, "v": new_pool_v, "t": t + 1, "bt": bt}
+        out = constrain(out, "batch", "seq", "heads", "head_dim")
+        out = out.reshape(B, -1, cfg.attn_dim)
+        return x + dense(out, p["wo"]), new_cache
     else:  # decode
         t = cache["t"]  # absolute fill level(s); () shared or (B,) per-seq
         S = cache["k"].shape[1]

@@ -175,11 +175,17 @@ class LM:
 
     # -- serving -------------------------------------------------------------
     def prefill(self, params, batch, pad_to: Optional[int] = None,
-                prompt_len=None):
+                prompt_len=None, caches=None, fill_to=None):
         """Full-prompt forward building the decode cache.
 
         Returns (last_logits (B,V), caches).  Attention KV caches are padded
         to ``pad_to`` slots if given.
+
+        ``caches`` switches to *extend* (continuation) prefill: the batch is
+        a suffix appended at the supplied caches' fill level (the paged
+        engine's preemption resume re-prefills only the generated tokens).
+        ``fill_to`` then overrides the post-prefill fill level (base fill +
+        suffix length rather than the suffix length alone).
 
         ``prompt_len`` (optional dynamic scalar) enables *bucketed* prefill:
         the token batch may be right-padded to a bucket length; logits are
@@ -202,7 +208,8 @@ class LM:
         x = self._embed_in(params, batch)
         img = batch.get("image_embeds")
         x, caches, _ = tf.run_stack(cfg, params["blocks"], x, mode="prefill",
-                                    image_embeds=img, remat=False)
+                                    caches=caches, image_embeds=img,
+                                    remat=False)
         if prompt_len is None:
             last = x[:, -1:, :]
         else:
@@ -212,7 +219,7 @@ class LM:
             else:
                 last = jnp.take_along_axis(x, (pl - 1)[:, None, None],
                                            axis=1)
-            caches = _set_fill(cfg, caches, pl)
+            caches = _set_fill(cfg, caches, pl if fill_to is None else fill_to)
         logits = self._head(params, last)[:, 0]
         if pad_to is not None:
             caches = _pad_kv(cfg, caches, pad_to)
@@ -285,6 +292,41 @@ class LM:
                                              jnp.float32)})
             else:
                 raise ValueError(kind)
+        return tuple(caches)
+
+    def init_paged_cache(self, batch_size: int, max_len: int,
+                         n_pages: int, page_size: int):
+        """Zero block-paged caches (serving/paging.py).
+
+        Attention K/V live in a shared physical pool of ``n_pages`` pages
+        (``page_size`` slots each, physical page 0 pinned as the trash
+        page) instead of per-lane ring buffers; each lane addresses its
+        logical window of ``max_len`` slots through a per-lane block
+        table ``bt`` (zeros = unallocated, pointing at trash) and its own
+        fill level ``t``.  Every layer shares the lane's table — a
+        physical page index selects the same page in every layer's pool,
+        so the allocator hands out layer-agnostic page ids.  Attention-
+        only stacks: recurrent blocks have no paged analogue here.
+        """
+        cfg = self.cfg
+        dt = dtype_of(cfg)
+        rep = cfg.pattern_repeats
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} not a multiple of "
+                             f"page_size {page_size}")
+        P = max_len // page_size
+        caches = []
+        for kind in cfg.block_pattern:
+            if kind not in (ATTN, ATTN_MOE):
+                raise ValueError(
+                    f"block-paged KV needs a pure-attention stack, got {kind}")
+            caches.append({
+                "k": jnp.zeros((rep, n_pages, page_size, KV, hd), dt),
+                "v": jnp.zeros((rep, n_pages, page_size, KV, hd), dt),
+                "t": jnp.zeros((rep, batch_size), jnp.int32),
+                "bt": jnp.zeros((rep, batch_size, P), jnp.int32),
+            })
         return tuple(caches)
 
     def cache_axes(self):

@@ -316,7 +316,10 @@ class HTTPBackend(Backend):
                        extra: Optional[dict] = None,
                        headers: Optional[dict] = None) -> dict:
         self._cancel = False
-        stream = on_segment is not None
+        # stream whenever a consumer wants deltas at arrival OR might
+        # cancel mid-flight: the buffered path can't observe either
+        # until the upstream finishes (ROADMAP item-3 leftover)
+        stream = on_segment is not None or cancel_cb is not None
         payload = {"model": self.model,
                    "messages": [{"role": "user", "content": prompt}],
                    "max_tokens": int(max_new_tokens), "stream": stream}

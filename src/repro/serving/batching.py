@@ -115,6 +115,11 @@ class LaneState:
     ttft_s: float = 0.0
     tokens: List[int] = field(default_factory=list)
     meta: dict = field(default_factory=dict)
+    # block-paged mode (serving/paging.py): physical pages owned by this
+    # lane, and how many leading prompt tokens were satisfied from the
+    # prefix cache (0 under worst-case ring accounting)
+    pages: List[int] = field(default_factory=list)
+    prefix_len: int = 0
 
 
 class LaneManager:

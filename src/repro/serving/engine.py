@@ -318,6 +318,7 @@ class BatchedRealEngine(RealEngine):
         self._lane_decoder = LaneDecoder(self.lm, max_len, self.n_lanes,
                                          segment_len)
         self.lane_manager = None       # the most recent run's manager/stats
+        self.dead_steps = 0            # lane-steps burned on stopped lanes
 
     def take_pending(self) -> list:
         """Drain the popped-but-not-admitted work items of the most recent
@@ -356,6 +357,90 @@ class BatchedRealEngine(RealEngine):
         self.run_lanes(source, on_finish, eos_id=eos_id)
         return results
 
+    # -------------------------------------------------- lane-loop hook points
+    # The paged engine (PagedBatchedEngine) reuses the whole run_lanes loop
+    # and specializes only these: manager construction, the admission
+    # check/commit (prefix-aware in pages), the prefill-and-insert step
+    # (page scatter + extend prefill), the pre-segment hook (page growth /
+    # preemption) and the post-release hook (block-table scrub).
+    def _new_manager(self):
+        from repro.serving.batching import KVBudget, LaneManager
+        return LaneManager(self.n_lanes, KVBudget(self.budget_bytes),
+                           self._bytes_per_token, self.max_len)
+
+    def _head_fits(self, mgr, item, ids) -> bool:
+        return mgr.can_admit(len(ids), item["max_new"])
+
+    def _admit_item(self, mgr, lane: int, item, ids, t_admit, backfill: bool):
+        return mgr.admit(lane, req_id=item["req_id"], prompt_len=len(ids),
+                         max_new=item["max_new"],
+                         tenant=item.get("tenant", "default"),
+                         admit_t=t_admit, meta=item.get("meta"),
+                         backfill=backfill)
+
+    def _post_insert(self, group, first, plens, now, tok, plen, produced,
+                     max_new, active) -> None:
+        """Shared host-side bookkeeping once a claim group is prefilled
+        and inserted: per-lane counters + the first (prefill) token."""
+        for r, (st, lane, ids, mx) in enumerate(group):
+            st.prompt_len = plens[r]
+            st.ttft_s = now() - st.admit_t
+            st.tokens = [int(first[r])]
+            tok[lane] = int(first[r])
+            plen[lane] = plens[r]
+            produced[lane] = 1
+            max_new[lane] = mx
+            active[lane] = True
+
+    def _prefill_claims(self, mgr, dec, caches, claims, now, tok, plen,
+                        produced, max_new, active):
+        """Prefill admitted claims per bucket group (rows pad exactly as
+        their solo prefill would, so per-lane results match the serial
+        path bitwise) — one jit call + one lane insert per group."""
+        from repro.serving.generate import bucket_for
+
+        def bucket_of(n):
+            return bucket_for(n, self.buckets) if self._bucketing else n
+        groups: dict = {}
+        for claim in claims:
+            groups.setdefault(bucket_of(len(claim[2])), []).append(claim)
+        for group in groups.values():
+            logits, pcache, plens = self._run_prefill_group(
+                [ids for _, _, ids, _ in group], pad_rows=self.n_lanes)
+            first = np.argmax(np.asarray(logits), axis=-1)
+            caches = dec.insert_lanes(
+                caches, [lane for _, lane, _, _ in group], pcache)
+            self._post_insert(group, first, plens, now, tok, plen,
+                              produced, max_new, active)
+        return caches
+
+    def _boundary_reset(self) -> None:
+        """Start-of-segment-boundary hook (per outer loop iteration)."""
+
+    def _pre_segment(self, mgr, dec, caches, tok, produced, plen, max_new,
+                     active, dev, pending):
+        """Hook before the segment launch.  Returns (caches, changed);
+        ``changed`` means lanes were freed (the caller back-fills and
+        re-runs the hook until it settles)."""
+        return caches, False
+
+    def _post_release(self, dec, caches, lanes):
+        """Hook after lanes retire/evict (paged: scrub block tables so
+        the released pages can never receive the lanes' dead writes)."""
+        return caches
+
+    def _result_tokens(self, state) -> list:
+        return list(state.tokens)
+
+    def _init_lanes(self, dec):
+        """Lane-cache construction per run (paged: reuses the previous
+        run's pools so the prefix cache keeps its contents)."""
+        return dec.init_lanes()
+
+    def _retain_caches(self, caches) -> None:
+        """End-of-run hook: the paged engine stows the pools for the
+        next run; the ring engine lets them be collected."""
+
     def run_lanes(self, source, on_finish, *, eos_id: Optional[int] = None,
                   cancel_check=None, now_fn=None) -> None:
         """Drive the lanes until ``source`` and all lanes drain.
@@ -372,14 +457,13 @@ class BatchedRealEngine(RealEngine):
         wall clock; the server injects its virtual clock).
         """
         import jax.numpy as jnp
-        from repro.serving.batching import KVBudget, LaneManager
         now = now_fn if now_fn is not None else time.monotonic
-        mgr = LaneManager(self.n_lanes, KVBudget(self.budget_bytes),
-                          self._bytes_per_token, self.max_len)
+        mgr = self._new_manager()
         self.lane_manager = mgr
+        self.dead_steps = 0
         dec = self._lane_decoder
         C = self.n_lanes
-        caches = dec.init_lanes()
+        caches = self._init_lanes(dec)
         # host-authoritative lane arrays; mirrored to device lazily (the
         # device copies persist across segments and are rebuilt only when
         # admission/eviction changes the lane composition — "dirty")
@@ -399,7 +483,6 @@ class BatchedRealEngine(RealEngine):
 
         def fill(backfill: bool = False) -> None:
             nonlocal caches
-            from repro.serving.generate import bucket_for
             free = mgr.free_lanes()
             # phase 1: claim admissible (item, lane) pairs under the
             # budget, in strict source order (a blocked head blocks all)
@@ -415,52 +498,27 @@ class BatchedRealEngine(RealEngine):
                     break
                 item = pending[0]
                 ids = np.asarray(item["ids"], np.int64).reshape(-1)
-                if not mgr.can_admit(len(ids), item["max_new"]):
+                if not self._head_fits(mgr, item, ids):
                     # strict policy order: the head blocks, nothing bypasses
                     mgr.stats["blocked_on_budget"] += 1
                     break
                 pending.pop(0)
                 lane = free.pop(0)
-                t_admit = now()
-                st = mgr.admit(lane, req_id=item["req_id"],
-                               prompt_len=len(ids),
-                               max_new=item["max_new"],
-                               tenant=item.get("tenant", "default"),
-                               admit_t=t_admit, meta=item.get("meta"),
-                               backfill=backfill)
+                st = self._admit_item(mgr, lane, item, ids, now(), backfill)
                 claims.append((st, lane, ids, item["max_new"]))
             if not claims:
                 return
-            # phase 2: prefill per bucket group (rows pad exactly as their
-            # solo prefill would, so per-lane results match the serial
-            # path bitwise) — one jit call + one lane insert per group
-            def bucket_of(n):
-                return bucket_for(n, self.buckets) if self._bucketing else n
-            groups: dict = {}
-            for claim in claims:
-                groups.setdefault(bucket_of(len(claim[2])), []).append(claim)
-            for group in groups.values():
-                logits, pcache, plens = self._run_prefill_group(
-                    [ids for _, _, ids, _ in group], pad_rows=self.n_lanes)
-                first = np.argmax(np.asarray(logits), axis=-1)
-                caches = dec.insert_lanes(
-                    caches, [lane for _, lane, _, _ in group], pcache)
-                for r, (st, lane, ids, mx) in enumerate(group):
-                    st.prompt_len = plens[r]
-                    st.ttft_s = now() - st.admit_t
-                    st.tokens = [int(first[r])]
-                    tok[lane] = int(first[r])
-                    plen[lane] = plens[r]
-                    produced[lane] = 1
-                    max_new[lane] = mx
-                    active[lane] = True
+            # phase 2: prefill + lane insert (paged: page scatter / extend)
+            caches = self._prefill_claims(mgr, dec, caches, claims, now,
+                                          tok, plen, produced, max_new,
+                                          active)
             dev["d"] = None             # lane composition changed
 
         def finish(state, cancelled: bool, crashed: bool = False) -> None:
             t_fin = now()
             self.served += not cancelled
             on_finish(state, {
-                "tokens": list(state.tokens), "cancelled": cancelled,
+                "tokens": self._result_tokens(state), "cancelled": cancelled,
                 "crashed": crashed,
                 "ttft_s": state.ttft_s, "admit_t": state.admit_t,
                 "finish_t": t_fin, "service_s": t_fin - state.admit_t,
@@ -468,7 +526,12 @@ class BatchedRealEngine(RealEngine):
 
         inj = self.fault_injector
         fill()
-        while active.any():
+        # `pending` in the condition: growth preemption (paged) can empty
+        # every lane while the just-preempted head sits deferred for the
+        # boundary — the next iteration lifts the deferral and re-admits
+        # (an idle manager always admits its head, so this terminates)
+        while active.any() or pending:
+            self._boundary_reset()
             # segment boundary: collect client disconnects and injected
             # lane crashes, then evict + back-fill in one pass.  A
             # whole-engine crash (poll_segment) raises out of run_lanes;
@@ -498,20 +561,43 @@ class BatchedRealEngine(RealEngine):
                 if dev["d"] is not None:
                     tok = np.array(dev["d"][0])       # refresh host mirror
                 dev["d"] = None
+                caches = self._post_release(
+                    dec, caches, [lane for lane, _ in evictions])
                 fill(backfill=True)
                 if not active.any():
+                    continue
+            # paged: grow block tables for the coming segment, preempting
+            # the youngest lanes on pool exhaustion; each preemption frees
+            # a lane, so back-fill and re-settle until stable
+            while True:
+                caches, changed = self._pre_segment(
+                    mgr, dec, caches, tok, produced, plen, max_new,
+                    active, dev, pending)
+                if not changed:
                     break
+                fill(backfill=True)
+            if not active.any():
+                # every lane drained while the head sat deferred (it was
+                # preempted in the same boundary the last lanes retired).
+                # The deferral was lifted at the top of this iteration and
+                # an idle manager admits its head, so this either admits
+                # (progress) or pending is empty (the loop exits)
+                fill(backfill=True)
+                continue
             if dev["d"] is None:
                 dev["d"] = (jnp.asarray(tok), jnp.asarray(produced),
                             jnp.asarray(plen), jnp.asarray(max_new),
                             jnp.asarray(active))
             tok_d, produced_d, plen_d, max_new_d, active_d = dev["d"]
-            new_toks, tok_d, produced_d, caches, stopped, produced = \
+            new_toks, tok_d, produced_d, caches, stopped, produced, dead = \
                 dec.run_segment(self.params, caches, tok_d, produced_d,
                                 plen_d, max_new_d, eos, active_d,
                                 produced_before=produced)
             dev["d"] = (tok_d, produced_d, plen_d, max_new_d, active_d)
+            self.dead_steps += dead
+            mgr.stats["dead_steps"] = self.dead_steps
             retired = False
+            released = []
             for lane in mgr.busy_lanes():
                 st = mgr.lanes[lane]
                 st.tokens.extend(new_toks[lane])
@@ -520,9 +606,288 @@ class BatchedRealEngine(RealEngine):
                     st = mgr.retire(lane)
                     active[lane] = False
                     retired = True
+                    released.append(lane)
                     finish(st, cancelled=False)
             if retired:
                 # host tok mirror must be current before fill mutates it
                 tok = np.array(tok_d)
                 dev["d"] = None
+                caches = self._post_release(dec, caches, released)
                 fill(backfill=True)
+        self._retain_caches(caches)
+
+
+class PagedBatchedEngine(BatchedRealEngine):
+    """Micro-batching over a block-paged KV pool with prefix reuse.
+
+    Same lane loop, stop semantics and bitwise-token contract as
+    :class:`BatchedRealEngine`, with the memory subsystem swapped
+    (serving/paging.py):
+
+    * **Admission charges actual footprint** — the prompt's pages, not
+      the worst-case ring.  The same byte budget therefore admits more
+      lanes when memory binds (the phantom-byte recovery the paging
+      bench measures).
+    * **Prefix reuse** — full prompt pages are content-addressed after
+      prefill; a later prompt sharing the prefix re-acquires the cached
+      pages and prefills only its suffix (extend prefill), cutting both
+      memory and prefill compute.
+    * **Page growth + preemption** — decode allocates pages as the
+      sequence crosses page boundaries (one segment's worth ahead).  On
+      exhaustion the youngest lane is preempted: its pages are freed and
+      the request re-enters the pending list, resuming later via the
+      PR-4 rule (re-prefill prompt + generated prefix), so its tokens
+      stay bitwise-equal to an uninterrupted run.  The oldest lane is
+      never preempted and the pool always holds one full sequence, so
+      the loop cannot deadlock.
+
+    The allocator persists across ``run_lanes`` calls — the prefix cache
+    (LRU-parked pages) survives between drains, like a production
+    server's; ``reset_transient`` drops only live references.
+    """
+
+    def __init__(self, cfg, params=None, replica_id: int = 0, seed: int = 0,
+                 max_len: int = 256, segment_len: int = 16,
+                 n_lanes: int = 4, budget_bytes: Optional[int] = None,
+                 page_size: int = 16):
+        import jax
+        import jax.numpy as jnp
+        from repro.serving.generate import PagedLaneDecoder
+        from repro.serving.paging import BlockAllocator, pages_for
+        super().__init__(cfg, params=params, replica_id=replica_id,
+                         seed=seed, max_len=max_len, segment_len=segment_len,
+                         n_lanes=n_lanes, budget_bytes=budget_bytes)
+        if not self._bucketing:
+            raise ValueError("block-paged KV needs a pure-attention stack "
+                             f"(got pattern {cfg.block_pattern})")
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} not a multiple of "
+                             f"page_size {page_size}")
+        self.page_size = int(page_size)
+        page_bytes = self.page_size * max(1, self._bytes_per_token)
+        # same byte budget as the worst-case engine, denominated in pages
+        # (floor); never below one full sequence so a solo lane always fits
+        self.n_pages = max(pages_for(max_len, self.page_size),
+                           self.budget_bytes // page_bytes)
+        self.allocator = BlockAllocator(self.n_pages, self.page_size)
+        self._lane_decoder = PagedLaneDecoder(
+            self.lm, max_len, self.n_lanes, segment_len,
+            n_pages=self.n_pages + 1, page_size=self.page_size)
+        self._deferred: set = set()    # req_ids preempted at this boundary
+        self._caches = None            # pools retained between runs
+        # extend prefill: suffix tokens appended onto a gathered prefix
+        # cache.  One jit; retraces per (suffix bucket, prefix extent).
+        self._prefill_ext = jax.jit(
+            lambda p, toks, pl, pcaches, fill_to: self.lm.prefill(
+                p, {"tokens": toks}, prompt_len=pl, caches=pcaches,
+                fill_to=fill_to))
+
+    # ------------------------------------------------------------ lane hooks
+    def _new_manager(self):
+        from repro.serving.paging import PagedLaneManager
+        self.allocator.reset_transient()   # drop refs leaked by a crash
+        self._deferred = set()
+        return PagedLaneManager(self.n_lanes, self.allocator,
+                                self._bytes_per_token, self.max_len)
+
+    def _init_lanes(self, dec):
+        # reuse the previous run's pools: the LRU-parked prefix pages
+        # keep their KV, so cross-run prefix hits serve real contents.
+        # If the pools are gone (first run, or the previous run crashed
+        # before retaining them), the content cache must go with them.
+        caches, self._caches = self._caches, None
+        if caches is None:
+            self.allocator.drop_cache()
+            caches = dec.init_lanes()
+        return caches
+
+    def _retain_caches(self, caches) -> None:
+        self._caches = caches
+
+    def _boundary_reset(self) -> None:
+        # a preempted request may be re-admitted at the NEXT boundary;
+        # deferring it for the current one prevents admit/preempt churn
+        self._deferred = set()
+
+    def _head_fits(self, mgr, item, ids) -> bool:
+        if item["req_id"] in self._deferred:
+            return False
+        # a preempted request re-admits on its FULL remaining footprint
+        # (prefill + every growth page), not just the prefill pages: the
+        # re-prefill is paid work, and admitting it into a pool that
+        # cannot also hold its growth just preempts it again before it
+        # produces a token — an admit/re-prefill/preempt cycle that burns
+        # wall-clock without progress (the DES mirror makes the same
+        # charge for resumed jobs)
+        eff_len = len(ids)
+        if item.get("_evictions", 0) > 0:
+            eff_len += int(item["max_new"])
+        return mgr.can_admit(eff_len, item["max_new"], ids=ids)
+
+    def _admit_item(self, mgr, lane: int, item, ids, t_admit, backfill: bool):
+        st = mgr.admit(lane, req_id=item["req_id"], prompt_len=len(ids),
+                       max_new=item["max_new"],
+                       tenant=item.get("tenant", "default"),
+                       admit_t=t_admit, meta=item.get("meta"),
+                       backfill=backfill, ids=ids)
+        st.evictions = item.get("_evictions", 0)
+        st.meta["_ids"] = ids
+        st.meta["_resume_tokens"] = list(item.get("_resume_tokens", ()))
+        return st
+
+    def _result_tokens(self, state) -> list:
+        return list(state.meta.get("_resume_tokens", ())) \
+            + list(state.tokens)
+
+    def _prefill_claims(self, mgr, dec, caches, claims, now, tok, plen,
+                        produced, max_new, active):
+        from repro.serving.generate import bucket_for
+        from repro.serving.paging import pages_for
+        ps = self.page_size
+        P = self.max_len // ps
+        cold = [c for c in claims if c[0].prefix_len == 0]
+        warm = [c for c in claims if c[0].prefix_len > 0]
+        # cold prompts: grouped full prefill (identical to the base
+        # engine), then scatter the prompt pages into the pool
+        groups: dict = {}
+        for claim in cold:
+            groups.setdefault(bucket_for(len(claim[2]), self.buckets),
+                              []).append(claim)
+        for group in groups.values():
+            logits, pcache, plens = self._run_prefill_group(
+                [ids for _, _, ids, _ in group], pad_rows=self.n_lanes)
+            first = np.argmax(np.asarray(logits), axis=-1)
+            k = len(group)
+            bt_rows = np.zeros((k, P), np.int32)
+            tgt = np.zeros((k, P), np.int32)   # pcache padded to max_len
+            for r, (st, lane, ids, mx) in enumerate(group):
+                bt_rows[r, :len(st.pages)] = st.pages
+                npp = pages_for(len(ids), ps)
+                tgt[r, :npp] = st.pages[:npp]
+            caches = dec.insert_paged(
+                caches, [lane for _, lane, _, _ in group], pcache,
+                bt_rows, tgt)
+            self._post_insert(group, first, plens, now, tok, plen,
+                              produced, max_new, active)
+            for st, lane, ids, _ in group:
+                mgr.register_prompt(lane, ids)
+        # prefix hits: gather the cached pages, prefill only the suffix
+        for claim in warm:
+            caches = self._extend_prefill(mgr, dec, caches, claim, now,
+                                          tok, plen, produced, max_new,
+                                          active)
+        return caches
+
+    def _extend_prefill(self, mgr, dec, caches, claim, now, tok, plen,
+                        produced, max_new, active):
+        import jax.numpy as jnp
+        from repro.serving.generate import bucket_for
+        from repro.serving.paging import pages_for
+        st, lane, ids, mx = claim
+        ps = self.page_size
+        P = self.max_len // ps
+        n_match = st.prefix_len // ps
+        Bf = bucket_for(len(ids), self.buckets)
+        nf = -(-Bf // ps)
+        pre_pages = np.zeros(nf, np.int32)
+        pre_pages[:n_match] = st.pages[:n_match]
+        pre_cache = dec.gather_prefix(caches, pre_pages, st.prefix_len)
+        Ls = len(ids) - st.prefix_len
+        Bs = min(bucket_for(Ls, self.buckets), nf * ps - st.prefix_len)
+        toks = np.zeros((1, Bs), np.int32)
+        toks[0, :Ls] = ids[st.prefix_len:]
+        logits, pcache = self._prefill_ext(
+            self.params, jnp.asarray(toks), jnp.asarray(Ls, jnp.int32),
+            pre_cache, jnp.asarray(len(ids), jnp.int32))
+        first = np.argmax(np.asarray(logits), axis=-1)
+        npp = pages_for(len(ids), ps)
+        bt_rows = np.zeros((1, P), np.int32)
+        bt_rows[0, :len(st.pages)] = st.pages
+        tgt = np.zeros((1, nf), np.int32)
+        # only the NEW pages are scattered; the matched prefix already
+        # lives in the pool (and may be shared — it must not be rewritten)
+        tgt[0, n_match:npp] = st.pages[n_match:npp]
+        caches = dec.insert_paged(caches, [lane], pcache, bt_rows, tgt)
+        self._post_insert([claim], first, [len(ids)], now, tok, plen,
+                          produced, max_new, active)
+        mgr.register_prompt(lane, ids)
+        return caches
+
+    def _post_release(self, dec, caches, lanes):
+        # scrub the released lanes' block tables: their dead writes (the
+        # lane keeps stepping while inactive) must land on the trash
+        # page, never on a page the allocator may hand to someone else
+        P = self.max_len // self.page_size
+        rows = np.zeros((len(lanes), P), np.int32)
+        return dec.set_bt(caches, list(lanes), rows)
+
+    def _pre_segment(self, mgr, dec, caches, tok, produced, plen, max_new,
+                     active, dev, pending):
+        from repro.serving.paging import pages_for
+        ps = self.page_size
+        P = self.max_len // ps
+        K = self.segment_len
+        changed = False
+        new_rows: dict = {}                   # lane -> block-table row
+        order = sorted(mgr.busy_lanes(),
+                       key=lambda ln: mgr.lanes[ln].meta["_admit_seq"])
+        for lane in order:
+            st = mgr.lanes[lane]
+            if st is None:                    # preempted earlier this pass
+                continue
+            # pages for every slot the coming segment can write:
+            # the next write lands at plen + produced - 1
+            target = min(self.max_len,
+                         int(plen[lane]) + int(produced[lane]) + K - 1)
+            need = pages_for(target, ps)
+            if need <= len(st.pages):
+                continue
+            while not mgr.grow(lane, need):
+                seq = st.meta["_admit_seq"]
+                younger = [l for l in mgr.busy_lanes()
+                           if mgr.lanes[l].meta["_admit_seq"] > seq]
+                victim = max(younger, key=lambda l:
+                             mgr.lanes[l].meta["_admit_seq"]) \
+                    if younger else lane
+                self._preempt_lane(mgr, victim, tok, produced, active,
+                                   dev, pending)
+                new_rows[victim] = np.zeros(P, np.int32)
+                changed = True
+                if victim == lane:
+                    break
+            if mgr.lanes[lane] is st:         # grown (not self-preempted)
+                row = np.zeros(P, np.int32)
+                row[:len(st.pages)] = st.pages
+                new_rows[lane] = row
+        if new_rows:
+            idx = sorted(new_rows)
+            caches = dec.set_bt(caches, idx,
+                                np.stack([new_rows[i] for i in idx]))
+        return caches, changed
+
+    def _preempt_lane(self, mgr, lane, tok, produced, active, dev,
+                      pending) -> None:
+        """Free a lane's pages mid-flight and requeue the request at the
+        head of the pending list (it was admitted earliest).  The resume
+        item re-prefills prompt + generated prefix — the PR-4 rule — so
+        the final token sequence matches an uninterrupted run."""
+        if dev["d"] is not None:
+            tok[:] = np.array(dev["d"][0])    # refresh host mirrors
+            produced[:] = np.array(dev["d"][1])
+            dev["d"] = None
+        st = mgr.preempt(lane)
+        active[lane] = False
+        meta = {k: v for k, v in st.meta.items()
+                if k not in ("_admit_seq", "_ids", "_resume_tokens")}
+        item = {
+            "req_id": st.req_id,
+            "ids": np.concatenate([
+                np.asarray(st.meta["_ids"], np.int64).reshape(-1),
+                np.asarray(st.tokens, np.int64)]),
+            "max_new": st.max_new - len(st.tokens),
+            "tenant": st.tenant, "meta": meta,
+            "_evictions": st.evictions,
+            "_resume_tokens": st.meta["_resume_tokens"] + list(st.tokens),
+        }
+        pending.insert(0, item)
+        self._deferred.add(st.req_id)

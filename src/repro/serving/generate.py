@@ -244,7 +244,10 @@ class LaneDecoder:
         ``produced`` tokens emitted (incl. the prefill token), ``plen``
         prompt length, ``max_new`` request budget, ``active`` lane
         occupancy.  Returns (buf (C, K) int32 -1-padded, tok, produced,
-        caches, stopped (C,) bool).
+        caches, stopped (C,) bool, dead () int32) — ``dead`` counts
+        lane-steps burned on occupied-but-stopped lanes (the masked
+        compute a stopped lane wastes until the segment's survivors
+        finish; the PR-5 trade-off, reported as ``dead_steps``).
         """
         C, K = self.n_lanes, self.segment_len
         buf0 = jnp.full((C, K), -1, jnp.int32)
@@ -253,12 +256,13 @@ class LaneDecoder:
             return self._live(tok, produced, plen, max_new, eos, active)
 
         def cond(c):
-            i, tok, produced, _, _ = c
+            i, tok, produced, _, _, _ = c
             return (i < K) & live(tok, produced).any()
 
         def body(c):
-            i, tok, produced, caches, buf = c
+            i, tok, produced, caches, buf, dead = c
             lv = live(tok, produced)
+            dead = dead + (active & ~lv).sum().astype(jnp.int32)
             # one natively batched step; stopped lanes compute dead values
             # that the lv masks below keep out of every visible carry
             logits, caches = self.lm.decode_step(
@@ -267,12 +271,14 @@ class LaneDecoder:
             tok = jnp.where(lv, new_tok, tok)
             buf = jax.lax.dynamic_update_slice(
                 buf, jnp.where(lv, tok, -1)[:, None], (0, i))
-            return i + 1, tok, produced + lv.astype(jnp.int32), caches, buf
+            return (i + 1, tok, produced + lv.astype(jnp.int32), caches,
+                    buf, dead)
 
-        _, tok, produced, caches, buf = jax.lax.while_loop(
+        _, tok, produced, caches, buf, dead = jax.lax.while_loop(
             cond, body,
-            (jnp.zeros((), jnp.int32), tok, produced, caches, buf0))
-        return buf, tok, produced, caches, ~live(tok, produced)
+            (jnp.zeros((), jnp.int32), tok, produced, caches, buf0,
+             jnp.zeros((), jnp.int32)))
+        return buf, tok, produced, caches, ~live(tok, produced), dead
 
     def run_segment(self, params, caches, tok, produced, plen, max_new,
                     eos, active, produced_before):
@@ -287,14 +293,16 @@ class LaneDecoder:
         ``produced_before`` is the host-side produced counts going in.
 
         Returns ``(new_tokens, tok, produced, caches, stopped,
-        produced_np)``: ``tok``/``produced`` device arrays for the next
-        segment, ``stopped``/``produced_np`` writable host copies, and
-        ``new_tokens[i]`` the tokens lane ``i`` emitted (in order).
+        produced_np, dead_steps)``: ``tok``/``produced`` device arrays
+        for the next segment, ``stopped``/``produced_np`` writable host
+        copies, ``new_tokens[i]`` the tokens lane ``i`` emitted (in
+        order), and ``dead_steps`` the lane-steps this segment burned on
+        occupied-but-stopped lanes.
         """
         C = self.n_lanes
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=_DONATION_WARNING)
-            buf, tok_j, produced_j, caches, stopped = self._segment(
+            buf, tok_j, produced_j, caches, stopped, dead = self._segment(
                 params, caches, tok, produced, plen, max_new, eos, active)
         buf_np = np.asarray(buf)                  # one host sync per segment
         produced_np = np.array(produced_j)
@@ -303,7 +311,115 @@ class LaneDecoder:
                                             - int(produced_before[i]))]]
             for i in range(C)]
         return (new_tokens, tok_j, produced_j, caches, np.array(stopped),
-                produced_np)
+                produced_np, int(dead))
+
+
+class PagedLaneDecoder(LaneDecoder):
+    """Lane decoder over a block-paged KV pool (serving/paging.py).
+
+    Same segment loop and stop semantics as :class:`LaneDecoder`, but the
+    caches are shared physical pools addressed through per-lane block
+    tables (models/model.py ``init_paged_cache``): back-fill scatters a
+    contiguous prefill cache into the lane's pages, prefix-hit admission
+    gathers cached pages back into a contiguous buffer for an extend
+    prefill, and page growth/release only rewrites block-table rows.
+    Per-lane tokens stay bitwise-equal to the ring path — every logical
+    slot holds the same value either way (tests/test_paging.py).
+    """
+
+    def __init__(self, lm, max_len: int, n_lanes: int, segment_len: int = 16,
+                 *, n_pages: int, page_size: int):
+        super().__init__(lm, max_len, n_lanes, segment_len)
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} not a multiple of "
+                             f"page_size {page_size}")
+        self.n_pages = int(n_pages)        # physical pool incl. trash page 0
+        self.page_size = int(page_size)
+
+    # ------------------------------------------------------------ lane admin
+    def init_lanes(self):
+        """Zero paged caches: pools of ``n_pages`` pages plus per-lane
+        block tables (all slots 0 = the pinned trash page)."""
+        return self.lm.init_paged_cache(self.n_lanes, self.max_len,
+                                        self.n_pages, self.page_size)
+
+    def insert_paged(self, lanes, lane_idx, pcache, bt_rows, tgt):
+        """Scatter a k-row contiguous prefill cache into the pool.
+
+        ``pcache`` leaves are (rep, k, Bf, KV, hd) contiguous buffers
+        (``_run_prefill_group`` output or an extend prefill); ``bt_rows``
+        (k, P) is each lane's full block table; ``tgt`` (k, ceil(Bf/ps))
+        maps each Bf-chunk to the physical page that should receive it —
+        0 (trash) for pad chunks beyond the prompt and for prefix-hit
+        pages whose contents already live in the pool."""
+        import jax.numpy as jnp
+        return self._insert_paged(lanes, jnp.asarray(lane_idx, jnp.int32),
+                                  pcache, jnp.asarray(bt_rows, jnp.int32),
+                                  jnp.asarray(tgt, jnp.int32))
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _insert_paged(self, lanes, idx, pcache, bt_rows, tgt):
+        ps = self.page_size
+        out = []
+        for big, one in zip(lanes, pcache):
+            rep, k, Bf, KV, hd = one["k"].shape
+            nchunk = -(-Bf // ps)
+            pad = nchunk * ps - Bf
+            ck, cv = one["k"], one["v"]
+            if pad:
+                widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                ck, cv = jnp.pad(ck, widths), jnp.pad(cv, widths)
+            ck = ck.reshape(rep, k * nchunk, ps, KV, hd)
+            cv = cv.reshape(rep, k * nchunk, ps, KV, hd)
+            tflat = tgt.reshape(-1)
+            new = dict(big)
+            # page-pool scatter; duplicate indices only ever hit the
+            # trash page, where write order is irrelevant
+            new["k"] = big["k"].at[:, tflat].set(ck)
+            new["v"] = big["v"].at[:, tflat].set(cv)
+            tval = one["t"]
+            if tval.ndim == 1:             # scalar-fill prefill: (rep,)
+                tval = tval[:, None]
+            new["t"] = big["t"].at[:, idx].set(tval)
+            new["bt"] = big["bt"].at[:, idx].set(bt_rows)
+            out.append(new)
+        return tuple(out)
+
+    def gather_prefix(self, lanes, pages, prefix_len: int):
+        """Materialize cached pages as a contiguous (B=1) prefill cache
+        at fill level ``prefix_len`` — the input to an extend prefill.
+        ``pages`` (nf,) physical page per logical block; slots past the
+        matched prefix may be 0 (trash): the extend prefill overwrites
+        them before anything attends there."""
+        import jax.numpy as jnp
+        return self._gather_prefix(lanes, jnp.asarray(pages, jnp.int32),
+                                   jnp.asarray(prefix_len, jnp.int32))
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _gather_prefix(self, lanes, pages, fill):
+        out = []
+        for c in lanes:
+            rep, _, ps, KV, hd = c["k"].shape
+            nf = pages.shape[0]
+            out.append({
+                "k": c["k"][:, pages].reshape(rep, 1, nf * ps, KV, hd),
+                "v": c["v"][:, pages].reshape(rep, 1, nf * ps, KV, hd),
+                "t": jnp.full((rep,), fill, jnp.int32),
+            })
+        return tuple(out)
+
+    def set_bt(self, lanes, lane_idx, bt_rows):
+        """Rewrite block-table rows in place: page growth extends a busy
+        lane's table; release zeroes it so the lane's dead writes land on
+        the trash page instead of a reallocated page."""
+        import jax.numpy as jnp
+        return self._set_bt(lanes, jnp.asarray(lane_idx, jnp.int32),
+                            jnp.asarray(bt_rows, jnp.int32))
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _set_bt(self, lanes, idx, rows):
+        return tuple({**c, "bt": c["bt"].at[:, idx].set(rows)}
+                     for c in lanes)
 
 
 def geometric_buckets(max_len: int, floor: int = 16) -> tuple:

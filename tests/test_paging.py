@@ -1,0 +1,430 @@
+"""Block-paged KV cache (ROADMAP item 2): allocator invariants under a
+chaos fuzz, the paged Pallas decode kernel vs its gather oracle and the
+dense ring kernel, PagedBatchedEngine bitwise-vs-reference (backfill,
+growth preemption, prefix reuse across drains), dead-step accounting,
+and the paged DES (c=1 bitwise contract, bounded pool, prefix sharing,
+live-order agreement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.scheduler import Request
+from repro.core.simulation import (ServiceDist, poisson_workload,
+                                   simulate_paged, simulate_servers)
+from repro.kernels.decode_attention import (decode_attention_kernel,
+                                            paged_decode_attention_kernel)
+from repro.kernels.ref import paged_decode_attention_ref
+from repro.serving.engine import BatchedRealEngine, PagedBatchedEngine
+from repro.serving.paging import (BlockAllocator, PageError,
+                                  PagedLaneManager, chain_hashes, pages_for)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------- BlockAllocator
+def test_pages_for_and_chain_hashes():
+    assert pages_for(0, 4) == 0
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+    ids = list(range(8))
+    hs = chain_hashes(ids, 4)
+    assert len(hs) == 2                      # full pages only
+    # chained: the second page's hash depends on the first page's tokens
+    other = chain_hashes([9, 9, 9, 9] + ids[4:], 4)
+    assert hs[0] != other[0] and hs[1] != other[1]
+    # deterministic + prefix-stable
+    assert chain_hashes(ids + [99], 4)[:2] == hs
+
+
+def test_allocator_alloc_release_conservation():
+    al = BlockAllocator(8, 4)
+    pages = al.allocate(3)
+    assert al.used_pages == 3 and al.reclaimable_pages == 5
+    with pytest.raises(PageError):
+        al.allocate(6)                       # all-or-nothing: no partial grab
+    al.check()
+    assert al.used_pages == 3
+    al.release_seq(pages)
+    assert al.used_pages == 0 and al.reclaimable_pages == 8
+    al.check()
+
+
+def test_allocator_register_match_revive_and_drop():
+    al = BlockAllocator(8, 4)
+    ids = list(range(12))
+    pages = al.allocate(3)
+    al.register(pages, chain_hashes(ids, 4))
+    al.release_seq(pages)                    # registered pages park in LRU
+    assert al.used_pages == 0 and al.reclaimable_pages == 8
+    hit_tokens, hit_pages = al.match_prefix(ids + [50, 51])
+    assert hit_tokens == 12 and hit_pages == pages   # revived, refcount 1
+    assert al.used_pages == 3
+    al.release_seq(hit_pages)
+    al.drop_cache()                          # pool rebuilt: content is gone
+    assert al.probe_prefix(chain_hashes(ids, 4)) == 0
+    al.check()
+
+
+def test_allocator_lru_reclaim_forgets_content():
+    al = BlockAllocator(4, 4)
+    a = al.allocate(2)
+    al.register(a, chain_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4))
+    al.release_seq(a)
+    b = al.allocate(4)                       # must cannibalise the LRU
+    assert al.stats["cache_evictions"] == 2
+    assert al.probe_prefix(chain_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)) == 0
+    al.release_seq(b)
+    al.check()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_paged_manager_chaos_fuzz(seed):
+    """Randomised admit/grow/retire/evict/preempt/crash sequences: the
+    allocator invariants (refcounts never negative, free + cached + held
+    conservation, index consistency) hold after every single op, and a
+    full drain returns the pool to empty."""
+    rng = np.random.default_rng(seed)
+    N_PAGES, PS, LANES, CAP = 24, 4, 4, 32
+    al = BlockAllocator(N_PAGES, PS)
+    mgr = PagedLaneManager(LANES, al, bytes_per_token=1, capacity=CAP)
+    ids_by_lane = {}
+    rid = 0
+    for _ in range(500):
+        op = int(rng.integers(0, 8))
+        free = [ln for ln in range(LANES) if mgr.lanes[ln] is None]
+        busy = mgr.busy_lanes()
+        if op <= 2 and free:                 # admit (small alphabet so
+            lane = int(rng.choice(free))     # prefixes collide and share)
+            n = int(rng.integers(1, CAP + 1))
+            ids = rng.integers(0, 3, size=n).tolist()
+            rid += 1
+            try:
+                mgr.admit(lane, req_id=rid, prompt_len=n,
+                          max_new=int(rng.integers(1, 16)), ids=ids)
+                ids_by_lane[lane] = ids
+            except PageError:
+                pass                         # full pool must not leak refs
+        elif op == 3 and busy:               # register prompt, then retire
+            lane = int(rng.choice(busy))
+            if rng.random() < 0.7:
+                mgr.register_prompt(lane, ids_by_lane[lane])
+            mgr.retire(lane)
+        elif op == 4 and busy:               # cancellation eviction
+            mgr.evict(int(rng.choice(busy)))
+        elif op == 5 and busy:               # pool-exhaustion preemption
+            mgr.preempt(int(rng.choice(busy)))
+        elif op == 6 and busy:               # decode growth, page by page
+            lane = int(rng.choice(busy))
+            mgr.grow(lane, len(mgr.lanes[lane].pages)
+                     + int(rng.integers(1, 4)))
+        elif op == 7 and rng.random() < 0.3:  # crash: engine rebuilds
+            al.reset_transient()
+            if rng.random() < 0.5:
+                al.drop_cache()              # pools re-zeroed -> forget
+            mgr = PagedLaneManager(LANES, al, bytes_per_token=1,
+                                   capacity=CAP)
+            ids_by_lane.clear()
+        al.check()
+    for ln in list(mgr.busy_lanes()):
+        mgr.retire(ln)
+    al.check()
+    assert al.used_pages == 0
+    al.reset_transient()
+    assert al.reclaimable_pages == N_PAGES
+
+
+# ------------------------------------------------------------ paged kernel
+@pytest.mark.parametrize("B,KV,G,hd,ps,P", [
+    (3, 2, 4, 64, 16, 4),
+    (2, 1, 8, 32, 8, 6),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_kernel_matches_oracle_and_dense(B, KV, G, hd, ps, P,
+                                                      dtype):
+    """Paged kernel == gather oracle == per-lane dense ring kernel, with
+    unallocated table slots pointing at a garbage-filled trash page (the
+    fill-level mask must discard it)."""
+    n_pages = B * P + 1
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, KV, ps, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, KV, ps, hd), dtype)
+    kp = kp.at[0].set(1e4)                   # poison the trash page
+    vp = vp.at[0].set(-1e4)
+    rng = np.random.default_rng(0)
+    bt = rng.permutation(np.arange(1, n_pages))[:B * P] \
+        .reshape(B, P).astype(np.int32)
+    t = rng.integers(0, P * ps, size=B).astype(np.int32)
+    for b in range(B):                       # slots beyond the fill level
+        for p in range(P):                   # are unallocated -> trash
+            if p * ps > t[b]:
+                bt[b, p] = 0
+    out = paged_decode_attention_kernel(q, kp, vp, bt, t, interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, jnp.asarray(bt),
+                                      jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    # cross-check per lane against the dense ring kernel on the gathered
+    # logical window (scalar fill level)
+    k_d = kp[bt].transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
+    v_d = vp[bt].transpose(0, 2, 1, 3, 4).reshape(B, KV, P * ps, hd)
+    for b in range(B):
+        dense = decode_attention_kernel(q[b:b + 1], k_d[b:b + 1],
+                                        v_d[b:b + 1], int(t[b]),
+                                        block_kv=ps, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[b], np.float32),
+                                   np.asarray(dense[0], np.float32),
+                                   **_tol(dtype))
+
+
+# ------------------------------------------------------ PagedBatchedEngine
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("smollm-360m").reduced()
+
+
+@pytest.fixture(scope="module")
+def base(cfg):
+    return BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=3,
+                             seed=0)
+
+
+@pytest.fixture(scope="module")
+def paged(cfg, base):
+    return PagedBatchedEngine(cfg, params=base.params, max_len=64,
+                              segment_len=4, n_lanes=3, seed=0, page_size=8)
+
+
+def _prompts(cfg, rng, sizes):
+    return [rng.integers(1, cfg.vocab_size, size=n).astype(np.int64)
+            for n in sizes]
+
+
+def test_paged_decode_bitwise_with_backfill(cfg, base, paged):
+    """Roomy pool: every request's tokens are bitwise-identical to the
+    serial reference, lanes back-fill, and a post-drain crash recovery
+    leaves the pool empty and consistent."""
+    rng = np.random.default_rng(0)
+    prompts = _prompts(cfg, rng, (5, 17, 9, 23, 3, 12))
+    maxes = [20, 8, 30, 12, 25, 16]
+    refs = [base.generate_reference(p, m)["tokens"]
+            for p, m in zip(prompts, maxes)]
+    res = paged.generate_batch(prompts, maxes)
+    for i, (r, ref) in enumerate(zip(res, refs)):
+        assert r is not None, f"request {i} lost"
+        assert r["tokens"] == list(ref), (i, r["tokens"], list(ref))
+    paged.allocator.reset_transient()
+    assert paged.allocator.used_pages == 0
+    paged.allocator.check()
+
+
+def test_tight_pool_growth_preemption_stays_bitwise(cfg, base):
+    """A 10-page pool cannot hold three full lanes: decode growth hits
+    exhaustion, the youngest lane is preempted and later resumed — and
+    the output stays bitwise-equal.  Dead steps stay bounded by the
+    segment geometry."""
+    rng = np.random.default_rng(0)
+    prompts = _prompts(cfg, rng, (5, 17, 9, 23, 3, 12))
+    maxes = [20, 8, 30, 12, 25, 16]
+    refs = [base.generate_reference(p, m)["tokens"]
+            for p, m in zip(prompts, maxes)]
+    bpt = base._bytes_per_token
+    tight = PagedBatchedEngine(cfg, params=base.params, max_len=64,
+                               segment_len=4, n_lanes=3, seed=0,
+                               page_size=8, budget_bytes=10 * 8 * bpt)
+    assert tight.n_pages == 10
+    res = tight.generate_batch(prompts, maxes)
+    for i, (r, ref) in enumerate(zip(res, refs)):
+        assert r is not None, f"request {i} lost"
+        assert r["tokens"] == list(ref), (i, r["tokens"], list(ref))
+    stats = tight.lane_manager.stats
+    assert stats["preemptions"] >= 1
+    # a lane can idle at most segment_len - 1 steps per terminal event
+    terminals = (stats["retired"] + stats["evictions"]
+                 + stats["preemptions"])
+    assert 0 <= tight.dead_steps <= terminals * (tight.segment_len - 1)
+    assert stats["dead_steps"] == tight.dead_steps
+    tight.allocator.reset_transient()
+    assert tight.allocator.used_pages == 0
+    tight.allocator.check()
+
+
+def test_prefix_reuse_bitwise_within_and_across_drains(cfg, base, paged):
+    """Four requests share a 24-token system prompt: warm admissions
+    skip the shared pages (within a drain via live sharing, across
+    drains via the LRU cache) and decode stays bitwise-equal to the
+    cold-start reference."""
+    rng = np.random.default_rng(7)
+    sys_p = rng.integers(1, cfg.vocab_size, size=24).astype(np.int64)
+    share = [np.concatenate([sys_p,
+                             rng.integers(1, cfg.vocab_size, size=k)])
+             for k in (4, 6, 3, 5)]
+    refs = [base.generate_reference(p, 10)["tokens"] for p in share]
+    st0 = dict(paged.allocator.stats)
+    res = paged.generate_batch(share, 10)
+    for i, (r, ref) in enumerate(zip(res, refs)):
+        assert r["tokens"] == list(ref), ("cold", i)
+    st1 = dict(paged.allocator.stats)
+    assert st1["prefix_hits"] > st0["prefix_hits"]
+    # second drain: the prompts are fully warm from the LRU cache
+    res = paged.generate_batch(share, 10)
+    for i, (r, ref) in enumerate(zip(res, refs)):
+        assert r["tokens"] == list(ref), ("warm", i)
+    st2 = paged.allocator.stats
+    assert (st2["prefix_hit_pages"] - st1["prefix_hit_pages"]
+            > st1["prefix_hit_pages"] - st0["prefix_hit_pages"])
+    paged.allocator.check()
+
+
+def test_prefix_plus_tight_pool_no_lost_requests(cfg, base):
+    """Regression: shared-prefix prompts under a pool of ~two worst-case
+    sequences drive preempt/resume cycles where every lane can drain
+    while the just-preempted head sits deferred — the run loop must lift
+    the deferral and re-admit (no lost requests), resumed requests must
+    re-admit on their full remaining footprint (no admit/re-prefill/
+    preempt livelock), and the output stays bitwise-equal throughout."""
+    rng = np.random.default_rng(5)
+    bpt = base._bytes_per_token
+    eng = PagedBatchedEngine(cfg, params=base.params, max_len=64,
+                             segment_len=4, n_lanes=4, seed=0, page_size=8,
+                             budget_bytes=9 * 8 * bpt)
+    prefix = rng.integers(1, cfg.vocab_size, size=24).astype(np.int64)
+    maxes = [32, 32, 6, 6, 6, 6, 32, 6]      # longs head the queue
+    prompts = [np.concatenate([prefix,
+                               rng.integers(1, cfg.vocab_size, size=8)])
+               for _ in maxes]
+    refs = [base.generate_reference(p, m)["tokens"]
+            for p, m in zip(prompts, maxes)]
+    res = eng.generate_batch(prompts, maxes)
+    for i, (r, ref) in enumerate(zip(res, refs)):
+        assert r is not None, f"request {i} lost"
+        assert r["tokens"] == list(ref), (i, r["tokens"], list(ref))
+    eng.allocator.reset_transient()
+    assert eng.allocator.used_pages == 0
+    eng.allocator.check()
+
+
+# --------------------------------------------------------------- paged DES
+SHORT, LONG = ServiceDist(0.2, 0.05), ServiceDist(1.5, 0.3)
+
+
+def _workload(seed, n=60):
+    rng = np.random.default_rng(seed)
+    reqs = poisson_workload(rng, n, lam=2.0, short=SHORT, long=LONG,
+                            mix_long=0.3)
+    ptok = rng.integers(8, 64, size=n)
+    ttok = ptok + rng.integers(16, 128, size=n)
+    return reqs, ptok, ttok
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "sjf", "srpt"])
+def test_paged_des_c1_bitwise_equals_serial(policy):
+    """Solo lane: the page model is inert (no concurrent competitor, so
+    exhaustion never fires) and the paged DES reproduces the serial
+    server trace bitwise."""
+    for seed in (3, 11):
+        reqs, ptok, ttok = _workload(seed)
+        a = simulate_servers(reqs, policy=policy, n_servers=1)
+        sa = [(r.req_id, r.start, r.finish) for r in a.requests]
+        b = simulate_paged(reqs, policy=policy, n_servers=1,
+                           prompt_tokens=ptok, total_tokens=ttok,
+                           page_size=16, n_pages=1000)
+        sb = [(r.req_id, r.start, r.finish) for r in b.requests]
+        assert sa == sb, (seed, policy, sa[:3], sb[:3])
+
+
+def test_paged_des_tight_pool_bounded_no_losses():
+    """12-page pool under 4 lanes: exhaustion preempts, every request
+    still finishes, and the held-page peak never exceeds the pool."""
+    reqs, ptok, ttok = _workload(3)
+    r = simulate_paged(reqs, policy="sjf", n_servers=4,
+                       slowdown=(1.0, 1.1, 1.25, 1.4),
+                       prompt_tokens=ptok, total_tokens=ttok,
+                       page_size=16, n_pages=12)
+    assert all(np.isfinite(q.finish) for q in r.requests)
+    assert r.preemptions > 0
+    assert r.peak_pages <= 12 + 1e-9
+
+
+def test_paged_des_prefix_sharing_improves_sojourn():
+    """Half the requests share a 32-token system prefix: warm admits are
+    counted and mean sojourn improves vs the cold run (paired)."""
+    reqs, ptok, ttok = _workload(3)
+    n = len(reqs)
+    grp = np.where(np.arange(n) % 2 == 0, 0, -1)
+    sh = np.where(grp == 0, 32.0, 0.0)
+    sv = np.where(grp == 0, 0.05, 0.0)
+    cold = simulate_paged(reqs, policy="sjf", n_servers=4,
+                          prompt_tokens=ptok + 32, total_tokens=ttok + 32,
+                          page_size=16, n_pages=40)
+    cold_mean = cold.mean()                  # captured before the warm run
+    warm = simulate_paged(reqs, policy="sjf", n_servers=4,
+                          prompt_tokens=ptok + 32, total_tokens=ttok + 32,
+                          page_size=16, n_pages=40, share_group=grp,
+                          shared_tokens=sh, prefill_saved=sv)
+    assert warm.prefix_hits > 0
+    assert warm.mean() < cold_mean
+
+
+def test_paged_des_matches_live_order_at_c1(cfg, base):
+    """Acceptance gate: DES-predicted and live dispatch orderings agree
+    at c=1.  Both sides run sjf_oracle over the same backlog — the DES
+    by true service, the live engine through ClairvoyantServer with a
+    solo paged lane."""
+    from repro.serving.openai_api import CompletionRequest
+    from repro.serving.server import ClairvoyantServer
+
+    toks = [40, 4, 30, 6]                    # two longs first (HoL setup)
+    des_reqs = []
+    for i, tk in enumerate(toks):
+        q = Request(req_id=i + 1, arrival=0.0, true_service=tk / 10.0,
+                    klass="long" if tk > 20 else "short")
+        q.p_long = 1.0 if tk > 20 else 0.0
+        des_reqs.append(q)
+    des = simulate_paged(des_reqs, policy="sjf_oracle", n_servers=1,
+                         prompt_tokens=np.full(4, 8),
+                         total_tokens=np.array([8 + t for t in toks]),
+                         page_size=8, n_pages=64)
+    des_order = [q.req_id for q in
+                 sorted(des.requests, key=lambda q: q.start)]
+
+    eng = PagedBatchedEngine(cfg, params=base.params, max_len=64,
+                             segment_len=4, n_lanes=1, seed=0, page_size=8)
+    server = ClairvoyantServer(policy="sjf_oracle", tau=None, engines=[eng])
+    server.submit_many(
+        [CompletionRequest(prompt="p %d" % i) for i in range(4)],
+        true_output_tokens=toks,
+        klasses=["long", "short", "long", "short"])
+    resp = server.drain(max_new_tokens=40)
+    live_order = [r.request_id for r in
+                  sorted(resp, key=lambda r: r.queue_wait_s)]
+    assert live_order == des_order == [2, 4, 3, 1]
+
+
+def test_sweep_paging_grid_shapes():
+    from repro.core.sweep import PAGING_METRICS, sweep_paging
+    conditions = [("fcfs", None), ("sjf", None)]
+    res = sweep_paging(conditions, page_sizes=(8, 16),
+                       budgets=(256.0, 1024.0), share_ratios=(0.0, 0.6),
+                       seeds=(0, 1), n=80, rho=0.7, short=SHORT, long=LONG)
+    shape = (2, 2, 2, 2, 2)
+    for m in PAGING_METRICS:
+        arr = res.metric(m)
+        assert arr.shape == shape, (m, arr.shape)
+        assert np.all(np.isfinite(arr)), m
+    # warm admits only happen when a share group exists
+    hits = res.metric("prefix_hits")
+    assert np.all(hits[..., 0, :] == 0)      # share ratio 0.0
+    assert np.all(hits[..., 1, :] > 0)       # share ratio 0.6
+    # the pool bound holds in every cell
+    for pi, ps in enumerate((8, 16)):
+        for bi, budget in enumerate((256.0, 1024.0)):
+            assert np.all(res.metric("peak_pages")[:, pi, bi]
+                          <= budget // ps + 1e-9)

@@ -530,3 +530,116 @@ def test_wire_chaos_drain_no_lost_requests():
                     assert payload["error"]["type"] in STATUSES
         assert not _no_leaked_tasks()
     asyncio.run(run())
+
+
+# ------------------------------------- HTTP backend streaming passthrough
+async def _dribble_upstream(frames, gap_s=0.12, record=None):
+    """Minimal OpenAI-ish SSE upstream that writes one frame per gap —
+    the loopback oracle for passthrough: a buffering client cannot see
+    frame k before frame k+1 is even sent."""
+    sent_t = []
+    seen = {"payload": None, "reset": False}
+
+    async def handle(reader, writer):
+        data = b""
+        while b"\r\n\r\n" not in data:
+            data += await reader.read(4096)
+        head, _, body = data.partition(b"\r\n\r\n")
+        clen = 0
+        for ln in head.split(b"\r\n"):
+            if ln.lower().startswith(b"content-length:"):
+                clen = int(ln.split(b":")[1])
+        while len(body) < clen:
+            body += await reader.read(4096)
+        seen["payload"] = json.loads(body)
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Connection: close\r\n\r\n")
+        try:
+            for fr in frames:
+                await writer.drain()
+                writer.write(b"data: " + json.dumps(fr).encode() + b"\n\n")
+                sent_t.append(asyncio.get_event_loop().time())
+                await asyncio.sleep(gap_s)
+            writer.write(b"data: [DONE]\n\n")
+            await writer.drain()
+        except (ConnectionError, OSError):
+            seen["reset"] = True
+        finally:
+            writer.close()
+
+    server = await asyncio.start_server(handle, "127.0.0.1", 0)
+    if record is not None:
+        record.update(seen=seen, sent_t=sent_t, server=server)
+    return server, server.sockets[0].getsockname()[1]
+
+
+def _delta_frame(text, finish=None):
+    return {"choices": [{"delta": {"content": text},
+                         "finish_reason": finish}]}
+
+
+def test_http_backend_restreams_sse_at_arrival():
+    """The http adapter must forward upstream SSE deltas as they arrive
+    (ROADMAP item-3 leftover), not buffer the body: with the upstream
+    dribbling a frame every 120 ms, every delta's arrival time must
+    precede the send time of the LAST frame."""
+    from repro.serving.backends import HTTPBackend
+
+    async def run():
+        rec = {}
+        frames = [_delta_frame(f"w{i} ") for i in range(4)]
+        frames[-1]["choices"][0]["finish_reason"] = "stop"
+        server, port = await _dribble_upstream(frames, record=rec)
+        got = []
+        loop = asyncio.get_event_loop()
+        try:
+            be = HTTPBackend("127.0.0.1", port)
+            out = await be.generate(
+                "hi", max_new_tokens=16,
+                on_segment=lambda d: got.append((loop.time(), d)))
+        finally:
+            server.close()
+            await server.wait_closed()
+        assert rec["seen"]["payload"]["stream"] is True
+        assert [d for _, d in got] == [f"w{i} " for i in range(4)]
+        assert out["text"] == "w0 w1 w2 w3 "
+        assert not out["cancelled"]
+        last_sent = rec["sent_t"][-1]
+        # passthrough: the first three deltas were in hand BEFORE the
+        # upstream emitted its final frame (a buffered client sees
+        # everything only after the stream closes)
+        for t, _ in got[:-1]:
+            assert t < last_sent, (got, rec["sent_t"])
+    asyncio.run(run())
+
+
+def test_http_backend_streams_for_cancel_only_and_stops_early():
+    """A cancel_cb alone must also select streaming — the buffered path
+    cannot observe cancellation until the upstream finishes — and a
+    mid-stream cancel closes the upstream connection early."""
+    from repro.serving.backends import HTTPBackend
+
+    async def run():
+        rec = {}
+        frames = [_delta_frame(f"w{i} ") for i in range(50)]
+        server, port = await _dribble_upstream(frames, gap_s=0.05,
+                                               record=rec)
+        fired = []
+
+        def cancel_cb():
+            return len(fired) >= 2
+        try:
+            be = HTTPBackend("127.0.0.1", port)
+            # cancel-only: no on_segment, still streams
+            out = await be.generate(
+                "hi", max_new_tokens=64, cancel_cb=lambda: (
+                    fired.append(1), len(fired) > 3)[1])
+        finally:
+            server.close()
+            await server.wait_closed()
+        assert rec["seen"]["payload"]["stream"] is True
+        assert out["cancelled"]
+        # far fewer than 50 frames were ever consumed
+        assert len(out["text"].split()) < 10
+    asyncio.run(run())
