@@ -23,7 +23,11 @@ tracked across PRs:
 * ``paging`` -> ``BENCH_paging.json`` (block-paged admission vs
   worst-case KVBudget accounting at an identical byte budget: aggregate
   tok/s + short P50, prefix-reuse warm-prefill speedup, and the
-  page-size x budget x share-ratio DES grid).
+  page-size x budget x share-ratio DES grid);
+* ``speculative`` -> ``BENCH_speculative.json`` (draft-verify lanes at
+  c=4 vs the fused lane path — aggregate tok/s speedup with bitwise
+  token equality, adversarial-draft contrast, and the acceptance-aware
+  admission policy x draft-K x acceptance-distribution DES grid).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -46,14 +50,15 @@ BENCH_JSONS = {
     "faults": os.path.join(_ROOT, "BENCH_faults.json"),
     "sidecar": os.path.join(_ROOT, "BENCH_sidecar.json"),
     "paging": os.path.join(_ROOT, "BENCH_paging.json"),
+    "speculative": os.path.join(_ROOT, "BENCH_speculative.json"),
 }
 
 
 def main() -> None:
     from benchmarks import (batching_bench, faults_bench, fig3_rho_sweep,
                             paging_bench, policies_bench, predictor_latency,
-                            serve_bench,
-                            sidecar_bench, sim_bench, table1_service_stats,
+                            serve_bench, sidecar_bench, sim_bench,
+                            speculative_bench, table1_service_stats,
                             table2_dataset_stats, table4_ablation,
                             table5_ranking, table6_cross, table7_baselines,
                             table8_burst, table9_tau)
@@ -76,6 +81,7 @@ def main() -> None:
         "faults": faults_bench.run,
         "sidecar": sidecar_bench.run,
         "paging": paging_bench.run,
+        "speculative": speculative_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

@@ -1,0 +1,217 @@
+"""Speculative decoding benchmark: draft-verify lanes at c=4
+(writes ``BENCH_speculative.json``).
+
+Two measurements:
+
+* **lane A/B** — the same 12-request backlog through the PR-5 lane path
+  (fused decode, one token per target forward) and the speculative lane
+  path (``SpeculativeLaneDecoder``: K draft proposals verified in ONE
+  batched target forward per round), both at c=4 on the reduced smollm
+  backbone.  The high-acceptance pair is constructed, not hoped for: the
+  target is an R-repeat stack whose repeats 1..R-1 have zeroed output
+  projections (``wo`` / ``w_down`` -> identity residual blocks), and the
+  draft is the first repeat of the SAME parameters — target and draft
+  logits are bitwise-identical, so acceptance is ~100% at a genuinely
+  R-times-deeper target cost (R=12, K=7, vocab shrunk so the
+  depth-independent head matmul does not mask the depth ratio on a CPU
+  host).  Accepted tokens are target argmaxes
+  either way, so both paths must produce bitwise-equal tokens (asserted;
+  also asserted for an adversarial independently-seeded draft).
+  Acceptance bar (ISSUE 9): >= 1.5x aggregate tok/s.
+* **DES grid** — ``core.sweep.sweep_speculative``: policy x draft-K x
+  acceptance-distribution on the paper's calibration, showing
+  acceptance-aware admission (``sjf_effective``) beating token-count SJF
+  on short-P50 under heterogeneous acceptance and degenerating to it at
+  K=0.
+
+    PYTHONPATH=src python -m benchmarks.run speculative
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+MAX_LEN = 128
+SEGMENT = 8
+LANES = 4
+DRAFT_K = 7
+REPEATS = 12         # target depth multiplier (draft = first repeat)
+VOCAB = 2048         # shrunk so the depth-independent head matmul does
+                     # not dominate the per-step cost on this host
+PROMPT_LEN = 16
+NEW_TOKENS = 48
+N_REQ = 12
+BEST_OF = 3
+
+
+def _zero_tail_repeats(blocks):
+    """Zero the residual-output projections of repeats 1..R-1: those
+    blocks become exact identities, so the R-repeat stack computes
+    bitwise the same logits as its first repeat alone."""
+    import jax
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    def f(path, x):
+        names = [p.key for p in path if isinstance(p, DictKey)]
+        if names and names[-1] in ("wo", "w_down"):
+            return x.at[1:].set(0.0)
+        return x
+
+    return tree_map_with_path(f, blocks)
+
+
+def _mk_engines():
+    import jax
+
+    from repro.configs import get_config
+    from repro.serving.engine import BatchedRealEngine
+
+    cfg1 = dataclasses.replace(get_config("smollm-360m").reduced(),
+                               vocab_size=VOCAB)
+    cfg_t = dataclasses.replace(
+        cfg1, name=cfg1.name + f"-x{REPEATS}",
+        num_layers=REPEATS * len(cfg1.block_pattern))
+
+    seed_eng = BatchedRealEngine(cfg_t, max_len=MAX_LEN,
+                                 segment_len=SEGMENT, n_lanes=LANES,
+                                 seed=0)
+    params = dict(seed_eng.params)
+    params["blocks"] = _zero_tail_repeats(params["blocks"])
+    draft_params = dict(params)
+    draft_params["blocks"] = jax.tree.map(lambda x: x[:1],
+                                          params["blocks"])
+
+    base = BatchedRealEngine(cfg_t, params=params, max_len=MAX_LEN,
+                             segment_len=SEGMENT, n_lanes=LANES, seed=0)
+    spec = BatchedRealEngine(cfg_t, params=params, max_len=MAX_LEN,
+                             segment_len=SEGMENT, n_lanes=LANES, seed=0,
+                             draft_cfg=cfg1, draft_params=draft_params,
+                             draft_k=DRAFT_K)
+    adv = BatchedRealEngine(cfg_t, params=params, max_len=MAX_LEN,
+                            segment_len=SEGMENT, n_lanes=LANES, seed=0,
+                            draft_cfg=cfg1, draft_k=DRAFT_K, draft_seed=7)
+    return cfg_t, base, spec, adv
+
+
+def _workload(cfg, rng):
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=PROMPT_LEN).astype(np.int64)
+               for _ in range(N_REQ)]
+    return prompts, [NEW_TOKENS] * N_REQ
+
+
+def _drain(eng, prompts, maxes):
+    t0 = time.perf_counter()
+    res = eng.generate_batch(prompts, maxes)
+    return time.perf_counter() - t0, res
+
+
+def _ab(result: dict) -> None:
+    cfg, base, spec, adv = _mk_engines()
+    rng = np.random.default_rng(0)
+    prompts, maxes = _workload(cfg, rng)
+    base.generate_batch(prompts[:LANES], 4)          # compile
+    spec.generate_batch(prompts[:LANES], 4)
+    adv.generate_batch(prompts[:LANES], 4)
+
+    best = {}
+    outs = {}
+    for name, eng in (("fused", base), ("speculative", spec),
+                      ("adversarial", adv)):
+        w = np.inf
+        for _ in range(BEST_OF):
+            wall, res = _drain(eng, prompts, maxes)
+            w = min(w, wall)
+        best[name], outs[name] = w, res
+
+    want = [list(r["tokens"]) for r in outs["fused"]]
+    for name in ("speculative", "adversarial"):
+        got = [list(r["tokens"]) for r in outs[name]]
+        assert got == want, f"{name} draft changed tokens"
+    toks = sum(len(w) for w in want)
+
+    result["tokens"] = toks
+    result["lanes"] = LANES
+    result["draft_k"] = DRAFT_K
+    result["target_repeats"] = REPEATS
+    result["agg_tok_s_fused"] = toks / best["fused"]
+    result["agg_tok_s_speculative"] = toks / best["speculative"]
+    result["agg_tok_s_adversarial"] = toks / best["adversarial"]
+    result["speedup_tok_s"] = best["fused"] / best["speculative"]
+    result["slowdown_adversarial"] = best["fused"] / best["adversarial"]
+    result["accept_rate_speculative"] = spec.accept_rate
+    result["accept_rate_adversarial"] = adv.accept_rate
+    result["dead_steps_speculative"] = spec.dead_steps
+    result["dead_steps_adversarial"] = adv.dead_steps
+    result["bitwise_equal"] = True                   # asserted above
+    result["meets_1p5x_tok_s"] = bool(result["speedup_tok_s"] >= 1.5)
+    result["acceptance_pass"] = result["meets_1p5x_tok_s"]
+    assert spec.accept_rate > 0.9, \
+        f"constructed high-acceptance pair drifted: {spec.accept_rate}"
+    emit("speculative_ab_tok_s", best["speculative"] / toks * 1e6,
+         f"speculative {result['agg_tok_s_speculative']:.0f} tok/s vs "
+         f"fused {result['agg_tok_s_fused']:.0f} at c={LANES} = "
+         f"{result['speedup_tok_s']:.2f}x (accept "
+         f"{spec.accept_rate:.2f}, K={DRAFT_K}, {REPEATS}x-deep target)")
+    emit("speculative_adversarial", best["adversarial"] / toks * 1e6,
+         f"adversarial draft {result['agg_tok_s_adversarial']:.0f} tok/s "
+         f"({result['slowdown_adversarial']:.2f}x, accept "
+         f"{adv.accept_rate:.2f}, {adv.dead_steps} dead steps) — "
+         f"bitwise-equal tokens regardless")
+
+
+def _grid(result: dict, n: int = 500, seeds=(0, 1, 2, 3, 4)) -> None:
+    from repro.core.sweep import sweep_speculative
+    from repro.serving.service_time import PAPER_4090_LONG, PAPER_4090_SHORT
+
+    conditions = [("fcfs", None), ("sjf", None), ("sjf_effective", None)]
+    draft_ks = (0, 2, 4)
+    dists = ("uniform", "bimodal")
+    t0 = time.perf_counter()
+    res = sweep_speculative(conditions, draft_ks, dists, seeds, n=n,
+                            short=PAPER_4090_SHORT, long=PAPER_4090_LONG,
+                            rho=0.8)
+    dt = time.perf_counter() - t0
+    cells = len(conditions) * len(draft_ks) * len(dists) * len(seeds)
+    emit("speculative_grid", dt / cells * 1e6,
+         f"{cells} DES cells ({len(conditions)} policies x "
+         f"{len(draft_ks)} Ks x {len(dists)} acceptance dists x "
+         f"{len(seeds)} seeds, n={n}) in {dt:.2f}s")
+    grid = {}
+    for m in ("short_p50", "mean_sojourn"):
+        v = res.metric(m).mean(-1)                   # seed-avg (C, K, A)
+        for ci, (pol, _) in enumerate(res.conditions):
+            for ki, k in enumerate(res.draft_ks):
+                for ai, d in enumerate(res.accept_dists):
+                    grid[f"{m}_{pol}_k{k}_{d}"] = float(v[ci, ki, ai])
+    result["grid"] = grid
+    sjf = res.metric("short_p50")[1].mean(-1)        # (K, A)
+    eff = res.metric("short_p50")[2].mean(-1)
+    result["des_short_p50_sjf_k4_uniform"] = float(sjf[2, 0])
+    result["des_short_p50_effective_k4_uniform"] = float(eff[2, 0])
+    result["des_effective_wins_short_p50"] = bool(eff[2, 0] <= sjf[2, 0])
+    result["des_k0_degenerate"] = bool(
+        np.allclose(res.metric("short_p50")[1, 0],
+                    res.metric("short_p50")[2, 0]))
+    emit("speculative_des_effective",
+         abs(sjf[2, 0] - eff[2, 0]) * 1e6,
+         f"short P50 at K=4 uniform acceptance: sjf {sjf[2, 0]:.2f}s -> "
+         f"sjf_effective {eff[2, 0]:.2f}s "
+         f"(wins={result['des_effective_wins_short_p50']}, "
+         f"K=0 degenerate={result['des_k0_degenerate']})")
+
+
+def run() -> dict:
+    result: dict = {}
+    _ab(result)
+    _grid(result)
+    return result
+
+
+if __name__ == "__main__":
+    run()

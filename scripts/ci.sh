@@ -22,9 +22,11 @@ echo "== assert-stripped import check (python -O) =="
 # exceptions, so the hot modules have to import and resolve cleanly
 python -O -c "import repro.core.sim_fast, repro.core.policy; \
 repro.core.policy.get_policy('sjf'); \
+repro.core.policy.get_policy('sjf_effective'); \
 import repro.core.sweep, repro.core.scheduler, repro.serving.batching; \
 import repro.serving.http_sidecar, repro.serving.backends; \
-import repro.serving.paging, repro.kernels.decode_attention"
+import repro.serving.paging, repro.kernels.decode_attention; \
+import repro.serving.generate, repro.core.calibration"
 
 echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
@@ -95,6 +97,43 @@ eng.allocator.check()
 print(f"paging smoke OK: {len(res)} requests retired, "
       f"{al['prefix_hit_pages']} prefix-hit pages, "
       f"{mgr['preemptions']} preemptions, pool drained clean")
+PY
+
+echo "== fixed-seed speculative smoke (bitwise equality + acceptance) =="
+# draft-verify lanes against the fused reference: the speculative path
+# must emit bitwise-identical tokens (accepted tokens are target argmaxes)
+# with a nonzero acceptance rate, and the DES key must degenerate to
+# plain SJF at draft_k=0
+python - <<'PY'
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import get_policy
+from repro.serving.engine import BatchedRealEngine
+from repro.serving.service_time import expected_speedup
+
+cfg = get_config("smollm-360m").reduced()
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).astype(np.int64)
+           for n in (5, 11, 23, 7)]
+maxes = [10, 18, 6, 12]
+ref = BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=3, seed=0)
+want = [ref.generate_reference(p, max_new_tokens=m)["tokens"]
+        for p, m in zip(prompts, maxes)]
+spec = BatchedRealEngine(cfg, max_len=64, segment_len=4, n_lanes=3, seed=0,
+                         params=ref.params, draft_cfg=cfg,
+                         draft_params=ref.params, draft_k=3)
+outs = spec.generate_batch(prompts, maxes)
+bad = [i for i, (o, w) in enumerate(zip(outs, want))
+       if list(o["tokens"]) != list(w)]
+assert not bad, f"speculative tokens diverge from fused reference: {bad}"
+assert spec.accept_rate > 0.0, f"zero acceptance: {spec.accept_rate}"
+assert expected_speedup(0.9, 0) == 1.0, "draft_k=0 must be identity"
+assert get_policy("sjf_effective").name == "sjf_effective"
+print(f"speculative smoke OK: {len(outs)} requests bitwise-equal, "
+      f"accept_rate={spec.accept_rate:.3f} "
+      f"(drafted {spec.drafted_total}, accepted {spec.accepted_total}, "
+      f"dead_steps {spec.dead_steps})")
 PY
 
 echo "== sidecar wire smoke (loopback HTTP/SSE, fixed seed) =="
@@ -211,4 +250,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run paging
     echo "== BENCH_paging.json =="
     cat BENCH_paging.json
+    echo "== speculative decoding benchmark (draft-verify lanes) =="
+    python -m benchmarks.run speculative
+    echo "== BENCH_speculative.json =="
+    cat BENCH_speculative.json
 fi

@@ -42,6 +42,11 @@ to the reference simulator.  New in this layer:
                   predicted service; jobs that outlive their prediction
                   are demoted to a background level that only runs when
                   the top level is empty.
+``sjf_effective`` acceptance-aware SJF for speculative-decoding backends:
+                  the key is predicted service divided by the expected
+                  speculative speedup of the request's draft acceptance
+                  rate — a token-long request that drafts well is
+                  *effectively* short and ranks accordingly.
 ``fair_share``    per-tenant weighted fair share: the key is the tenant's
                   cumulative *predicted* work (weighted), so a tenant
                   flooding the queue only delays itself (start-time fair
@@ -395,6 +400,50 @@ class WeightedFairShare(Policy):
         return key
 
 
+@dataclass(frozen=True)
+class EffectiveSJF(Policy):
+    """Acceptance-aware SJF: key = predicted service / expected speedup.
+
+    Under speculative decoding a request's wall-clock cost is not its
+    token count — it is the token count divided by the speculative
+    speedup, which varies per request with draft acceptance (predictable
+    prompts draft well, adversarial ones do not).  This key divides the
+    posterior-mean predicted service by
+    ``serving.service_time.expected_speedup(accept_rate, draft_k)`` so a
+    token-long request that speculates well can rank ahead of a
+    token-short one that does not.  Requests without an ``accept_rate``
+    (None) fall back to ``prior_accept``; with a uniform acceptance rate
+    the key is a positive scalar multiple of plain SJF's, i.e. the
+    ordering degenerates to token-count SJF exactly.
+    """
+
+    name: str = "sjf_effective"
+    draft_k: int = 4
+    draft_cost: float = 0.15
+    prior_accept: float = 0.5
+
+    def _speedup(self, accept_rate):
+        # lazy import: serving.service_time imports core.simulation,
+        # which reaches back into this module via core.scheduler
+        from repro.serving.service_time import expected_speedup
+        return expected_speedup(accept_rate, self.draft_k, self.draft_cost)
+
+    def key(self, req) -> float:
+        a = getattr(req, "accept_rate", None)
+        if a is None:
+            a = self.prior_accept
+        return self.predicted_service(req.p_long) / float(self._speedup(a))
+
+    def key_array(self, arrival, p_long, true_service, tenant=None,
+                  tenants=("default",), accept_rate=None) -> np.ndarray:
+        pred = self.predicted_service_array(p_long)
+        if accept_rate is None:
+            return pred / float(self._speedup(self.prior_accept))
+        a = np.where(np.isnan(np.asarray(accept_rate, np.float64)),
+                     self.prior_accept, np.asarray(accept_rate, np.float64))
+        return pred / self._speedup(a)
+
+
 # ------------------------------------------------------------------ registry
 _REGISTRY: Dict[str, Policy] = {}
 
@@ -433,6 +482,7 @@ register(PredictedSRPT())
 register(QuantileSJF())
 register(MLFQ())
 register(WeightedFairShare())
+register(EffectiveSJF())
 
 #: The seed policy names (kept for backward compatibility; the full set is
 #: :func:`registered_names`).

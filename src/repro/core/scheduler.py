@@ -53,6 +53,9 @@ class Request:
     true_service: float = 0.0     # oracle service time (sim / oracle policy)
     klass: str = ""               # "short" | "medium" | "long" (ground truth)
     tenant: str = "default"
+    # predicted/observed draft acceptance rate under speculative decoding
+    # (None = unknown; acceptance-aware policies fall back to their prior)
+    accept_rate: Optional[float] = None
     meta: dict = field(default_factory=dict)
     # filled by the dispatcher / simulator
     start: Optional[float] = None

@@ -195,6 +195,27 @@ def dispatch_key(policy, arrival: np.ndarray, p_long: np.ndarray,
                                         tenant=tenant, tenants=tenants)
 
 
+def speculative_service(true_service, accept_rate, draft_k: int,
+                        draft_cost: float = 0.15) -> np.ndarray:
+    """Per-request speculative service-rate modifier.
+
+    Mirrors a draft-verify decode backend in the DES: each request's
+    wall-clock service is its serial service divided by
+    ``serving.service_time.expected_speedup`` of its draft acceptance
+    rate.  NaN acceptance (unknown) is treated as 0.0 — the backend
+    still pays the draft overhead it gets nothing back for.
+    ``draft_k == 0`` returns the service values unchanged (the
+    no-speculation identity, bitwise).
+    """
+    svc = np.ascontiguousarray(true_service, np.float64)
+    if draft_k == 0:
+        return svc
+    from repro.serving.service_time import expected_speedup
+    a = np.asarray(accept_rate, np.float64)
+    a = np.where(np.isnan(a), 0.0, a)
+    return svc / expected_speedup(a, draft_k, draft_cost)
+
+
 # ---------------------------------------------------------------------------
 # Engines.  Contract: ``arrival`` ascending (ties broken by array index,
 # which is the reference's (arrival, req_id) push order -> heap seq).

@@ -107,6 +107,62 @@ def simulate(requests: Sequence[Request], policy="sjf",
                      makespan=res.makespan)
 
 
+def simulate_speculative(requests: Sequence[Request], policy="sjf",
+                         tau: Optional[float] = None, *, draft_k: int = 0,
+                         draft_cost: float = 0.15,
+                         engine: str = "auto") -> SimResult:
+    """Serial-server DES with a speculative-decoding backend.
+
+    Mirrors draft-verify decode (serving/generate.py) as a per-request
+    service-rate modifier: each request's wall-clock service is
+    ``true_service / expected_speedup(accept_rate, draft_k)`` where
+    ``accept_rate`` is ``Request.accept_rate`` (None counts as 0.0 — the
+    draft overhead is paid regardless).  Acceptance-aware policies
+    (``sjf_effective``) receive the per-request acceptance rates through
+    ``key_array``; plain policies key exactly as before.  ``draft_k=0``
+    is the identity — bitwise trace-equal to :func:`simulate`.
+    """
+    from dataclasses import replace as _replace
+
+    from repro.core.policy import EffectiveSJF, get_policy
+    from repro.core.sim_fast import (RequestBatch, simulate_arrays,
+                                     speculative_service)
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    n = len(reqs)
+    if n == 0:
+        return SimResult(requests=[], promotions=0, makespan=0.0)
+    pol = get_policy(policy)
+    if isinstance(pol, EffectiveSJF):
+        # key against this run's actual draft depth/cost
+        pol = _replace(pol, draft_k=draft_k, draft_cost=draft_cost)
+    if pol.preemptive:
+        raise ValueError(
+            f"simulate_speculative supports key-based policies only, "
+            f"got preemptive {pol.name!r}")
+    batch = RequestBatch.from_requests(reqs)      # already arrival-sorted
+    accept = np.array([float("nan") if r.accept_rate is None
+                       else float(r.accept_rate) for r in reqs], np.float64)
+    service = speculative_service(batch.true_service, accept, draft_k,
+                                  draft_cost)
+    try:
+        key = pol.key_array(batch.arrival, batch.p_long, service,
+                            tenant=batch.tenant, tenants=batch.tenants,
+                            accept_rate=accept)
+    except TypeError:                             # acceptance-unaware policy
+        key = pol.key_array(batch.arrival, batch.p_long, service,
+                            tenant=batch.tenant, tenants=batch.tenants)
+    start, finish, promoted, promotions = simulate_arrays(
+        batch.arrival, service, key, pol.aging.effective_tau(tau),
+        engine=engine)
+    for i, r in enumerate(reqs):
+        r.start = float(start[i])
+        r.finish = float(finish[i])
+        r.promoted = bool(promoted[i])
+    done = [reqs[i] for i in np.argsort(start, kind="stable")]
+    return SimResult(requests=done, promotions=promotions,
+                     makespan=float(finish.max()))
+
+
 def simulate_servers(requests: Sequence[Request], policy="sjf",
                      tau: Optional[float] = None, n_servers: int = 1,
                      slowdown=None, mem_tokens=None,

@@ -230,6 +230,146 @@ def sweep_burst(conditions: Sequence[Condition], seeds: Sequence[int],
                                 for m, v in flat.items()})
 
 
+#: Named per-request acceptance-rate generators for ``sweep_speculative``:
+#: name -> fn(rng, n) returning (n,) draft-acceptance rates in [0, 1).
+ACCEPT_DISTS = {
+    "high": lambda rng, n: np.full(n, 0.9),
+    "low": lambda rng, n: np.full(n, 0.2),
+    "uniform": lambda rng, n: rng.uniform(0.05, 0.95, n),
+    "bimodal": lambda rng, n: np.where(rng.random(n) < 0.5, 0.9, 0.1),
+}
+
+
+@dataclass
+class SpeculativeSweepResult:
+    """Metric arrays over a conditions x draft-K x acceptance x seeds grid."""
+
+    conditions: Tuple[Condition, ...]
+    draft_ks: Tuple[int, ...]
+    accept_dists: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+    metrics: Dict[str, np.ndarray]               # each (C, K, A, S)
+
+    def metric(self, name: str) -> np.ndarray:
+        return self.metrics[name]
+
+    def condition_index(self, policy: str, tau: Optional[float]) -> int:
+        return self.conditions.index((policy, tau))
+
+
+def sweep_speculative(conditions: Sequence[Condition],
+                      draft_ks: Sequence[int],
+                      accept_dists: Sequence,
+                      seeds: Sequence[int], n: int, short, long,
+                      mix_long: float = 0.5, rho: float = 0.85,
+                      draft_cost: float = 0.15,
+                      backend: str = "auto") -> SpeculativeSweepResult:
+    """The speculative-decoding grid: policy x draft-K x acceptance x seed.
+
+    Mirrors draft-verify decode in the DES as a per-request service-rate
+    modifier (``sim_fast.speculative_service``): one Poisson workload per
+    seed (rho fixes the arrival rate against the *serial* mean service)
+    is shared across every (policy, K, acceptance) cell; each cell scales
+    services by ``1 / expected_speedup(accept_rate, K)`` with acceptance
+    rates drawn from the named generator (:data:`ACCEPT_DISTS`, or pass
+    ``(name, fn)`` pairs).  Acceptance-aware policies (``sjf_effective``)
+    receive the per-request rates through ``key_array``; plain policies
+    key as usual — the grid that shows when acceptance-aware admission
+    beats token-count SJF (heterogeneous acceptance) and when it
+    degenerates to it (uniform acceptance).  ``draft_k = 0`` cells are
+    the unmodified serial grid.  Key-based policies only.
+    """
+    from repro.core.sim_fast import _KLASS_CODE, speculative_service
+    specs = tuple((p, t) for p, t in conditions)
+    policies = [get_policy(p) for p, _ in specs]
+    for pol in policies:
+        if pol.preemptive:
+            raise ValueError(
+                f"sweep_speculative supports key-based policies only, "
+                f"got preemptive {pol.name!r}")
+    conds = tuple((pol.name, t) for pol, (_, t) in zip(policies, specs))
+    draft_ks = tuple(int(k) for k in draft_ks)
+    dists = [(d, ACCEPT_DISTS[d]) if isinstance(d, str) else (d[0], d[1])
+             for d in accept_dists]
+    names = tuple(name for name, _ in dists)
+    seeds = tuple(int(s) for s in seeds)
+    C, K, A, S = len(conds), len(draft_ks), len(dists), len(seeds)
+
+    es = mix_long * long.mean + (1.0 - mix_long) * short.mean
+    lam = rho / es
+    base = []                        # per seed: arrival-sorted columns
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        b = RequestBatch.poisson(rng, n, lam, short, long,
+                                 mix_long=mix_long)
+        perm = np.lexsort((b.req_id, b.arrival))
+        base.append((b.arrival[perm], b.true_service[perm], b.p_long[perm],
+                     b.klass[perm], b.tenant[perm], b.tenants))
+    accept = {}                      # (ai, si) -> (n,) acceptance rates
+    for ai, (_, fn) in enumerate(dists):
+        for si, seed in enumerate(seeds):
+            accept[ai, si] = np.clip(
+                np.asarray(fn(np.random.default_rng((seed, 7919 + ai)), n),
+                           np.float64), 0.0, 1.0)
+
+    R = C * K * A * S
+    arrival = np.empty((R, n))
+    service = np.empty((R, n))
+    key = np.empty((R, n))
+    taus: List[Optional[float]] = []
+    from dataclasses import replace as _replace
+
+    from repro.core.policy import EffectiveSJF
+    for c, (pol, (_, tau)) in enumerate(zip(policies, specs)):
+        for ki, k in enumerate(draft_ks):
+            # acceptance-aware policies must key against the cell's
+            # actual draft depth/cost, not their registry defaults (at
+            # K=0 the key degenerates to plain predicted service)
+            pol_k = _replace(pol, draft_k=k, draft_cost=draft_cost) \
+                if isinstance(pol, EffectiveSJF) else pol
+            for ai in range(A):
+                for si in range(S):
+                    row = ((c * K + ki) * A + ai) * S + si
+                    arr, svc, pl, _, tc, tn = base[si]
+                    a = accept[ai, si]
+                    eff = speculative_service(svc, a, k, draft_cost)
+                    arrival[row] = arr
+                    service[row] = eff
+                    try:
+                        key[row] = pol_k.key_array(
+                            arr, pl, eff, tenant=tc, tenants=tn,
+                            accept_rate=a)
+                    except TypeError:      # acceptance-unaware policy
+                        key[row] = pol_k.key_array(arr, pl, eff,
+                                                   tenant=tc, tenants=tn)
+                    taus.append(pol.aging.effective_tau(tau))
+
+    if backend == "jax":
+        from repro.core.sim_jax import simulate_grid_jax
+        start, finish, _, promotions = simulate_grid_jax(
+            arrival, service, key, taus)
+    else:
+        start, finish, _, promotions = simulate_grid(
+            arrival, service, key, taus, engine=backend)
+
+    out = {m: np.empty((C, K, A, S)) for m in METRICS}
+    for c in range(C):
+        for ki in range(K):
+            for ai in range(A):
+                for si in range(S):
+                    row = ((c * K + ki) * A + ai) * S + si
+                    klass = base[si][3]
+                    vals = _percentile_metrics(
+                        start[row], finish[row], int(promotions[row]),
+                        arrival[row], klass == _KLASS_CODE["short"],
+                        klass == _KLASS_CODE["long"])
+                    for m, v in zip(METRICS, vals):
+                        out[m][c, ki, ai, si] = v
+    return SpeculativeSweepResult(conditions=conds, draft_ks=draft_ks,
+                                  accept_dists=names, seeds=seeds,
+                                  metrics=out)
+
+
 @dataclass
 class LaneSweepResult:
     """Metric arrays over a conditions x lanes x budgets x seeds grid."""

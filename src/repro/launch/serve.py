@@ -48,11 +48,38 @@ def main(argv=None):
                          "0: concurrent burst")
     ap.add_argument("--tau-mult", type=float, default=3.0)
     ap.add_argument("--dataset", default="sharegpt")
+    ap.add_argument("--speculative", action="store_true",
+                    help="mirror draft-verify decode in the service-time "
+                         "model: decode runs at the expected speculative "
+                         "speedup of --accept-rate")
+    ap.add_argument("--draft-model", default=None,
+                    help="draft arch: sets the draft/target cost ratio "
+                         "from the two archs' active parameter counts "
+                         "(default 0.15)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per verify step")
+    ap.add_argument("--accept-rate", type=float, default=0.7,
+                    help="assumed draft acceptance rate")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     model = ServiceTimeModel.from_arch(cfg, chips=args.chips)
+    if args.speculative:
+        from dataclasses import replace as _replace
+
+        from repro.serving.service_time import expected_speedup
+        draft_cost = 0.15
+        if args.draft_model:
+            dcfg = get_config(args.draft_model)
+            draft_cost = (dcfg.active_param_count()
+                          / cfg.active_param_count())
+        rate = float(expected_speedup(args.accept_rate, args.draft_k,
+                                      draft_cost))
+        model = _replace(model, effective_rate=rate)
+        print(f"speculative mirror: K={args.draft_k} "
+              f"accept={args.accept_rate} draft_cost={draft_cost:.3f} "
+              f"-> expected speedup {rate:.2f}x")
     rng = np.random.default_rng(args.seed)
 
     from repro.core.policy import get_policy

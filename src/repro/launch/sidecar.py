@@ -46,6 +46,15 @@ from repro.serving.service_time import ServiceTimeModel
 def build_sidecar(args) -> Sidecar:
     cfg = get_config(args.arch)
     model = ServiceTimeModel.from_arch(cfg, chips=args.chips)
+    if getattr(args, "speculative", False):
+        # mirror draft-verify decode in the cost model (and therefore in
+        # the tau calibration below): decode runs at the expected
+        # speculative speedup of the assumed acceptance rate
+        from dataclasses import replace as _replace
+
+        from repro.serving.service_time import expected_speedup
+        model = _replace(model, effective_rate=float(
+            expected_speedup(args.accept_rate, args.draft_k)))
     from repro.core.policy import get_policy
     predictor = build_predictor(args.dataset) \
         if get_policy(args.policy).uses_predictor and not args.no_predictor \
@@ -65,7 +74,14 @@ def build_sidecar(args) -> Sidecar:
         from repro.serving.backends import InProcessBackend
         from repro.serving.engine import RealEngine
         rcfg = get_config("smollm-360m").reduced()
-        backends = [InProcessBackend(RealEngine(rcfg, max_len=96))
+        spec_kw = {}
+        if getattr(args, "speculative", False):
+            dcfg = get_config(args.draft_model).reduced() \
+                if args.draft_model else rcfg
+            spec_kw = dict(draft_cfg=dcfg, draft_k=args.draft_k,
+                           draft_seed=args.seed)
+        backends = [InProcessBackend(RealEngine(rcfg, max_len=96,
+                                                **spec_kw))
                     for _ in range(args.replicas)]
         for i, b in enumerate(backends):
             b.replica_id = i
@@ -157,6 +173,19 @@ def main(argv=None):
     ap.add_argument("--tenant-burst", type=float, default=10.0)
     ap.add_argument("--drain-s", type=float, default=30.0)
     ap.add_argument("--breaker-recovery-s", type=float, default=5.0)
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-verify decode: the real backend runs a "
+                         "draft model per replica; the sim backend (and "
+                         "the tau calibration) apply the expected "
+                         "speculative speedup to the service-time model")
+    ap.add_argument("--draft-model", default=None,
+                    help="draft arch name (default: the reduced target "
+                         "arch — 100%% acceptance sanity mode)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per verify step")
+    ap.add_argument("--accept-rate", type=float, default=0.7,
+                    help="assumed draft acceptance rate for the "
+                         "service-time mirror (sim backend/calibration)")
     ap.add_argument("--chaos-crash-mtbf", type=float, default=0.0,
                     help=">0: inject engine crashes at this MTBF (s)")
     ap.add_argument("--chaos-transient-rate", type=float, default=0.0,

@@ -197,6 +197,44 @@ def decode_attention(q, cache_k, cache_v, t):
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def verify_attention(q, cache_k, cache_v, t):
+    """W-position attention over a (ring-buffer) KV cache — the speculative
+    verification forward.
+
+    q: (B, W, H, hd); cache_k/v: (B, S, KV, hd); t: the pre-verify fill
+    level — a scalar shared by the batch or a (B,) vector of per-lane
+    levels.  Query ``w`` attends slots ``<= t + w``: exactly the mask
+    ``decode_attention`` applies at fill level ``t + w``, with the same
+    einsum contraction layout, PERF cast handling and softmax, so row
+    ``w`` of the verify output is a bitwise candidate for the serial
+    decode output at that position (tests/test_speculative.py holds the
+    equality end to end).
+    """
+    B, W, H, hd = q.shape
+    S, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    if PERF["decode_cast_f32"]:
+        qg = q.reshape(B, W, KV, G, hd).astype(jnp.float32)
+        k_in, v_in = cache_k.astype(jnp.float32), cache_v.astype(jnp.float32)
+    else:
+        qg = q.reshape(B, W, KV, G, hd)
+        k_in, v_in = cache_k, cache_v
+    qg = qg.transpose(0, 2, 3, 1, 4)                      # (B, KV, G, W, hd)
+    logits = jnp.einsum("bkgwh,bskh->bkgws", qg, k_in,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    w_idx = jnp.arange(W, dtype=jnp.int32)
+    if jnp.ndim(t) == 0:
+        limit = (t + w_idx)[None, :, None]                # (1, W, 1)
+    else:
+        limit = (t[:, None] + w_idx[None, :])[:, :, None]  # (B, W, 1)
+    mask = (jnp.arange(S)[None, None, :] <= limit)[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgws,bskh->bkgwh", w.astype(v_in.dtype), v_in,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, W, H, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Self-attention block (pre-norm, residual)
 # ---------------------------------------------------------------------------
@@ -252,6 +290,77 @@ def attn_block(cfg, p, x, *, mode: str, pos_offset, cache=None):
         new_cache = None
         if mode == "prefill":
             new_cache = {"k": k, "v": v, "t": jnp.asarray(S, jnp.int32)}
+    elif mode == "verify":
+        # Speculative verification: x is (B, W, D) — the pending token plus
+        # K draft tokens.  Token w lands at absolute position t + w; all W
+        # KVs are written up front and each query masks its own prefix
+        # (slot <= t + w), so chain token w attends the draft tokens before
+        # it through their just-written target KV — the same values serial
+        # decode would have produced and written at those slots.  The fill
+        # level is NOT advanced here: the caller commits the accepted
+        # length by resetting "t" afterwards (rejected-draft rollback =
+        # don't advance; stale KV past the new fill level stays masked and
+        # is overwritten in order by later decode/verify writes, so
+        # rollback costs no recompilation and no cleanup pass).
+        t = cache["t"]
+        W = x.shape[1]
+        per_seq = jnp.ndim(t) != 0
+        w_idx = jnp.arange(W, dtype=jnp.int32)
+        positions = (t[:, None] + w_idx[None, :]) if per_seq else t + w_idx
+        q, k, v = _project_qkv(cfg, p, h, positions)
+        pos = positions if per_seq else jnp.broadcast_to(
+            positions[None, :], (B, W))
+        if "bt" in cache:                      # block-paged pool
+            bt = cache["bt"]                   # (B, P)
+            pool_k, pool_v = cache["k"], cache["v"]
+            n_pages, page = pool_k.shape[0], pool_k.shape[1]
+            P = bt.shape[1]
+            max_len = P * page
+            page_slot = jnp.minimum(pos // jnp.int32(page), jnp.int32(P - 1))
+            pg = jnp.take_along_axis(bt, page_slot, axis=1)
+            pg = jnp.where(pos < max_len, pg, jnp.int32(0))
+            gs = pg * page + jax.lax.rem(pos, jnp.int32(page))
+            KV, hd = pool_k.shape[2], pool_k.shape[3]
+            flat_k = pool_k.reshape(n_pages * page, KV, hd)
+            flat_v = pool_v.reshape(n_pages * page, KV, hd)
+            # duplicate indices only ever hit the trash page (live slots
+            # are privately owned), where write order is irrelevant
+            flat_k = flat_k.at[gs.reshape(-1)].set(
+                k.astype(flat_k.dtype).reshape(B * W, KV, hd))
+            flat_v = flat_v.at[gs.reshape(-1)].set(
+                v.astype(flat_v.dtype).reshape(B * W, KV, hd))
+            ck_pool = flat_k.reshape(n_pages, page, KV, hd)
+            cv_pool = flat_v.reshape(n_pages, page, KV, hd)
+            k_log = ck_pool[bt].reshape(B, max_len, KV, hd)
+            v_log = cv_pool[bt].reshape(B, max_len, KV, hd)
+            out = verify_attention(q, k_log, v_log, t)
+            new_cache = {"k": ck_pool, "v": cv_pool, "t": t, "bt": bt}
+        else:                                  # ring buffer
+            S = cache["k"].shape[1]
+            # out-of-range positions (a stopped or near-capacity lane's
+            # verify window past the buffer) are dropped rather than
+            # wrapped: unlike decode, a wrapped verify write could clobber
+            # a live early slot before its own masked read.
+            gs = jnp.where(
+                pos < S,
+                jnp.arange(B, dtype=jnp.int32)[:, None] * S + pos,
+                jnp.int32(B * S))
+            KV, hd = cache["k"].shape[2], cache["k"].shape[3]
+            flat_k = cache["k"].reshape(B * S, KV, hd)
+            flat_v = cache["v"].reshape(B * S, KV, hd)
+            flat_k = flat_k.at[gs.reshape(-1)].set(
+                k.astype(flat_k.dtype).reshape(B * W, KV, hd), mode="drop")
+            flat_v = flat_v.at[gs.reshape(-1)].set(
+                v.astype(flat_v.dtype).reshape(B * W, KV, hd), mode="drop")
+            ck = flat_k.reshape(B, S, KV, hd)
+            cv = flat_v.reshape(B, S, KV, hd)
+            ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+            cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+            out = verify_attention(q, ck, cv, t)
+            new_cache = {"k": ck, "v": cv, "t": t}
+        out = constrain(out, "batch", "seq", "heads", "head_dim")
+        out = out.reshape(B, -1, cfg.attn_dim)
+        return x + dense(out, p["wo"]), new_cache
     elif cache is not None and "bt" in cache:  # block-paged decode
         t = cache["t"]                         # (B,) per-lane fill levels
         bt = cache["bt"]                       # (B, P) int32 page per block

@@ -241,6 +241,27 @@ class LM:
         logits = self._head(params, x)[:, 0]
         return logits, caches
 
+    def verify_step(self, params, caches, batch_step):
+        """Speculative verification: score W consecutive positions in one
+        dispatch.
+
+        batch_step: {"tokens": (B, W)} — the pending token plus K = W-1
+        draft tokens per sequence.  Each token is written into the KV cache
+        at its absolute position (fill level ``t`` + offset) and attends
+        its own causal prefix, so position ``w``'s logits are the logits
+        serial decode would produce after consuming the first ``w + 1``
+        tokens.  The cache fill level is *not* advanced — callers commit
+        the accepted prefix by resetting ``t`` (models/attention.py
+        mode="verify"), which is also how rejected drafts roll back.
+        Returns (logits (B, W, V), caches).
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, batch_step)
+        x, caches, _ = tf.run_stack(cfg, params["blocks"], x, mode="verify",
+                                    caches=caches, remat=False)
+        logits = self._head(params, x)
+        return logits, caches
+
     # -- cache construction ---------------------------------------------------
     def init_cache(self, batch_size: int, max_len: int, t0: int = 0):
         """Zero caches (stacked over repeats) for decode-from-scratch or as

@@ -209,10 +209,13 @@ class InProcessBackend(Backend):
             self.engine.generate, ids, max_new_tokens=max_new_tokens,
             cancel_cb=cancel_cb, on_segment=seg)
         self.served = self.engine.served
-        return {"text": tokens_to_text(out["tokens"]),
-                "tokens": len(out["tokens"]), "ttft_s": out["ttft_s"],
-                "service_s": out["service_s"],
-                "cancelled": out["cancelled"]}
+        res = {"text": tokens_to_text(out["tokens"]),
+               "tokens": len(out["tokens"]), "ttft_s": out["ttft_s"],
+               "service_s": out["service_s"],
+               "cancelled": out["cancelled"]}
+        if "accept_rate" in out:          # speculative engine
+            res["accept_rate"] = out["accept_rate"]
+        return res
 
     async def probe(self) -> bool:
         return True
@@ -348,7 +351,8 @@ class HTTPBackend(Backend):
             dt = time.monotonic() - t0
             return {"text": text, "tokens": int(toks),
                     "ttft_s": extra_info.get("ttft_s", dt),
-                    "service_s": dt, "cancelled": False}
+                    "service_s": dt, "cancelled": False,
+                    "accept_rate": extra_info.get("accept_rate")}
         finally:
             self._close(writer)
 

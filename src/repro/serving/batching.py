@@ -120,6 +120,15 @@ class LaneState:
     # prefix cache (0 under worst-case ring accounting)
     pages: List[int] = field(default_factory=list)
     prefix_len: int = 0
+    # speculative decoding (serving/generate.py): draft positions proposed
+    # for this lane and how many of them the target verified and accepted
+    drafted: int = 0
+    accepted: int = 0
+
+    @property
+    def accept_rate(self) -> Optional[float]:
+        """Observed draft acceptance rate, None before any draft ran."""
+        return self.accepted / self.drafted if self.drafted else None
 
 
 class LaneManager:

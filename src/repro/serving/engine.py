@@ -84,11 +84,15 @@ class RealEngine:
     """Actual LM decode on device (reduced configs on this CPU container)."""
 
     def __init__(self, cfg, params=None, replica_id: int = 0, seed: int = 0,
-                 max_len: int = 256, segment_len: int = 16):
+                 max_len: int = 256, segment_len: int = 16,
+                 draft_cfg=None, draft_params=None, draft_k: int = 0,
+                 draft_seed: int = 0):
         import jax
         import jax.numpy as jnp
         from repro.models.model import LM
-        from repro.serving.generate import FusedDecoder, geometric_buckets
+        from repro.serving.generate import (FusedDecoder,
+                                            SpeculativeDecoder,
+                                            geometric_buckets)
 
         self.cfg = cfg
         self.lm = LM(cfg)
@@ -116,6 +120,34 @@ class RealEngine:
         self._decode = jax.jit(self.lm.decode_step)       # oracle path
         self._decoders = {segment_len: FusedDecoder(self.lm, max_len,
                                                     segment_len)}
+        # speculative decoding (draft_k >= 1 + a draft config): the small
+        # draft model proposes token chains the target verifies in one
+        # multi-position forward.  K=0 keeps the plain fused path even
+        # when a draft config is supplied.
+        self.draft_cfg = draft_cfg
+        self.draft_k = int(draft_k)
+        self.speculative = draft_cfg is not None and self.draft_k > 0
+        self.draft_lm = None
+        self.draft_params = None
+        if self.speculative:
+            if not self._bucketing:
+                raise ValueError(
+                    "speculative decoding needs a pure-attention stack "
+                    f"(got pattern {cfg.block_pattern}): the verify "
+                    "forward is an attention-cache operation")
+            if not all(k in _BUCKET_SAFE_KINDS
+                       for k in draft_cfg.block_pattern):
+                raise ValueError(
+                    "draft model needs a pure-attention stack "
+                    f"(got pattern {draft_cfg.block_pattern})")
+            self.draft_lm = LM(draft_cfg)
+            self.draft_params = draft_params if draft_params is not None \
+                else self.draft_lm.init(jax.random.key(draft_seed))
+            self._draft_prefill = jax.jit(
+                lambda p, toks, plen: self.draft_lm.prefill(
+                    p, {"tokens": toks}, pad_to=max_len, prompt_len=plen))
+            self._spec_decoder = SpeculativeDecoder(
+                self.lm, self.draft_lm, max_len, self.draft_k)
 
     # ---------------------------------------------------------------- admin
     def request_cancel(self) -> None:
@@ -132,8 +164,12 @@ class RealEngine:
         return dec
 
     # -------------------------------------------------------------- prefill
-    def _run_prefill(self, prompt_ids: np.ndarray):
-        """Bucket-pad + prefill.  Returns (last_logits, caches, prompt_len)."""
+    def _run_prefill(self, prompt_ids: np.ndarray, prefill=None,
+                     params=None):
+        """Bucket-pad + prefill.  Returns (last_logits, caches, prompt_len).
+        ``prefill``/``params`` override the target model's (the draft
+        model prefills through the same bucketing so its cache rows are
+        laid out identically)."""
         import jax.numpy as jnp
         from repro.serving.generate import bucket_for
         ids = np.asarray(prompt_ids, np.int32).reshape(-1)
@@ -147,11 +183,13 @@ class RealEngine:
             bucket = plen                     # exact length (seed behavior)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = ids
-        logits, caches = self._prefill(self.params, jnp.asarray(toks),
-                                       jnp.asarray(plen, jnp.int32))
+        logits, caches = (prefill or self._prefill)(
+            self.params if params is None else params,
+            jnp.asarray(toks), jnp.asarray(plen, jnp.int32))
         return logits, caches, plen
 
-    def _run_prefill_group(self, ids_list, pad_rows: Optional[int] = None):
+    def _run_prefill_group(self, ids_list, pad_rows: Optional[int] = None,
+                           prefill=None, params=None):
         """One padded prefill for prompts sharing a bucket (lane
         admission batches).  Returns (last_logits (k, V), caches with
         per-row fill levels, plens).  Rows are padded exactly as their
@@ -193,8 +231,8 @@ class RealEngine:
         toks = np.zeros((kp, bucket), np.int32)
         for r, ids in enumerate(ids_list):
             toks[r, :len(ids)] = ids
-        logits, caches = self._prefill(
-            self.params, jnp.asarray(toks),
+        logits, caches = (prefill or self._prefill)(
+            self.params if params is None else params, jnp.asarray(toks),
             jnp.asarray(plens + [1] * (kp - k), jnp.int32))
         if kp != k:
             logits = logits[:k]
@@ -226,15 +264,30 @@ class RealEngine:
                 self.fault_injector.poll_segment(self.replica_id)
             return self._cancel or (cancel_cb is not None and cancel_cb())
 
-        dec = self._decoder(segment_len or self.segment_len)
-        out = dec.decode(self.params, caches, tok, plen, max_new_tokens,
-                         eos_id=eos_id, cancel_check=cancelled,
-                         on_segment=on_segment)
+        if self.speculative:
+            _, dcaches, _ = self._run_prefill(
+                prompt_ids, prefill=self._draft_prefill,
+                params=self.draft_params)
+            out = self._spec_decoder.decode(
+                self.params, self.draft_params, caches, dcaches, tok, plen,
+                max_new_tokens, eos_id=eos_id, cancel_check=cancelled,
+                on_segment=on_segment)
+        else:
+            dec = self._decoder(segment_len or self.segment_len)
+            out = dec.decode(self.params, caches, tok, plen, max_new_tokens,
+                             eos_id=eos_id, cancel_check=cancelled,
+                             on_segment=on_segment)
         self.served += 1
         self._cancel = False
-        return {"tokens": out["tokens"], "ttft_s": ttft,
-                "service_s": time.monotonic() - t0,
-                "cancelled": out["cancelled"], "segments": out["segments"]}
+        res = {"tokens": out["tokens"], "ttft_s": ttft,
+               "service_s": time.monotonic() - t0,
+               "cancelled": out["cancelled"], "segments": out["segments"]}
+        if self.speculative:
+            res["drafted"] = out["drafted"]
+            res["accepted"] = out["accepted"]
+            res["accept_rate"] = out["accepted"] / out["drafted"] \
+                if out["drafted"] else None
+        return res
 
     def generate_batch(self, prompts, max_new_tokens=32,
                        eos_id: Optional[int] = None) -> list:
@@ -306,19 +359,40 @@ class BatchedRealEngine(RealEngine):
 
     def __init__(self, cfg, params=None, replica_id: int = 0, seed: int = 0,
                  max_len: int = 256, segment_len: int = 16,
-                 n_lanes: int = 4, budget_bytes: Optional[int] = None):
+                 n_lanes: int = 4, budget_bytes: Optional[int] = None,
+                 draft_cfg=None, draft_params=None, draft_k: int = 0,
+                 draft_seed: int = 0):
         from repro.serving.batching import kv_bytes_per_token
-        from repro.serving.generate import LaneDecoder
+        from repro.serving.generate import (LaneDecoder,
+                                            SpeculativeLaneDecoder)
         super().__init__(cfg, params=params, replica_id=replica_id,
-                         seed=seed, max_len=max_len, segment_len=segment_len)
+                         seed=seed, max_len=max_len, segment_len=segment_len,
+                         draft_cfg=draft_cfg, draft_params=draft_params,
+                         draft_k=draft_k, draft_seed=draft_seed)
         self.n_lanes = int(n_lanes)
         self._bytes_per_token = kv_bytes_per_token(cfg)
+        # a speculative lane carries the draft model's ring KV alongside
+        # the target's — real memory, charged against the same budget
+        self._draft_bytes_per_token = kv_bytes_per_token(draft_cfg) \
+            if self.speculative else 0
+        lane_bpt = self._bytes_per_token + self._draft_bytes_per_token
         self.budget_bytes = int(budget_bytes) if budget_bytes is not None \
-            else self.n_lanes * max_len * max(1, self._bytes_per_token)
-        self._lane_decoder = LaneDecoder(self.lm, max_len, self.n_lanes,
-                                         segment_len)
+            else self.n_lanes * max_len * max(1, lane_bpt)
+        if self.speculative:
+            self._lane_decoder = SpeculativeLaneDecoder(
+                self.lm, self.draft_lm, self.draft_params, max_len,
+                self.n_lanes, segment_len, draft_k=self.draft_k)
+            # paged growth must cover every verify position a segment can
+            # write: rounds x (K+1) slots, vs segment_len serial steps
+            self._growth_span = self._lane_decoder.rounds * (self.draft_k + 1)
+        else:
+            self._lane_decoder = LaneDecoder(self.lm, max_len, self.n_lanes,
+                                             segment_len)
+            self._growth_span = segment_len
         self.lane_manager = None       # the most recent run's manager/stats
         self.dead_steps = 0            # lane-steps burned on stopped lanes
+        self.drafted_total = 0         # draft positions proposed (this run)
+        self.accepted_total = 0        # draft positions accepted (this run)
 
     def take_pending(self) -> list:
         """Drain the popped-but-not-admitted work items of the most recent
@@ -326,6 +400,34 @@ class BatchedRealEngine(RealEngine):
         but never reached a lane, so an aborted run would lose them)."""
         items, self._pending_items = list(self._pending_items), []
         return items
+
+    @property
+    def accept_rate(self) -> Optional[float]:
+        """Aggregate draft acceptance over the most recent run, or None
+        before any draft position was proposed."""
+        return self.accepted_total / self.drafted_total \
+            if self.drafted_total else None
+
+    def _accumulate_spec(self, mgr, dec) -> None:
+        """Post-segment speculation accounting: per-lane and aggregate
+        drafted/accepted counters, and the dead-step extension — wasted
+        draft positions (drafted - accepted) burn lane time exactly like
+        the masked compute of a stopped lane, so they fold into the same
+        ``dead_steps`` figure the PR-5 trade-off reports."""
+        if not self.speculative:
+            return
+        drafted, accepted = dec.last_drafted, dec.last_accepted
+        for lane in mgr.busy_lanes():
+            st = mgr.lanes[lane]
+            st.drafted += int(drafted[lane])
+            st.accepted += int(accepted[lane])
+        d, a = int(drafted.sum()), int(accepted.sum())
+        self.drafted_total += d
+        self.accepted_total += a
+        self.dead_steps += d - a
+        mgr.stats["drafted"] = self.drafted_total
+        mgr.stats["accepted"] = self.accepted_total
+        mgr.stats["accept_rate"] = self.accept_rate
 
     # ----------------------------------------------------------- batch API
     def generate_batch(self, prompts, max_new_tokens=32,
@@ -366,7 +468,8 @@ class BatchedRealEngine(RealEngine):
     def _new_manager(self):
         from repro.serving.batching import KVBudget, LaneManager
         return LaneManager(self.n_lanes, KVBudget(self.budget_bytes),
-                           self._bytes_per_token, self.max_len)
+                           self._bytes_per_token
+                           + self._draft_bytes_per_token, self.max_len)
 
     def _head_fits(self, mgr, item, ids) -> bool:
         return mgr.can_admit(len(ids), item["max_new"])
@@ -392,6 +495,20 @@ class BatchedRealEngine(RealEngine):
             max_new[lane] = mx
             active[lane] = True
 
+    def _insert_draft(self, dec, caches, lanes, ids_list):
+        """Speculative only: prefill the draft model over the same ids
+        (identical bucketing, so cache rows lay out like the target's)
+        and drop the rows into the lanes' draft caches.  Resumed and
+        prefix-hit requests take this same full prefill — the draft has
+        no prefix cache, and its state only ever affects acceptance rate,
+        never emitted tokens."""
+        if not self.speculative:
+            return caches
+        _, dcache, _ = self._run_prefill_group(
+            ids_list, pad_rows=self.n_lanes, prefill=self._draft_prefill,
+            params=self.draft_params)
+        return dec.insert_draft(caches, lanes, dcache)
+
     def _prefill_claims(self, mgr, dec, caches, claims, now, tok, plen,
                         produced, max_new, active):
         """Prefill admitted claims per bucket group (rows pad exactly as
@@ -410,6 +527,9 @@ class BatchedRealEngine(RealEngine):
             first = np.argmax(np.asarray(logits), axis=-1)
             caches = dec.insert_lanes(
                 caches, [lane for _, lane, _, _ in group], pcache)
+            caches = self._insert_draft(
+                dec, caches, [lane for _, lane, _, _ in group],
+                [ids for _, _, ids, _ in group])
             self._post_insert(group, first, plens, now, tok, plen,
                               produced, max_new, active)
         return caches
@@ -461,6 +581,8 @@ class BatchedRealEngine(RealEngine):
         mgr = self._new_manager()
         self.lane_manager = mgr
         self.dead_steps = 0
+        self.drafted_total = 0
+        self.accepted_total = 0
         dec = self._lane_decoder
         C = self.n_lanes
         caches = self._init_lanes(dec)
@@ -517,12 +639,17 @@ class BatchedRealEngine(RealEngine):
         def finish(state, cancelled: bool, crashed: bool = False) -> None:
             t_fin = now()
             self.served += not cancelled
-            on_finish(state, {
+            res = {
                 "tokens": self._result_tokens(state), "cancelled": cancelled,
                 "crashed": crashed,
                 "ttft_s": state.ttft_s, "admit_t": state.admit_t,
                 "finish_t": t_fin, "service_s": t_fin - state.admit_t,
-                "lane": state.lane, "evictions": state.evictions})
+                "lane": state.lane, "evictions": state.evictions}
+            if self.speculative:
+                res["drafted"] = state.drafted
+                res["accepted"] = state.accepted
+                res["accept_rate"] = state.accept_rate
+            on_finish(state, res)
 
         inj = self.fault_injector
         fill()
@@ -595,6 +722,7 @@ class BatchedRealEngine(RealEngine):
                                 produced_before=produced)
             dev["d"] = (tok_d, produced_d, plen_d, max_new_d, active_d)
             self.dead_steps += dead
+            self._accumulate_spec(mgr, dec)
             mgr.stats["dead_steps"] = self.dead_steps
             retired = False
             released = []
@@ -649,14 +777,18 @@ class PagedBatchedEngine(BatchedRealEngine):
     def __init__(self, cfg, params=None, replica_id: int = 0, seed: int = 0,
                  max_len: int = 256, segment_len: int = 16,
                  n_lanes: int = 4, budget_bytes: Optional[int] = None,
-                 page_size: int = 16):
+                 page_size: int = 16, draft_cfg=None, draft_params=None,
+                 draft_k: int = 0, draft_seed: int = 0):
         import jax
         import jax.numpy as jnp
-        from repro.serving.generate import PagedLaneDecoder
+        from repro.serving.generate import (PagedLaneDecoder,
+                                            SpeculativePagedLaneDecoder)
         from repro.serving.paging import BlockAllocator, pages_for
         super().__init__(cfg, params=params, replica_id=replica_id,
                          seed=seed, max_len=max_len, segment_len=segment_len,
-                         n_lanes=n_lanes, budget_bytes=budget_bytes)
+                         n_lanes=n_lanes, budget_bytes=budget_bytes,
+                         draft_cfg=draft_cfg, draft_params=draft_params,
+                         draft_k=draft_k, draft_seed=draft_seed)
         if not self._bucketing:
             raise ValueError("block-paged KV needs a pure-attention stack "
                              f"(got pattern {cfg.block_pattern})")
@@ -665,14 +797,26 @@ class PagedBatchedEngine(BatchedRealEngine):
                              f"page_size {page_size}")
         self.page_size = int(page_size)
         page_bytes = self.page_size * max(1, self._bytes_per_token)
+        # a speculative lane's draft ring, denominated in target pages
+        # (ceil): anonymous pages the admission layer charges per lane
+        self._overhead_pages = -(-max_len * self._draft_bytes_per_token
+                                 // page_bytes) if self.speculative else 0
         # same byte budget as the worst-case engine, denominated in pages
-        # (floor); never below one full sequence so a solo lane always fits
-        self.n_pages = max(pages_for(max_len, self.page_size),
+        # (floor); never below one full sequence (plus its draft
+        # overhead) so a solo lane always fits
+        self.n_pages = max(pages_for(max_len, self.page_size)
+                           + self._overhead_pages,
                            self.budget_bytes // page_bytes)
         self.allocator = BlockAllocator(self.n_pages, self.page_size)
-        self._lane_decoder = PagedLaneDecoder(
-            self.lm, max_len, self.n_lanes, segment_len,
-            n_pages=self.n_pages + 1, page_size=self.page_size)
+        if self.speculative:
+            self._lane_decoder = SpeculativePagedLaneDecoder(
+                self.lm, self.draft_lm, self.draft_params, max_len,
+                self.n_lanes, segment_len, n_pages=self.n_pages + 1,
+                page_size=self.page_size, draft_k=self.draft_k)
+        else:
+            self._lane_decoder = PagedLaneDecoder(
+                self.lm, max_len, self.n_lanes, segment_len,
+                n_pages=self.n_pages + 1, page_size=self.page_size)
         self._deferred: set = set()    # req_ids preempted at this boundary
         self._caches = None            # pools retained between runs
         # extend prefill: suffix tokens appended onto a gathered prefix
@@ -688,7 +832,8 @@ class PagedBatchedEngine(BatchedRealEngine):
         self.allocator.reset_transient()   # drop refs leaked by a crash
         self._deferred = set()
         return PagedLaneManager(self.n_lanes, self.allocator,
-                                self._bytes_per_token, self.max_len)
+                                self._bytes_per_token, self.max_len,
+                                overhead_pages=self._overhead_pages)
 
     def _init_lanes(self, dec):
         # reuse the previous run's pools: the LRU-parked prefix pages
@@ -767,6 +912,9 @@ class PagedBatchedEngine(BatchedRealEngine):
             caches = dec.insert_paged(
                 caches, [lane for _, lane, _, _ in group], pcache,
                 bt_rows, tgt)
+            caches = self._insert_draft(
+                dec, caches, [lane for _, lane, _, _ in group],
+                [ids for _, _, ids, _ in group])
             self._post_insert(group, first, plens, now, tok, plen,
                               produced, max_new, active)
             for st, lane, ids, _ in group:
@@ -808,6 +956,9 @@ class PagedBatchedEngine(BatchedRealEngine):
         # lives in the pool (and may be shared — it must not be rewritten)
         tgt[0, n_match:npp] = st.pages[n_match:npp]
         caches = dec.insert_paged(caches, [lane], pcache, bt_rows, tgt)
+        # prefix hits still do a FULL draft prefill: the draft side has
+        # no prefix cache (and cannot corrupt tokens, only acceptance)
+        caches = self._insert_draft(dec, caches, [lane], [ids])
         self._post_insert([claim], first, [len(ids)], now, tok, plen,
                           produced, max_new, active)
         mgr.register_prompt(lane, ids)
@@ -826,7 +977,10 @@ class PagedBatchedEngine(BatchedRealEngine):
         from repro.serving.paging import pages_for
         ps = self.page_size
         P = self.max_len // ps
-        K = self.segment_len
+        # speculative segments write verify positions ahead of the fill
+        # level (rounds x (K+1) slots); an unallocated page would silently
+        # route those writes to the trash page and lose real KV
+        K = self._growth_span
         changed = False
         new_rows: dict = {}                   # lane -> block-table row
         order = sorted(mgr.busy_lanes(),

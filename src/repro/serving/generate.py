@@ -144,6 +144,175 @@ class FusedDecoder:
                 "caches": caches}
 
 
+class SpeculativeDecoder:
+    """Serial draft-verify greedy decoder (speculative decoding, B=1).
+
+    Each *round* runs the small draft model ``draft_k`` steps to propose a
+    token chain, then scores the pending token plus the whole chain with
+    ONE multi-position target forward (``LM.verify_step``) and accepts the
+    longest prefix of drafts that match the target's own greedy argmaxes.
+    Because every emitted token is a target argmax conditioned on the
+    accepted prefix, the token sequence is **bitwise-equal** to the
+    non-speculative fused/serial greedy reference — speculation changes
+    how many target dispatches the sequence costs, never its contents.
+
+    Round semantics (greedy accept-longest-prefix + bonus token):
+
+    * verify feeds ``[pending, d_1..d_K]`` at fill levels ``t..t+K`` and
+      takes target argmaxes ``a_0..a_K``;
+    * ``m`` = longest prefix with ``d_i == a_{i-1}``; the round emits
+      ``a_0..a_min(m, caps)`` (so a full match emits K+1 tokens — the
+      K accepted drafts' successors plus the *bonus* ``a_K``), truncated
+      by the serial stop rules (EOS inside the block, ring capacity,
+      request budget) in exactly the oracle's check order;
+    * commit advances both caches' fill levels to the accepted extent —
+      rejected drafts roll back by simply **not advancing** ``t`` (stale
+      KV past the fill level is masked and overwritten in write order
+      later), so rollback costs no recompilation and no cleanup pass;
+    * when the round fully accepts, the draft cache is one token short
+      (it never consumed ``d_K``) — the next round's *catch-up step*
+      feeds that tail token first.  Lanes without a tail dummy-feed: the
+      write at the frozen slot is overwritten by the next real write and
+      step-0 logits are never used.
+
+    A live round always emits >= 1 token (``a_0`` costs the same target
+    dispatch a serial step would), so all-rejected rounds still progress.
+
+    Requires a pure-attention stack (the verify forward is an attention-
+    cache operation) and a shared vocabulary between draft and target.
+    """
+
+    def __init__(self, lm, draft_lm, max_len: int, draft_k: int):
+        if draft_k < 1:
+            raise ValueError("draft_k must be >= 1 (K=0 is the fused path)")
+        if lm.cfg.vocab_size != draft_lm.cfg.vocab_size:
+            raise ValueError(
+                f"draft/target vocab mismatch: {draft_lm.cfg.vocab_size} "
+                f"vs {lm.cfg.vocab_size}")
+        self.lm = lm
+        self.draft_lm = draft_lm
+        self.max_len = max_len
+        self.draft_k = int(draft_k)
+        self._round = jax.jit(self._round_impl, donate_argnums=(2, 3))
+
+    def _round_impl(self, params, draft_params, caches, dcaches, tok,
+                    produced, has_tail, tail, plen, max_new, eos):
+        """One draft-verify-commit round, fully on device.
+
+        Scalar carries: ``tok`` pending token, ``produced`` emitted count,
+        ``has_tail``/``tail`` the draft catch-up state.  Returns
+        (emit (K+1,) -1-padded, n_emit, tok, produced, has_tail, tail,
+        caches, dcaches, stopped).
+        """
+        K = self.draft_k
+        # --- draft phase: catch-up step + K chain steps -----------------
+        d0 = [c["t"] for c in dcaches]
+        feed0 = jnp.where(has_tail, tail, tok)
+        _, dcaches = self.draft_lm.decode_step(
+            draft_params, dcaches, {"tokens": feed0.reshape(1, 1)})
+        ht = has_tail.astype(jnp.int32)
+        dcaches = tuple({**c, "t": t0 + ht} for c, t0 in zip(dcaches, d0))
+
+        def dstep(carry, _):
+            cur, dc = carry
+            lg, dc = self.draft_lm.decode_step(
+                draft_params, dc, {"tokens": cur.reshape(1, 1)})
+            nxt = jnp.argmax(lg[0]).astype(jnp.int32)
+            return (nxt, dc), nxt
+
+        (_, dcaches), d = jax.lax.scan(dstep, (tok, dcaches), None, length=K)
+
+        # --- verify: one multi-position target forward ------------------
+        feed = jnp.concatenate([tok[None], d])             # (K+1,)
+        base_t = caches[0]["t"][0]                         # pre-round fill
+        vlog, caches = self.lm.verify_step(params, caches,
+                                           {"tokens": feed[None]})
+        a = jnp.argmax(vlog[0], axis=-1).astype(jnp.int32)  # (K+1,)
+
+        # --- acceptance: longest matching prefix + oracle stop order ----
+        ok = (d == a[:K]).astype(jnp.int32)
+        m_chain = jnp.cumprod(ok).sum()
+        cap = jnp.minimum(m_chain + 1,
+                          jnp.minimum(self.max_len - plen - produced,
+                                      max_new - produced))
+        idx = jnp.arange(K + 1, dtype=jnp.int32)
+        is_eos = (a == eos) & (idx < cap)
+        n_emit = jnp.where(is_eos.any(),
+                           jnp.argmax(is_eos).astype(jnp.int32) + 1, cap)
+
+        # --- commit ------------------------------------------------------
+        emit = jnp.where(idx < n_emit, a, -1)
+        new_tok = a[n_emit - 1]
+        produced = produced + n_emit
+        caches = tuple({**c, "t": jnp.full_like(c["t"], base_t + n_emit)}
+                       for c in caches)
+        n_keep = jnp.minimum(n_emit, K)
+        dcaches = tuple({**c, "t": jnp.full_like(c["t"], base_t + n_keep)}
+                        for c in dcaches)
+        full = n_emit == K + 1
+        stopped = ~((new_tok != eos)
+                    & (plen + produced < self.max_len)
+                    & (produced < max_new))
+        return (emit, n_emit, new_tok, produced, full, d[K - 1], caches,
+                dcaches, stopped)
+
+    def decode(self, params, draft_params, caches, dcaches,
+               first_token: int, prompt_len: int, max_new_tokens: int,
+               eos_id: Optional[int] = None, cancel_check=None,
+               on_segment=None) -> dict:
+        """Greedy-decode from prefilled target + draft caches.
+
+        Mirrors :meth:`FusedDecoder.decode` (same result keys, same
+        cancel/stream join points — here every round is a segment), plus
+        ``drafted``/``accepted`` counters (``accepted / drafted`` is the
+        observed acceptance rate the admission layer feeds back into its
+        effective-service-time key).
+        """
+        K = self.draft_k
+        out = [int(first_token)]
+        if on_segment is not None:
+            on_segment([int(first_token)])
+        tok = jnp.asarray(first_token, jnp.int32)
+        produced = jnp.asarray(1, jnp.int32)
+        has_tail = jnp.asarray(False)
+        tail = jnp.asarray(0, jnp.int32)
+        plen = jnp.asarray(prompt_len, jnp.int32)
+        max_new = jnp.asarray(max_new_tokens, jnp.int32)
+        eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
+        cancelled = False
+        rounds = drafted = accepted = 0
+        # host-side live check replays the oracle's post-prefill stop
+        # order, so an already-complete request runs zero rounds
+        tok_h, produced_h = int(first_token), 1
+        while ((eos_id is None or tok_h != eos_id)
+               and prompt_len + produced_h < self.max_len
+               and produced_h < max_new_tokens):
+            if cancel_check is not None and cancel_check():
+                cancelled = True
+                break
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=_DONATION_WARNING)
+                (emit, n_emit, tok, produced, has_tail, tail, caches,
+                 dcaches, stopped) = self._round(
+                    params, draft_params, caches, dcaches, tok, produced,
+                    has_tail, tail, plen, max_new, eos)
+            rounds += 1
+            n = int(n_emit)                  # one host sync per round
+            new = [int(x) for x in np.asarray(emit)[:n]]
+            out.extend(new)
+            drafted += K
+            accepted += n - 1
+            if on_segment is not None and new:
+                on_segment(new)
+            tok_h = new[-1]
+            produced_h += n
+            if bool(stopped):
+                break
+        return {"tokens": out, "cancelled": cancelled, "segments": rounds,
+                "caches": caches, "draft_caches": dcaches,
+                "drafted": drafted, "accepted": accepted}
+
+
 class LaneDecoder:
     """Lane-batched segmented greedy decoder: ``n_lanes`` concurrent
     requests, one fused ``lax.while_loop`` per segment.
@@ -420,6 +589,267 @@ class PagedLaneDecoder(LaneDecoder):
     def _set_bt(self, lanes, idx, rows):
         return tuple({**c, "bt": c["bt"].at[:, idx].set(rows)}
                      for c in lanes)
+
+
+class _SpecLaneMixin:
+    """Draft-verify speculation over a lane decoder's segment loop.
+
+    Mixed into :class:`LaneDecoder` / :class:`PagedLaneDecoder`, this
+    replaces the one-token-per-step segment body with *rounds* of
+    :class:`SpeculativeDecoder` semantics, vectorized across lanes: every
+    round runs the shared draft model ``draft_k`` chained steps for all
+    lanes at once, verifies all lanes' chains with ONE multi-position
+    target forward (``LM.verify_step`` — K+1 positions against the
+    ring/paged KV in a single dispatch), and commits each lane's accepted
+    prefix independently.  Per lane the emitted tokens are target
+    argmaxes conditioned on accepted context only, so per-lane sequences
+    stay bitwise-equal to the non-speculative reference regardless of
+    per-lane acceptance (tests/test_speculative.py).
+
+    The lane caches become a dict pytree ``{"tgt", "dr", "has_tail",
+    "tail"}``: the target caches in their native layout (ring or paged),
+    the draft caches always as a per-lane ring (draft KV is charged
+    against the engine's memory budget / page pool by the admission
+    layer, but physically lives in its own buffers — it is never
+    content-addressed or shared), plus the per-lane catch-up state.  All
+    admission-side operations (:meth:`insert_lanes`,
+    :meth:`insert_paged`, :meth:`gather_prefix`, :meth:`set_bt`) route to
+    the target half unchanged; :meth:`insert_draft` drops the draft
+    prefill in and clears the lane's tail.
+
+    Rollback is fill-level-only in both caches: a rejected draft leaves
+    stale KV above the committed ``t`` that the verify mask never attends
+    and that the next round's writes overwrite in order — no
+    recompilation, no cleanup pass.  One caveat inherited from the ring
+    layout: a draft chain launched within ``draft_k`` slots of
+    ``max_len`` wraps/drops writes, which can only *lower* acceptance on
+    the final tokens of a window-filling request, never change emitted
+    tokens (the verify forward gates every emission).
+
+    A segment runs ``rounds = max(1, segment_len // (draft_k+1))``
+    rounds, so a segment still emits at most ~``segment_len`` tokens per
+    lane and host sync frequency is unchanged.  ``run_segment`` keeps the
+    base 7-tuple contract and additionally stashes per-lane
+    ``last_drafted`` / ``last_accepted`` (host arrays) for the engine's
+    acceptance-rate accounting.
+    """
+
+    def _init_spec(self, draft_lm, draft_params, draft_k: int):
+        if draft_k < 1:
+            raise ValueError("draft_k must be >= 1 (K=0 is the fused path)")
+        if self.lm.cfg.vocab_size != draft_lm.cfg.vocab_size:
+            raise ValueError(
+                f"draft/target vocab mismatch: {draft_lm.cfg.vocab_size} "
+                f"vs {self.lm.cfg.vocab_size}")
+        self.draft_lm = draft_lm
+        self.draft_params = draft_params
+        self.draft_k = int(draft_k)
+        self.rounds = max(1, self.segment_len // (self.draft_k + 1))
+        self.last_drafted = np.zeros(self.n_lanes, np.int64)
+        self.last_accepted = np.zeros(self.n_lanes, np.int64)
+        self._spec_segment = jax.jit(self._spec_segment_impl,
+                                     donate_argnums=(2,))
+
+    # ------------------------------------------------------------ lane admin
+    def init_lanes(self):
+        dr = []
+        for c in self.draft_lm.init_cache(self.n_lanes, self.max_len):
+            if isinstance(c, dict) and "t" in c:
+                c = dict(c)
+                c["t"] = jnp.zeros(c["t"].shape + (self.n_lanes,),
+                                   c["t"].dtype)
+            dr.append(c)
+        return {"tgt": super().init_lanes(), "dr": tuple(dr),
+                "has_tail": jnp.zeros((self.n_lanes,), bool),
+                "tail": jnp.zeros((self.n_lanes,), jnp.int32)}
+
+    def insert_lane(self, lanes, lane, cache):
+        return {**lanes,
+                "tgt": super().insert_lane(lanes["tgt"], lane, cache)}
+
+    def insert_lanes(self, lanes, lane_idx, cache):
+        return {**lanes,
+                "tgt": super().insert_lanes(lanes["tgt"], lane_idx, cache)}
+
+    def insert_draft(self, lanes, lane_idx, cache):
+        """Drop a k-row draft prefill into lanes ``lane_idx`` and clear
+        their catch-up tails (a fresh request has no pending draft)."""
+        idx = jnp.asarray(lane_idx, jnp.int32)
+        return {**lanes, "dr": self._insert(lanes["dr"], idx, cache),
+                "has_tail": lanes["has_tail"].at[idx].set(False)}
+
+    def gather_prefix(self, lanes, pages, prefix_len: int):
+        return super().gather_prefix(lanes["tgt"], pages, prefix_len)
+
+    def insert_paged(self, lanes, lane_idx, pcache, bt_rows, tgt):
+        return {**lanes, "tgt": super().insert_paged(
+            lanes["tgt"], lane_idx, pcache, bt_rows, tgt)}
+
+    def set_bt(self, lanes, lane_idx, bt_rows):
+        return {**lanes,
+                "tgt": super().set_bt(lanes["tgt"], lane_idx, bt_rows)}
+
+    # -------------------------------------------------------------- segments
+    def _spec_segment_impl(self, params, draft_params, caches, tok,
+                           produced, plen, max_new, eos, active):
+        """Run ``rounds`` draft-verify rounds across all lanes.
+
+        Same carries as :meth:`LaneDecoder._segment_impl`; returns
+        (buf (C, rounds*(K+1)) int32 -1-padded, tok, produced, caches,
+        stopped, dead, drafted (C,), accepted (C,)) — ``dead`` counts
+        verify positions burned on occupied-but-stopped lanes; wasted
+        *draft* positions are ``drafted - accepted``, accounted by the
+        engine so the split stays visible in stats.
+        """
+        C, K, R = self.n_lanes, self.draft_k, self.rounds
+        W = K + 1
+        BUF = R * W
+        idx_w = jnp.arange(W, dtype=jnp.int32)
+        buf0 = jnp.full((C, BUF), -1, jnp.int32)
+        eos_c = eos[:, None] if jnp.ndim(eos) == 1 else eos
+
+        def live(tok, produced):
+            return self._live(tok, produced, plen, max_new, eos, active)
+
+        def cond(c):
+            r, tok, produced = c[0], c[1], c[2]
+            return (r < R) & live(tok, produced).any()
+
+        def body(c):
+            (r, tok, produced, tgtc, drc, has_tail, tail, buf, wp, dead,
+             drafted, accepted) = c
+            lv = live(tok, produced)
+            lvi = lv.astype(jnp.int32)
+            dead = dead + W * (active & ~lv).sum().astype(jnp.int32)
+
+            # --- draft: catch-up step + K chained steps ----------------
+            # Catch-up consumes a full-accept round's unconsumed tail;
+            # lanes without one feed their pending token as a dummy (the
+            # fill reset below voids the slot advance, the duplicate
+            # write is overwritten by the chain's first real write, and
+            # step-0 logits are never used).
+            dr_t0 = [dc["t"] for dc in drc]
+            feed0 = jnp.where(has_tail, tail, tok)
+            _, drc = self.draft_lm.decode_step(
+                draft_params, drc, {"tokens": feed0.reshape(C, 1)})
+            ht = has_tail.astype(jnp.int32)
+            drc = tuple({**dc, "t": t0 + ht[None, :]}
+                        for dc, t0 in zip(drc, dr_t0))
+
+            def dstep(carry, _):
+                cur, dc = carry
+                lg, dc = self.draft_lm.decode_step(
+                    draft_params, dc, {"tokens": cur.reshape(C, 1)})
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                return (nxt, dc), nxt
+
+            (_, drc), d = jax.lax.scan(dstep, (tok, drc), None, length=K)
+            d = d.T                                          # (C, K)
+
+            # --- verify: one multi-position target forward -------------
+            base_t = tgtc[0]["t"][0]                         # (C,) fills
+            feed = jnp.concatenate([tok[:, None], d], axis=1)
+            vlog, tgtc = self.lm.verify_step(params, tgtc,
+                                             {"tokens": feed})
+            a = jnp.argmax(vlog, axis=-1).astype(jnp.int32)  # (C, W)
+
+            # --- acceptance: longest matching prefix, oracle stops -----
+            ok = (d == a[:, :K]).astype(jnp.int32)
+            m_chain = jnp.cumprod(ok, axis=1).sum(axis=1)
+            cap = jnp.minimum(m_chain + 1,
+                              jnp.minimum(self.max_len - plen - produced,
+                                          max_new - produced))
+            is_eos = (a == eos_c) & (idx_w[None, :] < cap[:, None])
+            n_emit = jnp.where(is_eos.any(axis=1),
+                               jnp.argmax(is_eos, axis=1)
+                               .astype(jnp.int32) + 1, cap)
+            n_emit = jnp.where(lv, n_emit, 0)
+
+            # --- commit ------------------------------------------------
+            valid = idx_w[None, :] < n_emit[:, None]
+            slot = wp[:, None] + idx_w[None, :]
+            hit = ((jnp.arange(BUF, dtype=jnp.int32)[None, None, :]
+                    == slot[:, :, None]) & valid[:, :, None])
+            buf = jnp.where(hit.any(axis=1),
+                            (a[:, :, None] * hit).sum(axis=1), buf)
+            wp = wp + n_emit
+            last = jnp.take_along_axis(
+                a, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+            tok = jnp.where(lv, last, tok)
+            produced = produced + n_emit
+            tgtc = tuple({**tc, "t": tc["t"] + n_emit[None, :]}
+                         for tc in tgtc)
+            # draft keeps the accepted drafts only; stopped lanes restore
+            # their pre-round fill (their chain steps were dead writes)
+            n_keep = jnp.minimum(n_emit, K)
+            drc = tuple(
+                {**dc, "t": jnp.where(lv[None, :],
+                                      (base_t + n_keep)[None, :], t0)}
+                for dc, t0 in zip(drc, dr_t0))
+            full = n_emit == W
+            has_tail = jnp.where(lv, full, has_tail)
+            tail = jnp.where(lv & full, d[:, K - 1], tail)
+            drafted = drafted + K * lvi
+            accepted = accepted + n_emit - lvi
+            return (r + 1, tok, produced, tgtc, drc, has_tail, tail, buf,
+                    wp, dead, drafted, accepted)
+
+        z = jnp.zeros((C,), jnp.int32)
+        (_, tok, produced, tgtc, drc, has_tail, tail, buf, _, dead,
+         drafted, accepted) = jax.lax.while_loop(
+            cond, body,
+            (jnp.zeros((), jnp.int32), tok, produced, caches["tgt"],
+             caches["dr"], caches["has_tail"], caches["tail"], buf0, z,
+             jnp.zeros((), jnp.int32), z, z))
+        caches = {"tgt": tgtc, "dr": drc, "has_tail": has_tail,
+                  "tail": tail}
+        return (buf, tok, produced, caches, ~live(tok, produced), dead,
+                drafted, accepted)
+
+    def run_segment(self, params, caches, tok, produced, plen, max_new,
+                    eos, active, produced_before):
+        """Same contract as :meth:`LaneDecoder.run_segment`; additionally
+        stashes per-lane ``last_drafted`` / ``last_accepted`` host arrays
+        for the engine's acceptance accounting."""
+        C = self.n_lanes
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=_DONATION_WARNING)
+            (buf, tok_j, produced_j, caches, stopped, dead, drafted,
+             accepted) = self._spec_segment(
+                params, self.draft_params, caches, tok, produced, plen,
+                max_new, eos, active)
+        buf_np = np.asarray(buf)                  # one host sync per segment
+        produced_np = np.array(produced_j)
+        self.last_drafted = np.array(drafted)
+        self.last_accepted = np.array(accepted)
+        new_tokens = [
+            [int(x) for x in buf_np[i, :max(0, int(produced_np[i])
+                                            - int(produced_before[i]))]]
+            for i in range(C)]
+        return (new_tokens, tok_j, produced_j, caches, np.array(stopped),
+                produced_np, int(dead))
+
+
+class SpeculativeLaneDecoder(_SpecLaneMixin, LaneDecoder):
+    """Ring-cache lane decoder with draft-verify speculation."""
+
+    def __init__(self, lm, draft_lm, draft_params, max_len: int,
+                 n_lanes: int, segment_len: int = 16, *, draft_k: int):
+        LaneDecoder.__init__(self, lm, max_len, n_lanes, segment_len)
+        self._init_spec(draft_lm, draft_params, draft_k)
+
+
+class SpeculativePagedLaneDecoder(_SpecLaneMixin, PagedLaneDecoder):
+    """Block-paged lane decoder with draft-verify speculation.  The
+    target KV stays paged; the draft KV rides a per-lane ring whose
+    footprint the paged admission layer charges as anonymous pages."""
+
+    def __init__(self, lm, draft_lm, draft_params, max_len: int,
+                 n_lanes: int, segment_len: int = 16, *, n_pages: int,
+                 page_size: int, draft_k: int):
+        PagedLaneDecoder.__init__(self, lm, max_len, n_lanes, segment_len,
+                                  n_pages=n_pages, page_size=page_size)
+        self._init_spec(draft_lm, draft_params, draft_k)
 
 
 def geometric_buckets(max_len: int, floor: int = 16) -> tuple:

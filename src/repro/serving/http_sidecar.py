@@ -338,7 +338,8 @@ class Sidecar:
                       ttft_s=req.start - req.arrival + out["ttft_s"],
                       promoted=req.promoted, replica=rep.replica_id,
                       p_long=req.p_long, klass=req.klass, retries=retries,
-                      degraded=bool(req.meta.get("degraded")))
+                      degraded=bool(req.meta.get("degraded")),
+                      accept_rate=out.get("accept_rate"))
         req.finish = t_end
         if out["cancelled"]:
             if rid in srv._disconnected:

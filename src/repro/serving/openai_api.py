@@ -75,6 +75,7 @@ class CompletionResponse:
     error: Optional[str] = None         # human-readable failure reason
     retries: int = 0                    # fault retries before terminating
     degraded: bool = False              # admitted under predictor outage
+    accept_rate: Optional[float] = None  # draft acceptance (speculative only)
 
     def __post_init__(self):
         if self.status not in STATUSES:
@@ -118,6 +119,7 @@ def chat_completion_body(resp: CompletionResponse, model: str,
             "retries": resp.retries,
             "promoted": resp.promoted,
             "degraded": resp.degraded,
+            "accept_rate": resp.accept_rate,
         },
     }
     if resp.error:

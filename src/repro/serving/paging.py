@@ -297,20 +297,28 @@ class PagedLaneManager(LaneManager):
     """
 
     def __init__(self, n_lanes: int, allocator: BlockAllocator,
-                 bytes_per_token: int, capacity: int):
+                 bytes_per_token: int, capacity: int,
+                 overhead_pages: int = 0):
         page_bytes = allocator.page_size * max(1, int(bytes_per_token))
         budget = KVBudget(max(1, allocator.n_pages * page_bytes))
         super().__init__(n_lanes, budget, bytes_per_token, capacity)
-        if allocator.n_pages < pages_for(capacity, allocator.page_size):
+        need_solo = pages_for(capacity, allocator.page_size) \
+            + int(overhead_pages)
+        if allocator.n_pages < need_solo:
             raise ValueError(
                 f"pool of {allocator.n_pages} pages cannot hold one "
                 f"full sequence of {capacity} tokens at page_size "
-                f"{allocator.page_size} (need "
-                f"{pages_for(capacity, allocator.page_size)})")
+                f"{allocator.page_size} plus {overhead_pages} overhead "
+                f"pages (need {need_solo})")
         self.allocator = allocator
         self.page_size = allocator.page_size
         self._page_bytes = page_bytes
         self._admit_seq = 0
+        # fixed per-lane ANONYMOUS page charge (speculative decoding: the
+        # draft model's ring KV is real memory the pool must account for,
+        # even though it is never content-addressed or block-mapped)
+        self.overhead_pages = int(overhead_pages)
+        self._overhead: dict = {}            # lane -> anonymous pages
         self.stats["preemptions"] = 0
 
     # -------------------------------------------------------------- plumbing
@@ -341,7 +349,8 @@ class PagedLaneManager(LaneManager):
             if cap > 0:
                 hashes = chain_hashes(ids, self.page_size)[:cap]
                 hit_pages = self.allocator.probe_prefix(hashes)
-        return self.allocator.can_allocate(max(0, want - hit_pages))
+        return self.allocator.can_allocate(
+            max(0, want - hit_pages) + self.overhead_pages)
 
     def admit(self, lane: int, *, req_id: int, prompt_len: int,
               max_new: int, tenant: str = "default", admit_t: float = 0.0,
@@ -362,11 +371,18 @@ class PagedLaneManager(LaneManager):
         except PageError:
             self.allocator.release_seq(pages)
             raise
+        try:
+            self._overhead[lane] = self.allocator.allocate(
+                self.overhead_pages)
+        except PageError:
+            self.allocator.release_seq(pages + fresh)
+            raise
         pages = pages + fresh
         self._sync_budget()
         st = LaneState(lane=lane, req_id=req_id, prompt_len=int(prompt_len),
                        max_new=int(max_new), tenant=tenant,
-                       footprint_bytes=len(pages) * self._page_bytes,
+                       footprint_bytes=(len(pages) + self.overhead_pages)
+                       * self._page_bytes,
                        admit_t=admit_t, meta=dict(meta or {}))
         st.pages = pages
         st.prefix_len = hit_tokens
@@ -413,6 +429,7 @@ class PagedLaneManager(LaneManager):
             raise ValueError(f"lane {lane} is already free")
         self.lanes[lane] = None
         self.allocator.release_seq(st.pages)
+        self.allocator.release_seq(self._overhead.pop(lane, []))
         self._sync_budget()
         return st
 

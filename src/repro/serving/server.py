@@ -728,7 +728,8 @@ class ClairvoyantServer:
                 promoted=req.promoted, replica=rep.replica_id,
                 p_long=req.p_long, klass=req.klass,
                 retries=req.meta.get("fault_retries", 0),
-                degraded=bool(req.meta.get("degraded"))))
+                degraded=bool(req.meta.get("degraded")),
+                accept_rate=out.get("accept_rate")))
 
     def _drain_batched(self, rep, eng: BatchedRealEngine,
                        max_new_tokens: int) -> None:
@@ -841,7 +842,8 @@ class ClairvoyantServer:
                 promoted=req.promoted, replica=rep.replica_id,
                 p_long=req.p_long, klass=req.klass,
                 retries=req.meta.get("fault_retries", 0),
-                degraded=bool(req.meta.get("degraded"))))
+                degraded=bool(req.meta.get("degraded")),
+                accept_rate=out.get("accept_rate")))
 
         # exception-safe lane driving: a whole-engine crash raised from a
         # segment boundary evicts every busy lane back into the queue

@@ -1,0 +1,367 @@
+"""Speculative decoding: draft-verify lanes and acceptance-aware admission.
+
+The load-bearing invariant everywhere: accepted tokens are the TARGET's
+own argmaxes, so speculative output is bitwise-identical to the plain
+fused path regardless of draft quality — an agreeing draft (the target's
+own parameters) and an adversarial one (independent init, ~0%%
+acceptance) must produce the same tokens, differing only in round
+counts and acceptance stats.  The scheduling half mirrors the backend
+as a service-rate modifier whose 1.0 / K=0 settings are IEEE-exact
+identities.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import (BatchedRealEngine, PagedBatchedEngine,
+                                  RealEngine)
+
+CFG = get_config("smollm-360m").reduced()
+
+# the 7-request / 3-lane workload of tests/test_batching.py (4 back-fills)
+_PLENS = (5, 11, 23, 7, 3, 15, 9)
+_MAXES = [10, 25, 6, 18, 4, 12, 9]
+
+
+def _prompts(rng=None):
+    rng = rng or np.random.default_rng(0)
+    return [rng.integers(0, CFG.vocab_size, int(n)).tolist()
+            for n in _PLENS]
+
+
+@pytest.fixture(scope="module")
+def ref_engine():
+    return RealEngine(CFG, max_len=64, seed=0)
+
+
+@pytest.fixture(scope="module")
+def spec_engine(ref_engine):
+    """Serial speculative engine, draft = the target's own parameters."""
+    return RealEngine(CFG, params=ref_engine.params, max_len=64, seed=0,
+                      draft_cfg=CFG, draft_params=ref_engine.params,
+                      draft_k=3)
+
+
+@pytest.fixture(scope="module")
+def indep_engine(ref_engine):
+    """Serial speculative engine, independently-seeded draft (~0%%
+    acceptance — every verify round still emits the bonus token)."""
+    return RealEngine(CFG, params=ref_engine.params, max_len=64, seed=0,
+                      draft_cfg=CFG, draft_k=3, draft_seed=7)
+
+
+# ------------------------------------------------------------ serial decoder
+
+def test_serial_bitwise_across_prompt_lengths(ref_engine, spec_engine,
+                                              indep_engine):
+    rng = np.random.default_rng(1)
+    for plen in (1, 3, 9, 17, 40):
+        ids = rng.integers(0, CFG.vocab_size, plen).tolist()
+        for max_new in (1, 7, 16):
+            want = ref_engine.generate_reference(
+                ids, max_new_tokens=max_new)["tokens"]
+            for eng in (spec_engine, indep_engine):
+                got = eng.generate(ids, max_new_tokens=max_new)
+                assert got["tokens"] == want, \
+                    f"plen={plen} max_new={max_new}"
+
+
+def test_all_rejected_still_progresses(ref_engine, indep_engine):
+    """An adversarial draft wastes every proposal, yet each verify round
+    commits the bonus token — output matches and progress is linear."""
+    ids = list(range(8))
+    want = ref_engine.generate_reference(ids, max_new_tokens=12)["tokens"]
+    got = indep_engine.generate(ids, max_new_tokens=12)
+    assert got["tokens"] == want
+    assert got["drafted"] > 0 and got["accepted"] == 0
+    assert got["accept_rate"] == 0.0
+
+
+def test_accept_rate_reported(spec_engine):
+    out = spec_engine.generate(list(range(6)), max_new_tokens=16)
+    assert out["drafted"] > 0
+    assert out["accept_rate"] == out["accepted"] / out["drafted"]
+    assert out["accept_rate"] > 0.5        # agreeing draft accepts most
+
+
+def test_eos_inside_draft_block_truncates(ref_engine, spec_engine,
+                                          indep_engine):
+    """Pick an eos that fires mid-stream; the speculative path must stop
+    at exactly the same token as the serial oracle even when the eos
+    lands inside an accepted draft block."""
+    ids = list(range(5))
+    free = ref_engine.generate_reference(ids, max_new_tokens=16)["tokens"]
+    assert len(free) > 3
+    eos = free[len(free) // 2]             # guaranteed to occur
+    want = ref_engine.generate_reference(ids, max_new_tokens=16,
+                                         eos_id=eos)["tokens"]
+    assert len(want) < len(free)
+    for eng in (spec_engine, indep_engine):
+        got = eng.generate(ids, max_new_tokens=16, eos_id=eos)
+        assert got["tokens"] == want
+
+
+def test_draft_k_zero_degenerates_to_fused(ref_engine):
+    """draft_cfg without draft_k >= 1 is NOT speculative: plain fused
+    path, no acceptance keys in the result."""
+    eng = RealEngine(CFG, params=ref_engine.params, max_len=64, seed=0,
+                     draft_cfg=CFG, draft_k=0)
+    assert not eng.speculative
+    ids = list(range(7))
+    out = eng.generate(ids, max_new_tokens=10)
+    assert out["tokens"] == ref_engine.generate_reference(
+        ids, max_new_tokens=10)["tokens"]
+    assert "accept_rate" not in out
+
+
+def test_speculative_decoder_rejects_bad_k(ref_engine):
+    from repro.serving.generate import SpeculativeDecoder
+    with pytest.raises(ValueError):
+        SpeculativeDecoder(ref_engine.lm, ref_engine.lm, max_len=64,
+                           draft_k=0)
+
+
+# ------------------------------------------------------------- batched lanes
+
+@pytest.fixture(scope="module")
+def batched_ref():
+    return BatchedRealEngine(CFG, max_len=64, segment_len=4, n_lanes=3,
+                             seed=0)
+
+
+@pytest.fixture(scope="module")
+def batched_want(batched_ref):
+    return [batched_ref.generate_reference(p, max_new_tokens=m)["tokens"]
+            for p, m in zip(_prompts(), _MAXES)]
+
+
+@pytest.mark.parametrize("draft_seed", [None, 7])
+def test_batched_retire_backfill_bitwise(batched_ref, batched_want,
+                                         draft_seed):
+    """Retire + back-fill with speculation on: 7 requests through 3
+    lanes (4 back-fills), agreeing and adversarial drafts, all bitwise."""
+    kw = dict(draft_params=batched_ref.params) if draft_seed is None \
+        else dict(draft_seed=draft_seed)
+    eng = BatchedRealEngine(CFG, max_len=64, segment_len=4, n_lanes=3,
+                            seed=0, params=batched_ref.params,
+                            draft_cfg=CFG, draft_k=3, **kw)
+    outs = eng.generate_batch(_prompts(), max_new_tokens=_MAXES)
+    for o, w in zip(outs, batched_want):
+        assert list(o["tokens"]) == list(w)
+    st = eng.lane_manager.stats
+    assert st["backfills"] == 4 and st["retired"] == 7
+    assert st["drafted"] == eng.drafted_total > 0
+    if draft_seed is None:                 # agreeing draft
+        assert eng.accept_rate > 0.5
+        assert o["accept_rate"] is not None
+    else:                                  # adversarial draft
+        assert eng.accept_rate < 0.1
+        # every wasted draft position lands in dead_steps
+        assert eng.dead_steps >= eng.drafted_total - eng.accepted_total
+
+
+def test_batched_eos_bitwise(batched_ref, batched_want):
+    eng = BatchedRealEngine(CFG, max_len=64, segment_len=4, n_lanes=3,
+                            seed=0, params=batched_ref.params,
+                            draft_cfg=CFG, draft_params=batched_ref.params,
+                            draft_k=3)
+    eos = batched_want[1][len(batched_want[1]) // 2]
+    want = [batched_ref.generate_reference(p, max_new_tokens=m,
+                                           eos_id=eos)["tokens"]
+            for p, m in zip(_prompts(), _MAXES)]
+    assert any(len(w) < len(f) for w, f in zip(want, batched_want))
+    outs = eng.generate_batch(_prompts(), max_new_tokens=_MAXES,
+                              eos_id=eos)
+    for o, w in zip(outs, want):
+        assert list(o["tokens"]) == list(w)
+
+
+def test_draft_kv_charged_to_budget(batched_ref):
+    """Ring lanes charge target + draft bytes per token: the speculative
+    default budget is strictly larger, and the manager's per-token rate
+    includes the draft cache."""
+    from repro.serving.batching import kv_bytes_per_token
+    eng = BatchedRealEngine(CFG, max_len=64, segment_len=4, n_lanes=3,
+                            seed=0, params=batched_ref.params,
+                            draft_cfg=CFG, draft_params=batched_ref.params,
+                            draft_k=3)
+    bpt = kv_bytes_per_token(CFG)
+    assert eng._draft_bytes_per_token == bpt
+    eng.generate_batch(_prompts()[:3], max_new_tokens=4)
+    assert eng.lane_manager.bytes_per_token == 2 * bpt
+    assert eng.budget_bytes == batched_ref.budget_bytes * 2
+
+
+# -------------------------------------------------------------- paged lanes
+
+def test_paged_speculative_bitwise(batched_ref, batched_want):
+    for kw in (dict(draft_params=batched_ref.params),
+               dict(draft_seed=7)):
+        eng = PagedBatchedEngine(CFG, max_len=64, segment_len=4,
+                                 n_lanes=3, page_size=16, seed=0,
+                                 params=batched_ref.params, draft_cfg=CFG,
+                                 draft_k=3, **kw)
+        assert eng._overhead_pages > 0     # draft KV held as overhead
+        outs = eng.generate_batch(_prompts(), max_new_tokens=_MAXES)
+        for o, w in zip(outs, batched_want):
+            assert list(o["tokens"]) == list(w)
+        eng.allocator.check()
+
+
+def test_paged_tight_budget_bitwise(batched_ref, batched_want):
+    """A pool too small for 3 concurrent speculative lanes serializes
+    admission but never changes tokens."""
+    from repro.serving.batching import kv_bytes_per_token
+    eng = PagedBatchedEngine(CFG, max_len=64, segment_len=4, n_lanes=3,
+                             page_size=16, seed=0,
+                             params=batched_ref.params, draft_cfg=CFG,
+                             draft_params=batched_ref.params, draft_k=3,
+                             budget_bytes=10 * 16 * kv_bytes_per_token(CFG))
+    assert eng.n_pages == 10
+    outs = eng.generate_batch(_prompts(), max_new_tokens=_MAXES)
+    for o, w in zip(outs, batched_want):
+        assert list(o["tokens"]) == list(w)
+    eng.allocator.check()
+
+
+def test_paged_overhead_pages_accounting():
+    """Admission reserves the draft ring as unmapped overhead pages and
+    releases them at retire — the allocator balances."""
+    from repro.serving.paging import BlockAllocator, PagedLaneManager
+    alloc = BlockAllocator(n_pages=16, page_size=16)
+    mgr = PagedLaneManager(n_lanes=2, allocator=alloc, bytes_per_token=4,
+                           capacity=64, overhead_pages=3)
+    assert alloc.can_allocate(16)          # empty pool
+    mgr.admit(0, req_id=1, prompt_len=17, max_new=8, ids=list(range(17)))
+    assert len(mgr._overhead[0]) == 3      # draft ring pinned
+    # 2 prompt pages + 3 overhead held -> only 11 of 16 remain
+    assert not alloc.can_allocate(12)
+    assert alloc.can_allocate(11)
+    # a second admit must clear its own overhead too
+    assert mgr.can_admit(17, 8, ids=list(range(100, 117)))
+    mgr.retire(0)
+    assert 0 not in mgr._overhead
+    assert alloc.can_allocate(16)          # everything returned
+    alloc.check()
+    # a pool that cannot hold one sequence + overhead is rejected
+    with pytest.raises(ValueError):
+        PagedLaneManager(n_lanes=1, allocator=BlockAllocator(5, 16),
+                         bytes_per_token=4, capacity=64, overhead_pages=3)
+
+
+# --------------------------------------------------- scheduling-layer mirror
+
+def test_expected_speedup_math():
+    from repro.serving.service_time import expected_speedup
+    assert expected_speedup(0.5, 0) == 1.0
+    a = np.array([0.1, 0.5, 0.9])
+    s = expected_speedup(a, 4)
+    assert s.shape == (3,) and np.all(np.diff(s) > 0)
+    assert s[0] < 1.0 < s[2]               # speculation is not free
+    # closed form at a=0.9, k=4, cost=0.15
+    want = ((1 - 0.9 ** 5) / 0.1) / (4 * 0.15 + 1)
+    assert np.isclose(expected_speedup(0.9, 4), want)
+
+
+def test_effective_rate_identity():
+    from repro.serving.service_time import ServiceTimeModel
+    m0 = ServiceTimeModel(8000.0, 60.0)
+    m1 = ServiceTimeModel(8000.0, 60.0, effective_rate=1.0)
+    assert m0.service(64, 1400) == m1.service(64, 1400)
+    assert np.array_equal(m0.service_batch([3, 64], [10, 1400]),
+                          m1.service_batch([3, 64], [10, 1400]))
+    m2 = ServiceTimeModel(8000.0, 60.0, effective_rate=2.0)
+    assert m2.service(64, 1400) < m0.service(64, 1400)
+
+
+def test_calibration_identity_and_scaling():
+    from repro.core.calibration import measure_mu_short
+    from repro.core.simulation import ServiceDist
+    S, L = ServiceDist(3.5, 0.8), ServiceDist(8.9, 2.0)
+    assert measure_mu_short(S, L) == measure_mu_short(S, L,
+                                                      effective_rate=1.0)
+    assert measure_mu_short(S, L, effective_rate=2.0) \
+        < measure_mu_short(S, L)
+    with pytest.raises(ValueError):
+        measure_mu_short(S, L, effective_rate=-1.0)
+
+
+def test_simulate_speculative_identity():
+    import copy
+    from repro.core.simulation import (ServiceDist, poisson_workload,
+                                       simulate, simulate_speculative)
+    rng = np.random.default_rng(3)
+    reqs = poisson_workload(rng, 150, 0.2, ServiceDist(3.5, 0.8),
+                            ServiceDist(8.9, 2.0))
+    a, b = copy.deepcopy(reqs), copy.deepcopy(reqs)
+    r0 = simulate(a, policy="sjf", tau=10.0)
+    r1 = simulate_speculative(b, policy="sjf", tau=10.0, draft_k=0)
+    key = lambda r: r.req_id
+    for x, y in zip(sorted(r0.requests, key=key),
+                    sorted(r1.requests, key=key)):
+        assert x.start == y.start and x.finish == y.finish
+    assert r0.promotions == r1.promotions
+
+
+def test_simulate_speculative_speedup():
+    from repro.core.simulation import (ServiceDist, poisson_workload,
+                                       simulate_speculative)
+    rng = np.random.default_rng(4)
+    reqs = poisson_workload(rng, 150, 0.2, ServiceDist(3.5, 0.8),
+                            ServiceDist(8.9, 2.0))
+    for r in reqs:
+        r.accept_rate = 0.9
+    hi = simulate_speculative(reqs, policy="sjf", draft_k=4)
+    mk_hi = hi.makespan
+    for r in reqs:
+        r.accept_rate = 0.0
+    mk_lo = simulate_speculative(reqs, policy="sjf", draft_k=4).makespan
+    assert mk_hi < mk_lo                   # acceptance buys wall-clock
+
+
+def test_effective_sjf_keys():
+    from repro.core.policy import get_policy
+    from repro.core.scheduler import Request
+    pol = get_policy("sjf_effective")
+    hi = Request(req_id=0, p_long=0.9, accept_rate=0.95)
+    lo = Request(req_id=1, p_long=0.2, accept_rate=0.0)
+    # a long request that drafts well can outrank a short one that
+    # drafts terribly
+    assert pol.key(hi) < pol.key(lo)
+    ka = pol.key_array(np.zeros(2), np.array([0.9, 0.2]), np.zeros(2),
+                       accept_rate=np.array([0.95, 0.0]))
+    assert np.isclose(ka[0], pol.key(hi))
+    assert np.isclose(ka[1], pol.key(lo))
+    # NaN / None fall back to the prior
+    none_req = Request(req_id=2, p_long=0.2)
+    kn = pol.key_array(np.zeros(1), np.array([0.2]), np.zeros(1),
+                       accept_rate=np.array([np.nan]))
+    assert np.isclose(kn[0], pol.key(none_req))
+    # uniform acceptance degenerates to token-count SJF ordering
+    sjf = get_policy("sjf")
+    p = np.linspace(0.0, 1.0, 17)
+    z = np.zeros(17)
+    assert np.array_equal(
+        np.argsort(pol.key_array(z, p, z, accept_rate=np.full(17, 0.7))),
+        np.argsort(sjf.key_array(z, p, z)))
+
+
+def test_sweep_speculative_acceptance_aware_wins():
+    """Heterogeneous acceptance: keying on effective service (predicted /
+    expected speedup) beats token-count SJF on short-request P50."""
+    from repro.core.simulation import ServiceDist
+    from repro.core.sweep import sweep_speculative
+    res = sweep_speculative(
+        conditions=[("sjf", None), ("sjf_effective", None)],
+        draft_ks=(0, 4), accept_dists=("uniform",), seeds=range(5),
+        n=500, short=ServiceDist(3.5, 0.8), long=ServiceDist(8.9, 2.0),
+        rho=0.8)
+    sp50 = res.metric("short_p50")
+    # K=0 cells: identical grid for both (speculation off => same keys
+    # up to a monotone transform, same services)
+    assert np.allclose(sp50[0, 0], sp50[1, 0])
+    # K=4: acceptance-aware admission wins the seed-mean
+    assert sp50[1, 1].mean() <= sp50[0, 1].mean()
+    assert res.metric("mean_sojourn")[1, 1].mean() \
+        <= res.metric("mean_sojourn")[0, 1].mean()
