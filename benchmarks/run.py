@@ -27,7 +27,10 @@ tracked across PRs:
 * ``speculative`` -> ``BENCH_speculative.json`` (draft-verify lanes at
   c=4 vs the fused lane path — aggregate tok/s speedup with bitwise
   token equality, adversarial-draft contrast, and the acceptance-aware
-  admission policy x draft-K x acceptance-distribution DES grid).
+  admission policy x draft-K x acceptance-distribution DES grid);
+* ``observability`` -> ``BENCH_observability.json`` (flight-recorder /
+  metrics overhead on the loopback wire drain, ranking-monitor fidelity
+  recovery + inversion-alert, DES-vs-live trace parity).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run predictor  # one suite
@@ -51,12 +54,14 @@ BENCH_JSONS = {
     "sidecar": os.path.join(_ROOT, "BENCH_sidecar.json"),
     "paging": os.path.join(_ROOT, "BENCH_paging.json"),
     "speculative": os.path.join(_ROOT, "BENCH_speculative.json"),
+    "observability": os.path.join(_ROOT, "BENCH_observability.json"),
 }
 
 
 def main() -> None:
     from benchmarks import (batching_bench, faults_bench, fig3_rho_sweep,
-                            paging_bench, policies_bench, predictor_latency,
+                            observability_bench, paging_bench,
+                            policies_bench, predictor_latency,
                             serve_bench, sidecar_bench, sim_bench,
                             speculative_bench, table1_service_stats,
                             table2_dataset_stats, table4_ablation,
@@ -82,6 +87,7 @@ def main() -> None:
         "sidecar": sidecar_bench.run,
         "paging": paging_bench.run,
         "speculative": speculative_bench.run,
+        "observability": observability_bench.run,
     }
     wanted = sys.argv[1:] or list(suites)
     t0 = time.time()

@@ -26,7 +26,8 @@ repro.core.policy.get_policy('sjf_effective'); \
 import repro.core.sweep, repro.core.scheduler, repro.serving.batching; \
 import repro.serving.http_sidecar, repro.serving.backends; \
 import repro.serving.paging, repro.kernels.decode_attention; \
-import repro.serving.generate, repro.core.calibration"
+import repro.serving.generate, repro.core.calibration; \
+import repro.serving.observability, repro.serving.metrics_http"
 
 echo "== tier-1 tests (includes sim trace-equivalence suite) =="
 python -m pytest -x -q
@@ -136,16 +137,59 @@ print(f"speculative smoke OK: {len(outs)} requests bitwise-equal, "
       f"dead_steps {spec.dead_steps})")
 PY
 
+echo "== fixed-seed instrumented chaos smoke (span-tree completeness) =="
+# the chaos drain again, this time under full tracing: every terminal
+# request must carry exactly one complete span tree (the trace mirror of
+# the no-lost-requests invariant), and one /metrics render must parse as
+# valid Prometheus exposition — any malformed line fails the build
+python - <<'PY'
+from repro.serving.faults import FaultPlan
+from repro.serving.observability import Observability, parse_prometheus
+from repro.serving.openai_api import CompletionRequest
+from repro.serving.server import ClairvoyantServer
+
+n = 150
+plan = FaultPlan.random(seed=4321, horizon=300.0, crash_mtbf=60.0,
+                        crash_mttr=5.0, transient_rate=1 / 40.0,
+                        stall_mtbf=100.0)
+obs = Observability.default()
+server = ClairvoyantServer(policy="sjf", predictor=None, fault_plan=plan,
+                           deadline_s=60.0, seed=0, observability=obs)
+ids = []
+for i in range(n):
+    req = CompletionRequest(prompt=f"req {i}")
+    server.submit(req, arrival=i * 1.5,
+                  true_output_tokens=40 if i % 3 else 300,
+                  klass="long" if i % 3 == 0 else "short")
+    ids.append(req.request_id)
+server.cancel(ids[5])
+server.drain()
+assert len(server.responses) == n, "lost requests"
+rec = obs.recorder
+ok_ids = [r.request_id for r in server.responses if r.ok]
+problems = rec.validate(server._terminal, ok_ids)
+assert not problems, f"span-tree problems: {problems[:5]}"
+for rid in ids:
+    assert len(rec.span_tree(rid)["roots"]) == 1, f"req {rid}: bad tree"
+families = parse_prometheus(obs.render_metrics())   # raises on bad lines
+assert "clairvoyant_terminals_total" in families
+print(f"instrumented chaos smoke OK: {n} span trees complete "
+      f"({len(rec)} spans, {rec.dropped} dropped), "
+      f"{len(families)} metric families parse clean")
+PY
+
 echo "== sidecar wire smoke (loopback HTTP/SSE, fixed seed) =="
 # boots the asyncio sidecar on a loopback port and exercises the wire
-# envelope: streaming SSE, non-streaming JSON, a rate-limit 429, and a
-# client disconnect -> cancelled terminal; fails on leaked asyncio tasks
+# envelope: streaming SSE, non-streaming JSON, a rate-limit 429, a
+# /metrics scrape (fails on malformed exposition lines), and a client
+# disconnect -> cancelled terminal; fails on leaked asyncio tasks
 # or connections still tracked after the graceful drain
 python - <<'PY'
 import asyncio, json
 
 from repro.serving.backends import SimTextBackend
 from repro.serving.http_sidecar import Sidecar
+from repro.serving.observability import parse_prometheus
 from repro.serving.server import ClairvoyantServer
 from repro.serving.service_time import ServiceTimeModel
 
@@ -189,6 +233,19 @@ async def main():
                          headers={"X-Tenant": "t-plain"})
     body = json.loads(data.split(b"\r\n\r\n", 1)[1])
     assert st == 200 and body["clairvoyant"]["status"] == "ok"
+
+    # one real scrape: the exposition must parse clean line-by-line
+    reader, writer = await asyncio.open_connection("127.0.0.1", sc.port)
+    writer.write(b"GET /metrics HTTP/1.1\r\nHost: ci\r\n"
+                 b"Connection: close\r\n\r\n")
+    await writer.drain()
+    data = await asyncio.wait_for(reader.read(), 10.0)
+    writer.close()
+    head, text = data.split(b"\r\n\r\n", 1)
+    assert head.split(None, 2)[1] == b"200", head
+    fams = parse_prometheus(text.decode())
+    assert "clairvoyant_terminals_total" in fams, sorted(fams)
+    assert "clairvoyant_wire_total" in fams, sorted(fams)
     st, _ = await req(sc.port, {"prompt": "a", "max_tokens": 4,
                                 "output_tokens": 4},
                       headers={"X-Tenant": "ci"})
@@ -254,4 +311,8 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     python -m benchmarks.run speculative
     echo "== BENCH_speculative.json =="
     cat BENCH_speculative.json
+    echo "== observability benchmark (trace overhead + ranking fidelity) =="
+    python -m benchmarks.run observability
+    echo "== BENCH_observability.json =="
+    cat BENCH_observability.json
 fi

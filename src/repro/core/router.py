@@ -63,6 +63,9 @@ class PredictiveRouter:
         self.service_estimate = np.asarray(service_estimate, float)
         self.stats = {"routed": 0, "hedged": 0, "failed_over": 0,
                       "breaker_opens": 0, "breaker_probes": 0}
+        # optional serving.observability.FlightRecorder: route decisions
+        # become instant events on the chosen replica's trace track
+        self.recorder = None
 
     def eligible(self, replica_id: int, now: float = 0.0) -> bool:
         """May this replica receive traffic?  ``healthy`` is the manual
@@ -118,6 +121,13 @@ class PredictiveRouter:
         best.queue.push(req)
         best.predicted_backlog += est
         self.stats["routed"] += 1
+        rec = self.recorder
+        if rec is not None:
+            rec.instant("route", req.req_id, now,
+                        track=f"replica{best.replica_id}",
+                        args={"replica": best.replica_id,
+                              "est": round(est, 4),
+                              "backlog": round(best.predicted_backlog, 4)})
         return best.replica_id
 
     def hedge_overdue(self, now: float, deadline: float) -> List[Request]:

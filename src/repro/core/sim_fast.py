@@ -1600,3 +1600,26 @@ def simulate_grid_faults(arrival, service, key, tau, faults,
             arrival[g], service[g], key[g], tg, faults[g], deadline[g],
             in_service_timeout)
     return start, finish, promoted, promotions, shed, timeout, requeues
+
+
+# --------------------------------------------------------------------------
+# observability bridge
+# --------------------------------------------------------------------------
+def record_batch_trace(recorder, *, arrival, start, finish, req_ids,
+                       ttft=None, out_tokens=None, replica=None,
+                       statuses=None, segment_tokens: int = 8,
+                       max_segments: int = 4) -> None:
+    """Replay a DES result as flight-recorder spans in virtual time.
+
+    Pure post-processing over the result arrays — the C/heapq engines are
+    untouched, so tracing a simulation costs nothing unless requested.
+    The emitted span schema (request / queue_wait / prefill / decode /
+    decode_segment) is identical to what the live drains record, which is
+    what makes a sim run and a live drain comparable as flame traces
+    (``serving.observability`` holds the shared emitter).
+    """
+    from repro.serving.observability import record_des_trace
+    record_des_trace(recorder, arrival, start, finish, req_ids,
+                     ttft=ttft, out_tokens=out_tokens, replica=replica,
+                     statuses=statuses, segment_tokens=segment_tokens,
+                     max_segments=max_segments)

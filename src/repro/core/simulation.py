@@ -82,7 +82,8 @@ def simulate_reference(requests: Sequence[Request], policy="sjf",
 
 
 def simulate(requests: Sequence[Request], policy="sjf",
-             tau: Optional[float] = None, engine: str = "auto") -> SimResult:
+             tau: Optional[float] = None, engine: str = "auto",
+             recorder=None) -> SimResult:
     """Run the serial-server DES.  ``requests`` carry arrival/p_long/service.
 
     ``policy`` is a registry name or Policy instance.  For key-based
@@ -90,6 +91,10 @@ def simulate(requests: Sequence[Request], policy="sjf",
     written onto the passed Requests, dispatch-ordered result list) and is
     trace-equivalent bitwise; preemptive policies (srpt/mlfq) run on the
     preemptive engine, where ``start`` is the FIRST dispatch time.
+
+    ``recorder`` (a ``serving.observability.FlightRecorder``) replays the
+    result as the live drains' span schema in virtual time — pure
+    post-processing over the DES result arrays, zero inner-loop cost.
     """
     from repro.core.sim_fast import RequestBatch, simulate_batch
     reqs = sorted(requests, key=lambda r: (r.arrival, r.req_id))
@@ -102,6 +107,18 @@ def simulate(requests: Sequence[Request], policy="sjf",
         r.start = float(res.start[i])
         r.finish = float(res.finish[i])
         r.promoted = bool(res.promoted[i])
+    if recorder is not None:
+        from repro.core.sim_fast import record_batch_trace
+        record_batch_trace(
+            recorder,
+            arrival=[r.arrival for r in reqs],
+            start=res.start, finish=res.finish,
+            req_ids=[r.req_id for r in reqs],
+            out_tokens=[r.meta.get("output_tokens")
+                        if r.meta.get("output_tokens") is not None
+                        else None for r in reqs]
+            if any(r.meta.get("output_tokens") is not None
+                   for r in reqs) else None)
     done = [reqs[i] for i in np.argsort(res.start, kind="stable")]
     return SimResult(requests=done, promotions=res.promotions,
                      makespan=res.makespan)

@@ -60,6 +60,10 @@ def main(argv=None):
                     help="draft tokens proposed per verify step")
     ap.add_argument("--accept-rate", type=float, default=0.7,
                     help="assumed draft acceptance rate")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the flight recorder and write a "
+                         "Chrome/Perfetto trace_event JSON of the "
+                         "drain's span timeline here (virtual time)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -98,6 +102,9 @@ def main(argv=None):
                                n_replicas=args.replicas,
                                predictor=predictor, service_model=model,
                                seed=args.seed)
+    if args.trace_out:
+        from repro.serving.observability import Observability
+        server.attach_observability(Observability.default(tracing=True))
 
     ds = sample_dataset(args.dataset, n=args.requests, seed=args.seed + 1)
     if args.rho > 0:
@@ -117,6 +124,10 @@ def main(argv=None):
         klasses=[CLASS_NAMES[int(c)] for c in ds.classes])
     server.drain()
 
+    if args.trace_out:
+        rec = server.obs.recorder
+        rec.write_perfetto(args.trace_out)
+        print(f"perfetto trace ({len(rec)} spans) -> {args.trace_out}")
     print(f"policy={args.policy} replicas={args.replicas} "
           f"promotions={server.promotions}")
     for klass in ("short", "long"):

@@ -25,6 +25,14 @@ SIGINT/SIGTERM trigger a graceful drain: the listener closes, in-flight
 work gets ``--drain-s`` seconds to finish, stragglers are cancelled at
 the next segment boundary — every admitted request still leaves with
 exactly one terminal status.
+
+Observability (PR 10): the main port always serves Prometheus text on
+``GET /metrics``; ``--metrics-port`` additionally exposes it on a
+dedicated scrape port (so load balancers need not route scrapes through
+the serving listener).  ``--trace-out FILE`` enables the flight
+recorder and writes a Chrome/Perfetto ``trace_event`` JSON of every
+request's span timeline at shutdown; ``--log-json FILE`` writes the
+same spans as structured JSONL.
 """
 
 from __future__ import annotations
@@ -108,6 +116,11 @@ def build_sidecar(args) -> Sidecar:
         deadline_s=args.deadline_s, deadline_mode="sojourn",
         max_queue_depth=args.max_queue_depth,
         breaker=CircuitBreaker(recovery_s=args.breaker_recovery_s))
+    if getattr(args, "trace_out", None) or getattr(args, "log_json", None):
+        # tracing requested: attach a full bundle (recorder + metrics +
+        # ranking) before the Sidecar builds its metrics-only default
+        from repro.serving.observability import Observability
+        server.attach_observability(Observability.default(tracing=True))
     return Sidecar(server, host=args.host, port=args.port,
                    model=args.model, max_inflight=args.max_inflight,
                    tenant_rate=args.tenant_rate,
@@ -122,6 +135,14 @@ async def serve(args) -> None:
     print(f"sidecar listening on {sidecar.address} "
           f"(policy={args.policy}, backend={args.backend}, "
           f"replicas={len(sidecar.backends)})", flush=True)
+    metrics_srv = None
+    if getattr(args, "metrics_port", None) is not None:
+        from repro.serving.metrics_http import MetricsServer
+        metrics_srv = MetricsServer(sidecar.obs, host=args.host,
+                                    port=args.metrics_port)
+        await metrics_srv.start()
+        print(f"metrics on http://{args.host}:{metrics_srv.port}/metrics",
+              flush=True)
     stop = asyncio.Event()
     loop = asyncio.get_running_loop()
     for sig in (signal.SIGINT, signal.SIGTERM):
@@ -132,6 +153,17 @@ async def serve(args) -> None:
     await stop.wait()
     print("draining...", flush=True)
     await sidecar.shutdown()
+    if metrics_srv is not None:
+        await metrics_srv.stop()
+    rec = sidecar.obs.recorder
+    if rec is not None:
+        if getattr(args, "trace_out", None):
+            rec.write_perfetto(args.trace_out)
+            print(f"perfetto trace ({len(rec)} spans) -> {args.trace_out}",
+                  flush=True)
+        if getattr(args, "log_json", None):
+            rec.write_jsonl(args.log_json)
+            print(f"span JSONL -> {args.log_json}", flush=True)
     srv = sidecar.server
     done = len(srv.responses)
     ok = sum(1 for r in srv.responses if r.ok)
@@ -186,6 +218,17 @@ def main(argv=None):
     ap.add_argument("--accept-rate", type=float, default=0.7,
                     help="assumed draft acceptance rate for the "
                          "service-time mirror (sim backend/calibration)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="also serve Prometheus /metrics on this "
+                         "dedicated port (0 = ephemeral); the main port "
+                         "serves /metrics regardless")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the flight recorder and write a "
+                         "Chrome/Perfetto trace_event JSON of every "
+                         "request's span timeline here at shutdown")
+    ap.add_argument("--log-json", default=None,
+                    help="enable the flight recorder and write the span "
+                         "log as structured JSONL here at shutdown")
     ap.add_argument("--chaos-crash-mtbf", type=float, default=0.0,
                     help=">0: inject engine crashes at this MTBF (s)")
     ap.add_argument("--chaos-transient-rate", type=float, default=0.0,

@@ -105,6 +105,12 @@ class Backend:
         """Cheap availability check (half-open breaker probes, /readyz)."""
         return True
 
+    def engine_stats(self) -> dict:
+        """Uniform observability surface (mirrors the engines' method):
+        whatever this backend can cheaply report about its serving state.
+        Adapters that wrap a real engine delegate to it."""
+        return {"replica": self.replica_id, "served": self.served}
+
 
 class SimTextBackend(Backend):
     """Virtual-time backend: sleeps out a ``ServiceTimeModel`` service
@@ -219,6 +225,9 @@ class InProcessBackend(Backend):
 
     async def probe(self) -> bool:
         return True
+
+    def engine_stats(self) -> dict:
+        return self.engine.engine_stats()
 
 
 class HTTPBackend(Backend):

@@ -64,6 +64,10 @@ class SimEngine:
         self.busy_until = 0.0
         self.served = 0
 
+    def engine_stats(self) -> dict:
+        """Wire-facing stats snapshot (sidecar /healthz, /metrics)."""
+        return {"replica": self.replica_id, "served": self.served}
+
     def execute(self, start: float, prompt_tokens: int,
                 output_tokens: int) -> tuple[float, float]:
         """Returns (ttft_s, service_s); advances the virtual clock."""
@@ -108,6 +112,10 @@ class RealEngine:
         # segment boundaries (same join points as cancellation), where an
         # injected crash surfaces as an EngineCrash raise out of generate
         self.fault_injector = None
+        # optional serving.observability.FlightRecorder: the batched lane
+        # loop stamps per-lane prefill/decode/decode_segment spans on it
+        # (timestamps from the caller's now_fn, so virtual clocks work)
+        self.recorder = None
         self._pending_items: list = []
 
         self._bucketing = all(k in _BUCKET_SAFE_KINDS
@@ -154,6 +162,11 @@ class RealEngine:
         """§3.4 mid-generation disconnect: the fused loop observes this flag
         at the next segment boundary and drains."""
         self._cancel = True
+
+    def engine_stats(self) -> dict:
+        """Wire-facing stats snapshot (sidecar /healthz, /metrics)."""
+        return {"replica": self.replica_id, "served": self.served,
+                "speculative": self.speculative}
 
     def _decoder(self, segment_len: int):
         dec = self._decoders.get(segment_len)
@@ -408,6 +421,18 @@ class BatchedRealEngine(RealEngine):
         return self.accepted_total / self.drafted_total \
             if self.drafted_total else None
 
+    def engine_stats(self) -> dict:
+        """Wire-facing stats: adds dead-step and speculation accounting
+        plus live lane occupancy (sidecar /healthz, /metrics)."""
+        st = super().engine_stats()
+        mgr = self.lane_manager
+        st.update(dead_steps=self.dead_steps, lanes=self.n_lanes,
+                  lanes_busy=len(mgr.busy_lanes()) if mgr is not None
+                  else 0, drafted=self.drafted_total,
+                  accepted=self.accepted_total,
+                  accept_rate=self.accept_rate)
+        return st
+
     def _accumulate_spec(self, mgr, dec) -> None:
         """Post-segment speculation accounting: per-lane and aggregate
         drafted/accepted counters, and the dead-step extension — wasted
@@ -578,6 +603,9 @@ class BatchedRealEngine(RealEngine):
         """
         import jax.numpy as jnp
         now = now_fn if now_fn is not None else time.monotonic
+        rec = self.recorder
+        _ltrk = [f"replica{self.replica_id}/lane{i}"
+                 for i in range(self.n_lanes)]
         mgr = self._new_manager()
         self.lane_manager = mgr
         self.dead_steps = 0
@@ -634,11 +662,20 @@ class BatchedRealEngine(RealEngine):
             caches = self._prefill_claims(mgr, dec, caches, claims, now,
                                           tok, plen, produced, max_new,
                                           active)
+            if rec is not None:
+                for st, lane, _, _ in claims:
+                    rec.span("prefill", st.req_id, st.admit_t,
+                             st.admit_t + max(st.ttft_s, 0.0),
+                             track=_ltrk[lane])
             dev["d"] = None             # lane composition changed
 
         def finish(state, cancelled: bool, crashed: bool = False) -> None:
             t_fin = now()
             self.served += not cancelled
+            if rec is not None:
+                t0d = min(state.admit_t + max(state.ttft_s, 0.0), t_fin)
+                rec.span("decode", state.req_id, t0d, t_fin,
+                         track=_ltrk[state.lane])
             res = {
                 "tokens": self._result_tokens(state), "cancelled": cancelled,
                 "crashed": crashed,
@@ -716,6 +753,7 @@ class BatchedRealEngine(RealEngine):
                             jnp.asarray(plen), jnp.asarray(max_new),
                             jnp.asarray(active))
             tok_d, produced_d, plen_d, max_new_d, active_d = dev["d"]
+            t_seg0 = now() if rec is not None else 0.0
             new_toks, tok_d, produced_d, caches, stopped, produced, dead = \
                 dec.run_segment(self.params, caches, tok_d, produced_d,
                                 plen_d, max_new_d, eos, active_d,
@@ -724,6 +762,11 @@ class BatchedRealEngine(RealEngine):
             self.dead_steps += dead
             self._accumulate_spec(mgr, dec)
             mgr.stats["dead_steps"] = self.dead_steps
+            if rec is not None:
+                t_seg1 = now()
+                for lane in mgr.busy_lanes():
+                    rec.span("decode_segment", mgr.lanes[lane].req_id,
+                             t_seg0, t_seg1, track=_ltrk[lane])
             retired = False
             released = []
             for lane in mgr.busy_lanes():
@@ -825,6 +868,15 @@ class PagedBatchedEngine(BatchedRealEngine):
             lambda p, toks, pl, pcaches, fill_to: self.lm.prefill(
                 p, {"tokens": toks}, prompt_len=pl, caches=pcaches,
                 fill_to=fill_to))
+
+    def engine_stats(self) -> dict:
+        """Adds paged-pool page states (free/cached/held) and prefix-hit
+        accounting to the batched stats."""
+        st = super().engine_stats()
+        st["pages"] = self.allocator.page_states()
+        st["prefix_hits"] = self.allocator.stats["prefix_hits"]
+        st["prefix_hit_pages"] = self.allocator.stats["prefix_hit_pages"]
+        return st
 
     # ------------------------------------------------------------ lane hooks
     def _new_manager(self):

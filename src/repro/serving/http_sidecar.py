@@ -30,10 +30,20 @@ robustness envelope the paper's proxy needs in production:
 * **Slow-client guards** — header/body read timeouts and bounded
   ``drain()`` waits on every write; a stalled reader is treated as a
   disconnect (its request is cancelled, the connection closed).
-* **Health** — ``/healthz`` (process liveness + fault counters) and
-  ``/readyz`` (503 while draining, when every replica's breaker is
-  open, or no backend is eligible), both reporting predictor
-  degradation and per-replica breaker state.
+* **Health** — ``/healthz`` (process liveness + fault counters +
+  per-replica engine stats: dead steps, speculative accept rate, paged
+  pool page states) and ``/readyz`` (503 while draining, when every
+  replica's breaker is open, or no backend is eligible), both
+  reporting predictor degradation and per-replica breaker state;
+  ``/readyz`` additionally carries the online ranking-fidelity
+  snapshot.
+* **Metrics** — ``/metrics`` serves Prometheus text exposition
+  (``serving/observability.py``): admission/terminal counters, sojourn
+  / TTFT / queue-wait / predictor-latency histograms, queue-depth and
+  page-state gauges, wire-level counters, and the ranking-fidelity
+  monitor.  A metrics+ranking :class:`Observability` bundle is created
+  automatically when the server has none; attach one with a recorder
+  to also capture Perfetto-exportable span traces.
 * **Graceful drain** — ``shutdown()`` stops accepting, serves what it
   can inside ``drain_s``, then force-terminates the rest (queued ->
   ``cancelled``/"server shutdown", mid-generation -> segment-boundary
@@ -58,11 +68,15 @@ import time
 from typing import Dict, List, Optional
 
 from repro.serving.faults import EngineCrash, TransientBackendError
+from repro.serving.observability import Observability
 from repro.serving.openai_api import (HTTP_STATUS, CompletionRequest,
                                       CompletionResponse,
                                       chat_completion_body, chat_chunk_body,
                                       error_body)
 from repro.serving.server import ClairvoyantServer
+
+#: Prometheus text exposition content type (format 0.0.4)
+METRICS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
             405: "Method Not Allowed", 408: "Request Timeout",
@@ -174,12 +188,39 @@ class Sidecar:
             if server.faults is not None:
                 b.fault_injector = server.faults
             b.clock = self.now
+        # observability: every sidecar is scrapeable.  When the caller
+        # didn't attach a bundle, build the metrics + ranking default
+        # (tracing stays opt-in: attach Observability.default() with a
+        # recorder before constructing the sidecar to also get spans).
+        if getattr(server, "obs", None) is None:
+            server.attach_observability(Observability.default(tracing=False))
+        self.obs = server.obs
+        if self.obs.metrics is not None:
+            self._register_wire_metrics()
 
     # ------------------------------------------------------------ plumbing
     def now(self) -> float:
         """The sidecar's virtual clock IS wall time since construction
         (arrivals, deadlines and fault windows share this axis)."""
         return time.monotonic() - self._t0
+
+    def _register_wire_metrics(self) -> None:
+        """Scrape-time export of the wire-level stats the sidecar keeps."""
+        reg = self.obs.metrics
+        c_wire = reg.counter("clairvoyant_wire_total",
+                             "Wire-level events by kind")
+        g_winf = reg.gauge("clairvoyant_wire_inflight",
+                           "Open wire requests (pre-terminal waiters)")
+        g_conn = reg.gauge("clairvoyant_wire_connections",
+                           "Open TCP connections")
+
+        def collect():
+            for k, v in self.wire_stats.items():
+                c_wire.set_total(v, kind=k)
+            g_winf.set(len(self._waiters))
+            g_conn.set(len(self._conns))
+
+        reg.add_collector(collect)
 
     def _on_finish(self, resp: CompletionResponse) -> None:
         self._orig_finish(resp)
@@ -311,6 +352,17 @@ class Sidecar:
         w = self._waiters.get(rid)
         on_segment = w.push_delta if w is not None and creq is not None \
             and creq.stream else None
+        rec = self.obs.recorder
+        seg_marks: List[float] = []
+        if rec is not None:
+            # wrap the delta pusher so every segment boundary leaves a
+            # timestamp mark (streamed or not) for decode_segment spans
+            _push = on_segment
+
+            def on_segment(delta, _p=_push, _m=seg_marks):
+                _m.append(self.now())
+                if _p is not None:
+                    _p(delta)
         srv._decoding[rep.replica_id] = rid
         try:
             out = await backend.generate(req.prompt, max_new_tokens=n_new,
@@ -341,6 +393,25 @@ class Sidecar:
                       degraded=bool(req.meta.get("degraded")),
                       accept_rate=out.get("accept_rate"))
         req.finish = t_end
+        if rec is not None:
+            # spans land before _finish so the root "request" span (the
+            # observe_terminal hook) stretches over them
+            trk = f"replica{rep.replica_id}"
+            t_gen0 = max(t, t_end - out["service_s"])
+            t_pref = min(t_gen0 + max(out["ttft_s"], 0.0), t_end)
+            rec.span("queue_wait", rid, req.arrival, t_gen0,
+                     track=f"req{rid}")
+            rec.span("prefill", rid, t_gen0, t_pref, track=trk)
+            rec.span("decode", rid, t_pref, t_end, track=trk)
+            edges = [t_pref]
+            for m in seg_marks:           # measured segment boundaries
+                if t_pref < m < t_end:
+                    edges.append(max(m, edges[-1]))
+            edges.append(t_end)
+            for i in range(len(edges) - 1):
+                if edges[i + 1] > edges[i]:
+                    rec.span("decode_segment", rid, edges[i],
+                             edges[i + 1], track=trk)
         if out["cancelled"]:
             if rid in srv._disconnected:
                 srv._disconnected.discard(rid)
@@ -416,6 +487,11 @@ class Sidecar:
         if method == "GET" and path == "/readyz":
             ready, doc = self._ready_doc()
             await self._respond(writer, 200 if ready else 503, doc)
+            return
+        if method == "GET" and path == "/metrics":
+            await self._respond_text(writer, 200,
+                                     self.obs.render_metrics(),
+                                     METRICS_CONTENT_TYPE)
             return
         if path != "/v1/chat/completions":
             await self._respond(writer, 404,
@@ -524,7 +600,8 @@ class Sidecar:
                 resp = w.resp
                 await self._respond(
                     writer, HTTP_STATUS[resp.status],
-                    chat_completion_body(resp, self.model)
+                    chat_completion_body(resp, self.model,
+                                         extra=self._clairvoyant_extra())
                     if resp.status == "ok"
                     else error_body(resp.status, resp.error or resp.status,
                                     request_id=rid),
@@ -564,7 +641,8 @@ class Sidecar:
                 # nothing streamed yet: plain JSON is kinder to clients
                 await self._respond(
                     writer, HTTP_STATUS[resp.status],
-                    chat_completion_body(resp, self.model)
+                    chat_completion_body(resp, self.model,
+                                         extra=self._clairvoyant_extra())
                     if resp.status == "ok"
                     else error_body(resp.status, resp.error or resp.status,
                                     request_id=rid),
@@ -614,6 +692,13 @@ class Sidecar:
         self.server.cancel(rid)
 
     # --------------------------------------------------------------- health
+    def _clairvoyant_extra(self) -> Optional[dict]:
+        """Extra keys for the response ``clairvoyant`` block: the online
+        ranking-fidelity snapshot (cheap — cached between refreshes)."""
+        mon = self.obs.ranking
+        return {"ranking": mon.snapshot_cached()} if mon is not None \
+            else None
+
     def _health_doc(self) -> dict:
         srv = self.server
         return {"status": "ok", "stopping": self._stopping,
@@ -621,6 +706,11 @@ class Sidecar:
                 "inflight": len(self._waiters),
                 "fault_stats": dict(srv.fault_stats),
                 "wire_stats": dict(self.wire_stats),
+                # per-replica engine detail: dead_steps, speculative
+                # accept_rate, paged-pool page states, ... (whatever the
+                # backend can report)
+                "engines": [b.engine_stats() for b in self.backends
+                            if hasattr(b, "engine_stats")],
                 "replicas": self._replica_docs()}
 
     def _ready_doc(self):
@@ -629,9 +719,12 @@ class Sidecar:
         eligible = [r for r in srv.router.replicas
                     if srv.router.eligible(r.replica_id, now)]
         ready = not self._stopping and bool(eligible)
+        mon = self.obs.ranking
         doc = {"ready": ready, "stopping": self._stopping,
                "degraded": srv.degraded,
                "eligible_replicas": len(eligible),
+               "ranking": mon.snapshot_cached() if mon is not None
+               else None,
                "replicas": self._replica_docs()}
         return ready, doc
 
@@ -652,6 +745,20 @@ class Sidecar:
             hdrs.update(extra)
         head = f"HTTP/1.1 {status} {_REASONS.get(status, 'Status')}\r\n" \
             + "".join(f"{k}: {v}\r\n" for k, v in hdrs.items()) + "\r\n"
+        writer.write(head.encode("ascii") + body)
+        try:
+            await asyncio.wait_for(writer.drain(), self.write_timeout_s)
+        except (asyncio.TimeoutError, ConnectionError):
+            pass
+
+    async def _respond_text(self, writer, status: int, text: str,
+                            content_type: str = "text/plain") -> None:
+        """Plain-text response (the /metrics exposition body)."""
+        body = text.encode("utf-8")
+        head = (f"HTTP/1.1 {status} {_REASONS.get(status, 'Status')}\r\n"
+                f"Content-Type: {content_type}\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: close\r\n\r\n")
         writer.write(head.encode("ascii") + body)
         try:
             await asyncio.wait_for(writer.drain(), self.write_timeout_s)

@@ -95,8 +95,13 @@ class CompletionResponse:
 # --------------------------------------------------------------------------
 
 def chat_completion_body(resp: CompletionResponse, model: str,
-                         created: Optional[float] = None) -> dict:
-    """Non-streaming /v1/chat/completions response body."""
+                         created: Optional[float] = None,
+                         extra: Optional[dict] = None) -> dict:
+    """Non-streaming /v1/chat/completions response body.
+
+    ``extra`` merges additional keys into the ``clairvoyant`` block —
+    the sidecar uses it to surface the online ranking-fidelity snapshot
+    alongside the per-request scheduling facts."""
     finish = "stop" if resp.status == "ok" else resp.status
     body = {
         "id": f"chatcmpl-{resp.request_id}",
@@ -124,6 +129,8 @@ def chat_completion_body(resp: CompletionResponse, model: str,
     }
     if resp.error:
         body["clairvoyant"]["error"] = resp.error
+    if extra:
+        body["clairvoyant"].update(extra)
     return body
 
 

@@ -118,6 +118,13 @@ class BlockAllocator:
     def reclaimable_pages(self) -> int:
         return len(self._free) + len(self._lru)
 
+    def page_states(self) -> dict:
+        """Pool occupancy by state: ``free`` (never/no-longer mapped),
+        ``cached`` (LRU-parked prefix pages, reclaimable), ``held``
+        (referenced by live sequences).  free+cached+held == total."""
+        return {"total": self.n_pages, "free": len(self._free),
+                "cached": len(self._lru), "held": self.used_pages}
+
     def can_allocate(self, n: int) -> bool:
         return n <= self.reclaimable_pages
 

@@ -80,6 +80,7 @@ from repro.serving.engine import BatchedRealEngine, RealEngine, SimEngine
 from repro.serving.faults import (CircuitBreaker, EngineCrash, FaultError,
                                   RetryPolicy, TransientBackendError,
                                   as_injector)
+from repro.serving.observability import Observability, record_service_spans
 from repro.serving.openai_api import CompletionRequest, CompletionResponse
 from repro.serving.service_time import ServiceTimeModel, sample_output_tokens
 from repro.data.tokenizer import HashTokenizer, approx_token_len
@@ -97,7 +98,8 @@ class ClairvoyantServer:
                  deadline_s: Optional[float] = None,
                  deadline_mode: str = "queue",
                  max_queue_depth: Optional[int] = None,
-                 breaker: Optional[CircuitBreaker] = None):
+                 breaker: Optional[CircuitBreaker] = None,
+                 observability: Optional[Observability] = None):
         # policy: registry name or Policy instance (core/policy.py)
         self.policy_obj = get_policy(policy)
         self.policy = self.policy_obj.name
@@ -143,22 +145,72 @@ class ClairvoyantServer:
             for eng in self.engines:
                 if isinstance(eng, RealEngine):
                     eng.fault_injector = self.faults
+        # --- observability (serving/observability.py) ---
+        # self.obs is read per call site (``obs = self.obs``) so a sidecar
+        # may attach one after construction; every hook is gated on the
+        # component being present (zero cost when disabled).
+        self.obs: Optional[Observability] = None
+        self._obs_arrival: Dict[int, float] = {}   # req_id -> arrival time
+        if observability is not None:
+            self.attach_observability(observability)
+
+    def attach_observability(self, obs: Observability) -> None:
+        """Wire the flight recorder + metrics registry into the stack:
+        the router's route-decision instants, the batched engines' lane
+        spans, and the scrape-time collectors over stats the server and
+        engines already keep."""
+        self.obs = obs
+        self.router.recorder = obs.recorder
+        for eng in self.engines:
+            if hasattr(eng, "recorder"):
+                eng.recorder = obs.recorder
+        obs.register_server(self)
+        obs.register_engines(self.engines)
 
     # ------------------------------------------------------------------ API
-    def _predict_probas(self, prompts: List[str], now: float):
+    def _predict_probas(self, prompts: List[str], now: float,
+                        rid_hint: Optional[int] = None):
         """Predictor call with graceful degradation: an exception, a
         non-finite score, or an injected outage window returns None (the
         caller admits with ``p_long = 0`` for all — FCFS order) and flips
         ``self.degraded``; a later successful call heals the server back
-        to predictive SJF.  Never raises to the submitting client."""
+        to predictive SJF.  Never raises to the submitting client.
+
+        When a flight recorder is attached, the two admission stages are
+        timed separately (feature_extract / predict spans, placed at the
+        batch's arrival instant with measured wall durations) and the
+        per-request predictor latency feeds its histogram — the paper's
+        0.029 ms claim, observable on live traffic."""
         if self.predictor is None or not self.policy_obj.uses_predictor \
                 or not prompts:
             return None
+        obs = self.obs
+        rec = obs.recorder if obs is not None else None
         probas = None
         if self.faults is None or not self.faults.predictor_down(now):
             try:
-                probas = np.asarray(
-                    self.predictor.proba_batch(prompts), float)
+                if obs is not None and isinstance(self.predictor, Predictor):
+                    import time as _time
+                    from repro.core import features as _F
+                    rid = rid_hint if rid_hint is not None else self._next_id
+                    w0 = _time.perf_counter()
+                    X = _F.extract_batch(prompts)
+                    w1 = _time.perf_counter()
+                    probas = np.asarray(
+                        self.predictor.model.predict_proba(X), float)
+                    w2 = _time.perf_counter()
+                    if rec is not None:
+                        trk = f"req{rid}"
+                        rec.span("feature_extract", rid, now,
+                                 now + (w1 - w0), track=trk,
+                                 args={"batch": len(prompts)})
+                        rec.span("predict", rid, now + (w1 - w0),
+                                 now + (w2 - w0), track=trk,
+                                 args={"batch": len(prompts)})
+                    obs.observe_predict(len(prompts), w2 - w0)
+                else:
+                    probas = np.asarray(
+                        self.predictor.proba_batch(prompts), float)
                 if not np.all(np.isfinite(probas)):
                     probas = None                # NaN/inf scores: degrade
             except Exception:
@@ -186,7 +238,8 @@ class ClairvoyantServer:
         sjf_oracle).  ``deadline_s`` overrides the server-wide budget for
         this request.  Returns the chosen replica, or -1 if the request
         was shed at admission (queue overflow)."""
-        probas = self._predict_probas([req.prompt], arrival)
+        probas = self._predict_probas([req.prompt], arrival,
+                                      rid_hint=req.request_id)
         return self._admit(req, None if probas is None else probas[0],
                            arrival, true_output_tokens, klass,
                            deadline_s=deadline_s)
@@ -206,7 +259,8 @@ class ClairvoyantServer:
         n = len(reqs)
         probas = self._predict_probas(
             [r.prompt for r in reqs],
-            0.0 if arrivals is None or not n else float(arrivals[0]))
+            0.0 if arrivals is None or not n else float(arrivals[0]),
+            rid_hint=reqs[0].request_id if n else None)
         return [
             self._admit(
                 req,
@@ -231,6 +285,11 @@ class ClairvoyantServer:
                 or req.request_id in self._inflight:
             raise ValueError(f"request id {req.request_id} already "
                              "submitted to this server")
+        obs = self.obs
+        if obs is not None:
+            # arrival anchors the root "request" span emitted at _finish
+            self._obs_arrival[req.request_id] = arrival
+            obs.observe_admission(1, self.policy)
         if true_output_tokens is None:
             true_output_tokens = sample_output_tokens(
                 self.rng, klass or "short")
@@ -281,6 +340,10 @@ class ClairvoyantServer:
         self._terminal[resp.request_id] = resp.status
         self._inflight.pop(resp.request_id, None)
         self.responses.append(resp)
+        obs = self.obs
+        if obs is not None:
+            obs.observe_terminal(
+                resp, self._obs_arrival.pop(resp.request_id, None))
 
     def _deadline_of(self, req) -> Optional[float]:
         """Effective deadline budget for one request: the per-request
@@ -298,6 +361,10 @@ class ClairvoyantServer:
         self.router.release(rep.replica_id, req)
         self.fault_stats["sheds"] += 1
         req.finish = now
+        obs = self.obs
+        if obs is not None and obs.recorder is not None:
+            obs.recorder.span("queue_wait", req.req_id, req.arrival, now,
+                              track=f"req{req.req_id}")
         self._finish(CompletionResponse(
             request_id=req.req_id, text="", tokens_generated=0,
             queue_wait_s=max(0.0, now - req.arrival), service_s=0.0,
@@ -411,6 +478,9 @@ class ClairvoyantServer:
             return
         inj = self.faults
         rid = rep.replica_id
+        obs = self.obs
+        rec = obs.recorder if obs is not None else None
+        trk = f"replica{rid}"
         t = eng.busy_until
         while True:
             req = rep.queue.pop(now=t)
@@ -453,6 +523,13 @@ class ClairvoyantServer:
                     self.router.release(rid, req)
                     self.fault_stats["timeouts"] += 1
                     req.finish = expiry
+                    if rec is not None:
+                        record_service_spans(
+                            rec, req.req_id, arrival=req.arrival,
+                            start=t, finish=expiry,
+                            ttft=min(ttft, expiry - t),
+                            out_tokens=req.meta["output_tokens"],
+                            track=trk)
                     self._finish(CompletionResponse(
                         request_id=req.req_id, text="", tokens_generated=0,
                         queue_wait_s=req.start - req.arrival,
@@ -472,6 +549,11 @@ class ClairvoyantServer:
             self.router.on_dispatch(rid, req, t, service_estimate=service)
             self.router.record_success(rid, t)
             retries = req.meta.get("fault_retries", 0)
+            if rec is not None:
+                record_service_spans(
+                    rec, req.req_id, arrival=req.arrival,
+                    start=t - service, finish=t, ttft=ttft,
+                    out_tokens=req.meta["output_tokens"], track=trk)
             self._finish(CompletionResponse(
                 request_id=req.req_id, text="",
                 tokens_generated=req.meta["output_tokens"],
@@ -533,6 +615,8 @@ class ClairvoyantServer:
                              tau=rep.queue.tau)
         rep.queue.stats["promotions"] += res.promotions
         rep.queue.stats["preemptions"] += res.preemptions
+        obs = self.obs
+        rec = obs.recorder if obs is not None else None
         order = np.argsort(res.finish, kind="stable")
         for i in order:
             req = reqs[i]
@@ -542,6 +626,15 @@ class ClairvoyantServer:
             service = req.true_service
             ttft = (eng.model.overhead_s + req.meta["prompt_tokens"]
                     / eng.model.prefill_tok_per_s)
+            if rec is not None:
+                # preempted services interleave, so [start, finish]
+                # windows of different requests can partially overlap:
+                # each request gets its own sub-track of the replica
+                record_service_spans(
+                    rec, req.req_id, arrival=req.arrival, start=req.start,
+                    finish=req.finish, ttft=ttft,
+                    out_tokens=req.meta["output_tokens"],
+                    track=f"replica{rep.replica_id}/req{req.req_id}")
             eng.busy_until = max(eng.busy_until, req.finish)
             eng.served += 1
             self.router.on_dispatch(rep.replica_id, req, req.finish,
@@ -575,6 +668,9 @@ class ClairvoyantServer:
         if self._tokenizer is None:
             self._tokenizer = HashTokenizer(eng.cfg.vocab_size)
         pol = self.policy_obj
+        obs = self.obs
+        rec = obs.recorder if obs is not None else None
+        trk = f"replica{rep.replica_id}"
         t = eng.busy_until
         while True:
             if pol.preemptive:
@@ -651,9 +747,16 @@ class ClairvoyantServer:
                     continue
             self._decoding[rep.replica_id] = req.req_id
             wall_gen0 = _time.monotonic()
+            seg_marks: List[float] = []
+            on_seg = None
+            if rec is not None:
+                # real fused-decode segment boundaries, stamped in wall
+                # time and mapped onto the drain clock below
+                def on_seg(new_toks, _m=seg_marks):
+                    _m.append(_time.monotonic())
             try:
                 out = eng.generate(ids, max_new_tokens=n_new,
-                                   cancel_cb=cancel_cb)
+                                   cancel_cb=cancel_cb, on_segment=on_seg)
             except Exception as e:
                 # engine crash mid-generation (injected at a segment
                 # boundary, or organic): the popped request must not be
@@ -674,10 +777,32 @@ class ClairvoyantServer:
             req.meta.setdefault("ttft_s", out["ttft_s"])
             t += service
             eng.busy_until = t
+            emit_spans = None
+            if rec is not None:
+                _t0, _t1, _ttft = t - service, t, out["ttft_s"]
+
+                def emit_spans(_a=req.arrival, _rid=req.req_id, _t0=_t0,
+                               _t1=_t1, _ttft=_ttft, _w0=wall_gen0,
+                               _marks=seg_marks):
+                    # queue_wait/prefill/decode from the attempt window;
+                    # decode_segment edges from the measured boundaries
+                    record_service_spans(rec, _rid, arrival=_a, start=_t0,
+                                         finish=_t1, ttft=_ttft,
+                                         max_segments=0, track=trk)
+                    edges = [min(_t0 + _ttft, _t1)]
+                    for m in _marks:
+                        edges.append(min(max(_t0 + (m - _w0), edges[-1]),
+                                         _t1))
+                    edges.append(_t1)
+                    for i in range(len(edges) - 1):
+                        rec.span("decode_segment", _rid, edges[i],
+                                 edges[i + 1], track=trk)
             if out.get("cancelled"):
                 if req.req_id in self._disconnected:
                     self._disconnected.discard(req.req_id)
                     req.finish = t
+                    if emit_spans is not None:
+                        emit_spans()
                     self._finish(CompletionResponse(
                         request_id=req.req_id, text="",
                         tokens_generated=len(tokens),
@@ -694,6 +819,8 @@ class ClairvoyantServer:
                     self.fault_stats["timeouts"] += 1
                     self.router.release(rep.replica_id, req)
                     req.finish = t
+                    if emit_spans is not None:
+                        emit_spans()
                     self._finish(CompletionResponse(
                         request_id=req.req_id, text="",
                         tokens_generated=len(tokens),
@@ -719,6 +846,8 @@ class ClairvoyantServer:
             self.router.on_dispatch(rep.replica_id, req, t,
                                     service_estimate=total_service)
             self.router.record_success(rep.replica_id, t)
+            if emit_spans is not None:
+                emit_spans()
             self._finish(CompletionResponse(
                 request_id=req.req_id, text="",
                 tokens_generated=len(tokens),
@@ -750,6 +879,9 @@ class ClairvoyantServer:
         import time as _time
         if self._tokenizer is None:
             self._tokenizer = HashTokenizer(eng.cfg.vocab_size)
+        obs = self.obs
+        rec = obs.recorder if obs is not None else None
+        eng.recorder = rec                     # lane spans (engine.py)
         t_base = eng.busy_until
         wall0 = _time.monotonic()
 
@@ -765,6 +897,9 @@ class ClairvoyantServer:
                 for req in got:
                     if self._maybe_shed(rep, req, now()):
                         continue              # shed: pull a replacement
+                    if rec is not None:
+                        rec.span("queue_wait", req.req_id, req.arrival,
+                                 now(), track=f"req{req.req_id}")
                     ids, n_total, resume = self._prepare_ids(
                         req, eng, max_new_tokens)
                     items.append({"req_id": req.req_id, "ids": ids,
